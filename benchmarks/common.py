@@ -1,0 +1,109 @@
+"""Shared benchmark helpers: tiny real training runs + timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.data import make_train_stream
+from repro.models import build_model
+from repro.optim import adamw, apply_updates
+
+
+def timed(fn, *args, iters: int = 10, warmup: int = 2):
+    """Returns (mean_us_per_call, result)."""
+    r = None
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / iters * 1e6, r
+
+
+def tiny_model(name="qwen2.5-0.5b", **kw):
+    cfg = reduced_config(get_config(name), **kw)
+    return cfg, build_model(cfg)
+
+
+def collect_grads(name="qwen2.5-0.5b", steps=20, batch=8, seq=32, lr=2e-3,
+                  seed=0):
+    """Run real AdamW fine-tuning on the synthetic stream; yield the grads
+    of a representative 2-D weight each step (for Fig 4/5/6/9 analyses)."""
+    cfg, model = tiny_model(name)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = adamw(lr=lr)
+    state = opt.init(params)
+    loader = make_train_stream(cfg.vocab, seq, batch, seed=seed)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        upd, state = opt.update(grads, state, params)
+        return apply_updates(params, upd), state, loss, grads
+
+    out = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        params, state, loss, grads = step(params, state, b)
+        g = np.asarray(grads["layers"]["w_in"][0], np.float32)  # (D, 2F)
+        out.append((float(loss), g))
+    return cfg, out
+
+
+def run_zenflow_losses(name="llama2-7b", steps=30, batch=8, seq=32,
+                       topk=0.1, S=4, warmup=0, auto_tune=False,
+                       pipeline="async", lr=2e-3, seed=0):
+    from repro.core.zen_optimizer import ZenFlowConfig, zenflow_init, \
+        zenflow_step
+    cfg, model = tiny_model(name)
+    params = model.init(jax.random.PRNGKey(seed))
+    zcfg = ZenFlowConfig(topk_ratio=topk, update_interval=S,
+                         refresh_interval=max(S * 4, S), warmup_steps=warmup,
+                         auto_tune=auto_tune, lr=lr, pipeline=pipeline,
+                         use_kernels="never")
+    zs = zenflow_init(params, zcfg)
+    loader = make_train_stream(cfg.vocab, seq, batch, seed=seed)
+
+    @jax.jit
+    def jstep(params, zs, batch):
+        (loss, _), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        params, zs, met = zenflow_step(params, grads, zs, zcfg)
+        return params, zs, loss, met
+
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        params, zs, loss, met = jstep(params, zs, b)
+        losses.append(float(loss))
+    return losses, zs
+
+
+def run_adamw_losses(name="llama2-7b", steps=30, batch=8, seq=32, lr=2e-3,
+                     seed=0):
+    cfg, model = tiny_model(name)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = adamw(lr=lr)
+    state = opt.init(params)
+    loader = make_train_stream(cfg.vocab, seq, batch, seed=seed)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        upd, state = opt.update(grads, state, params)
+        return apply_updates(params, upd), state, loss
+
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        params, state, loss = step(params, state, b)
+        losses.append(float(loss))
+    return losses

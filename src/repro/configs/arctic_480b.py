@@ -1,0 +1,20 @@
+"""arctic-480b [moe]: 128 experts top-2 + dense residual MLP.
+[hf:Snowflake/snowflake-arctic-base; hf]"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+register(ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,                   # dense-residual MLP width
+    vocab=32000,
+    act="swiglu",
+    norm="rmsnorm",
+    moe=MoEConfig(n_experts=128, top_k=2, expert_d_ff=4864,
+                  dense_residual_d_ff=4864, capacity_factor=1.25),
+    source="hf:Snowflake/snowflake-arctic-base; hf",
+    skip_shapes={"long_500k": "pure full-attention MoE transformer"},
+))

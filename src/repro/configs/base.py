@@ -1,0 +1,171 @@
+"""Config schema for architectures and input shapes.
+
+Every assigned architecture registers an `ArchConfig` via @register.
+`reduced_config` derives the CPU-smoke-test variant of any arch (same
+family/topology, tiny widths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+_REGISTRY: dict[str, "ArchConfig"] = {}
+
+_ARCH_MODULES = [
+    "whisper_small", "gemma_7b", "phi4_mini_3p8b", "gemma_2b", "qwen3_4b",
+    "rwkv6_7b", "zamba2_2p7b", "arctic_480b", "kimi_k2_1t", "phi3_vision_4p2b",
+    # paper's own evaluation models
+    "llama2_7b", "qwen25_0p5b", "opt_350m",
+]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    expert_d_ff: int
+    capacity_factor: float = 1.25
+    dense_residual_d_ff: int = 0      # arctic: dense MLP in parallel with MoE
+    n_shared_experts: int = 0         # kimi: shared expert(s) always active
+    first_dense_layers: int = 0       # kimi: leading dense layers
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "rwkv6"               # "rwkv6" | "mamba2"
+    d_state: int = 64                 # mamba2 SSM state / rwkv head size
+    d_inner_mult: float = 2.0         # expansion for mamba2 inner dim
+    n_ssm_heads: int = 0              # 0 -> derived
+    conv_kernel: int = 4              # mamba2 depthwise conv width
+    chunk_size: int = 128             # chunked-scan block length
+    # hybrid (zamba2): a shared attention block every `shared_every` layers
+    shared_attn_every: int = 0
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    n_enc_layers: int
+    enc_seq_len: int                  # stub frontend frames (whisper: 1500)
+    enc_bidirectional: bool = True
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    n_patches: int = 576              # stub CLIP patch embeddings per image
+    patch_dim: int = 1024             # frontend embedding dim (projected)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    act: str = "swiglu"               # swiglu | geglu | gelu
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    attn_bias: bool = False
+    mlp_bias: bool = False
+    pos_embedding: str = "rope"       # rope | learned | none(ssm)
+    max_pos: int = 8192               # learned-pos table size
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    source: str = ""                  # provenance tag from assignment table
+    # shapes this arch skips, with reasons (recorded in EXPERIMENTS.md)
+    skip_shapes: dict = field(default_factory=dict)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Approximate total parameter count (used for 6ND roofline)."""
+        from repro.telemetry.costmodel import arch_param_count
+        return arch_param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.telemetry.costmodel import arch_param_count
+        return arch_param_count(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k":   ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all() -> None:
+    for mod in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def reduced_config(cfg: ArchConfig, *, n_layers: int = 2, d_model: int = 64,
+                   n_heads: int = 2, d_ff: int = 128, vocab: int = 256) -> ArchConfig:
+    """Tiny same-family variant for CPU smoke tests."""
+    kv = max(1, min(cfg.n_kv_heads, n_heads) * n_heads // max(cfg.n_heads, 1)) \
+        if cfg.n_kv_heads < cfg.n_heads else n_heads
+    kv = max(1, kv)
+    changes = dict(
+        name=cfg.name + "-smoke", n_layers=n_layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=kv, d_ff=d_ff, vocab=vocab,
+        head_dim=d_model // n_heads,
+    )
+    if cfg.moe is not None:
+        changes["moe"] = replace(
+            cfg.moe, n_experts=min(cfg.moe.n_experts, 8),
+            top_k=min(cfg.moe.top_k, 2), expert_d_ff=d_ff,
+            dense_residual_d_ff=d_ff if cfg.moe.dense_residual_d_ff else 0,
+            first_dense_layers=min(cfg.moe.first_dense_layers, 1),
+            n_shared_experts=min(cfg.moe.n_shared_experts, 1))
+    if cfg.ssm is not None:
+        changes["ssm"] = replace(
+            cfg.ssm, d_state=16, chunk_size=16,
+            shared_attn_every=2 if cfg.ssm.shared_attn_every else 0)
+        if cfg.ssm.shared_attn_every:
+            changes["n_layers"] = 4
+    if cfg.encdec is not None:
+        changes["encdec"] = replace(cfg.encdec, n_enc_layers=2, enc_seq_len=16)
+    if cfg.vlm is not None:
+        changes["vlm"] = replace(cfg.vlm, n_patches=8, patch_dim=32)
+    return replace(cfg, **changes)

@@ -1,0 +1,19 @@
+"""gemma-2b [dense]: GeGLU, head_dim=256, MQA (kv=1). [arXiv:2403.08295; hf]"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="gemma-2b",
+    family="dense",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,                # MQA
+    d_ff=16384,
+    vocab=256000,
+    head_dim=256,
+    act="geglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    source="arXiv:2403.08295; hf",
+    skip_shapes={"long_500k": "pure full-attention dense transformer"},
+))

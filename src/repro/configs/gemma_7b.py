@@ -1,0 +1,20 @@
+"""gemma-7b [dense]: GeGLU, head_dim=256. [arXiv:2403.08295; hf]"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="gemma-7b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=24576,
+    vocab=256000,
+    head_dim=256,
+    act="geglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    rope_theta=10000.0,
+    source="arXiv:2403.08295; hf",
+    skip_shapes={"long_500k": "pure full-attention dense transformer"},
+))

@@ -1,0 +1,21 @@
+"""kimi-k2-1t-a32b [moe]: trillion-param MoE, 384 experts top-8
+(paper-table). [arXiv:2501.kimi2; unverified]"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+register(ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,                   # expert width per assignment table
+    vocab=163840,
+    act="swiglu",
+    norm="rmsnorm",
+    moe=MoEConfig(n_experts=384, top_k=8, expert_d_ff=2048,
+                  n_shared_experts=1, first_dense_layers=1,
+                  capacity_factor=1.25),
+    source="arXiv:2501.kimi2; unverified",
+    skip_shapes={"long_500k": "pure full-attention MoE transformer"},
+))

@@ -1,0 +1,18 @@
+"""llama2-7b — the paper's primary evaluation model (Table 1, Figs 1-3, 11, 13).
+[arXiv:2307.09288; hf]"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="llama2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab=32000,
+    act="swiglu",
+    norm="rmsnorm",
+    source="arXiv:2307.09288; hf (paper eval model)",
+    skip_shapes={"long_500k": "pure full-attention dense transformer"},
+))

@@ -1,0 +1,22 @@
+"""opt-350m — the paper's convergence-validation model (Fig 14).
+[arXiv:2205.01068; hf]"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="opt-350m",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=50272,
+    act="gelu",
+    norm="layernorm",
+    pos_embedding="learned",
+    attn_bias=True,
+    mlp_bias=True,
+    tie_embeddings=True,
+    source="arXiv:2205.01068; hf (paper convergence model)",
+    skip_shapes={"long_500k": "pure full-attention dense transformer"},
+))

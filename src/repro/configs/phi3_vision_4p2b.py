@@ -1,0 +1,21 @@
+"""phi-3-vision-4.2b [vlm]: phi3-mini backbone + CLIP frontend (stub:
+input_specs provides precomputed patch embeddings).
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]"""
+from repro.configs.base import ArchConfig, VLMConfig, register
+
+register(ArchConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32064,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=10000.0,
+    vlm=VLMConfig(n_patches=576, patch_dim=1024),
+    source="hf:microsoft/Phi-3-vision-128k-instruct; hf",
+    skip_shapes={"long_500k": "pure full-attention dense backbone"},
+))

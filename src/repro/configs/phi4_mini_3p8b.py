@@ -1,0 +1,19 @@
+"""phi4-mini-3.8b [dense]: RoPE SwiGLU GQA. [arXiv:2412.08905; hf]"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=200064,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=10000.0,
+    tie_embeddings=True,
+    source="arXiv:2412.08905; hf",
+    skip_shapes={"long_500k": "pure full-attention dense transformer"},
+))

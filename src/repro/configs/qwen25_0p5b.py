@@ -1,0 +1,19 @@
+"""qwen2.5-0.5b — the paper's gradient-locality analysis model (Figs 4-6, 9).
+[hf:Qwen/Qwen2.5-0.5B; hf]"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="qwen2.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab=151936,
+    act="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen2.5-0.5B; hf (paper analysis model)",
+    skip_shapes={"long_500k": "pure full-attention dense transformer"},
+))

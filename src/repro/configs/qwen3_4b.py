@@ -1,0 +1,21 @@
+"""qwen3-4b [dense]: qk_norm, GQA. [hf:Qwen/Qwen3-8B; hf]"""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="qwen3-4b",
+    family="dense",
+    n_layers=36,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=9728,
+    vocab=151936,
+    head_dim=128,
+    act="swiglu",
+    norm="rmsnorm",
+    qk_norm=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen3-8B; hf",
+    skip_shapes={"long_500k": "pure full-attention dense transformer"},
+))

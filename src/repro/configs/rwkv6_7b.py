@@ -1,0 +1,20 @@
+"""rwkv6-7b [ssm]: Finch — attention-free, data-dependent decay linear
+attention. [arXiv:2404.05892; hf]"""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+register(ArchConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,                  # wkv heads = d_model / head_size(64)
+    n_kv_heads=64,
+    d_ff=14336,
+    vocab=65536,
+    head_dim=64,
+    act="relu_sq",               # rwkv channel-mix uses relu^2
+    norm="layernorm",
+    pos_embedding="none",
+    ssm=SSMConfig(kind="rwkv6", d_state=64, chunk_size=128),
+    source="arXiv:2404.05892; hf",
+))

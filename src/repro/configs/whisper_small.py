@@ -1,0 +1,24 @@
+"""whisper-small [audio]: enc-dec, conv frontend stubbed as precomputed
+frame embeddings. [arXiv:2212.04356; unverified]"""
+from repro.configs.base import ArchConfig, EncDecConfig, register
+
+register(ArchConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,                 # decoder layers
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,               # GQA kv=12 (full MHA)
+    d_ff=3072,
+    vocab=51865,
+    act="gelu",
+    norm="layernorm",
+    pos_embedding="learned",
+    max_pos=32768,
+    attn_bias=True,
+    mlp_bias=True,
+    tie_embeddings=True,
+    encdec=EncDecConfig(n_enc_layers=12, enc_seq_len=1500),
+    source="arXiv:2212.04356; unverified",
+    skip_shapes={"long_500k": "pure full-attention enc-dec; no sub-quadratic path"},
+))

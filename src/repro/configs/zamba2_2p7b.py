@@ -1,0 +1,19 @@
+"""zamba2-2.7b [hybrid]: Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242; hf]"""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+register(ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,                 # mamba2 layers; shared attn every 6
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab=32000,
+    act="geglu",
+    norm="rmsnorm",
+    ssm=SSMConfig(kind="mamba2", d_state=64, d_inner_mult=2.0,
+                  chunk_size=128, shared_attn_every=6),
+    source="arXiv:2411.15242; hf",
+))

@@ -1,0 +1,24 @@
+"""ZenFlow core: importance-aware, decoupled GPU/CPU (device/host) updates.
+
+The paper's primary contribution as a composable JAX module:
+  selection.py      — per-channel gradient-norm proxy + local-quota top-k
+  partition.py      — which params split into important/complement rows
+  zen_optimizer.py  — selective device Adam + host accumulate/apply cycle
+  autotune.py       — Zen-auto adaptive update interval
+  convergence.py    — bounded-staleness penalty model (paper §3.4)
+"""
+from repro.core.zen_optimizer import (
+    ZenFlowConfig, ZenState, zenflow_init, zenflow_step,
+    device_update, host_accumulate, host_apply, apply_host_rows,
+)
+from repro.core.selection import (
+    channel_sq_norms, local_quota_topk, complement_indices, quota_for,
+)
+from repro.core.partition import build_partition, ParamInfo
+
+__all__ = [
+    "ZenFlowConfig", "ZenState", "zenflow_init", "zenflow_step",
+    "device_update", "host_accumulate", "host_apply", "apply_host_rows",
+    "channel_sq_norms", "local_quota_topk", "complement_indices", "quota_for",
+    "build_partition", "ParamInfo",
+]

@@ -1,0 +1,40 @@
+"""Zen-auto (paper §3.2 "Hyperparameter Auto-tuning", Fig 15b).
+
+Monitors the mean accumulated complement-channel gradient energy against
+the EMA of important-channel energy; when the accumulated part becomes
+comparable (ratio >= 1), the CPU-side update is triggered immediately and
+the interval adapts: short early in training (large, fast-moving
+gradients), relaxed later (stable gradients) up to s_max.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def acc_vs_important(host: dict, host_bound: dict,
+                     imp_ema: dict[str, Array]) -> Array:
+    """ratio = mean accumulated complement channel energy / important EMA."""
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    count = jnp.maximum(host["count"].astype(jnp.float32), 1.0)
+    for p, acc in host["acc"].items():
+        # mean per-channel energy of the accumulated gradient
+        e = jnp.sum(jnp.square(acc / count)) / max(acc.shape[-2], 1)
+        num = num + e
+        den = den + imp_ema[p]
+    return num / jnp.maximum(den, 1e-30)
+
+
+def next_interval(s_eff: Array, ratio: Array, boundary: Array,
+                  zcfg) -> Array:
+    """Adapt S at window boundaries: if the trigger fired early
+    (ratio >= 1 before the scheduled boundary) shrink S; if we reached the
+    scheduled boundary with low accumulated energy, relax S (up to s_max)."""
+    shrink = jnp.maximum(s_eff - 1, 1)
+    grow = jnp.minimum(s_eff + 1, zcfg.s_max)
+    proposed = jnp.where(ratio >= 1.0, shrink,
+                         jnp.where(ratio < 0.5, grow, s_eff))
+    return jnp.where(boundary, proposed, s_eff).astype(jnp.int32)

@@ -1,0 +1,71 @@
+"""Parameter partitioning: which tensors get ZenFlow's split treatment.
+
+Split params (matrices with an input-channel axis) are divided into
+device-updated important rows and host-accumulated complement rows.
+Everything else (norms, biases, small vectors — <0.1% of bytes) stays in
+the always-on-device "important" partition, updated densely every step,
+exactly as the paper handles non-matrix states.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core.selection import quota_for
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamInfo:
+    path: str
+    shape: tuple
+    dtype: Any
+    split: bool              # ZenFlow treatment?
+    m: int = 0               # channel count (rows)
+    n: int = 0               # out dim (cols)
+    batch_dims: tuple = ()   # leading stacked dims (layers, experts, ...)
+    quota: int = 0           # selected channels C_k (per full tensor here;
+                             # sharded runs divide by the row-shard count)
+
+
+def path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def build_partition(params_spec, topk_ratio: float, min_dim: int = 32,
+                    row_shards: int = 1) -> dict[str, ParamInfo]:
+    """params_spec: pytree of arrays or ShapeDtypeStructs."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_spec)
+    out: dict[str, ParamInfo] = {}
+    for path, leaf in flat:
+        p = path_str(path)
+        shape = tuple(leaf.shape)
+        split = len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+        if split:
+            m, n = shape[-2], shape[-1]
+            q = quota_for(m, topk_ratio, row_shards) * row_shards
+            out[p] = ParamInfo(p, shape, leaf.dtype, True, m=m, n=n,
+                               batch_dims=shape[:-2], quota=min(q, m))
+        else:
+            out[p] = ParamInfo(p, shape, leaf.dtype, False)
+    return out
+
+
+def split_paths(partition: dict[str, ParamInfo]) -> list[str]:
+    return sorted(p for p, i in partition.items() if i.split)
+
+
+def dense_paths(partition: dict[str, ParamInfo]) -> list[str]:
+    return sorted(p for p, i in partition.items() if not i.split)
+
+
+def tree_to_pathdict(tree) -> dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {path_str(p): v for p, v in flat}
+
+
+def pathdict_to_tree(d: dict[str, Any], like) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    vals = [d[path_str(p)] for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, vals)

@@ -1,0 +1,440 @@
+"""ZenFlow optimizer: selective device Adam + asynchronous host
+accumulate/apply (paper §3.1–3.2).
+
+The algorithm is expressed as three pure functions so the same math runs in
+both execution modes:
+
+  device_update()     — every step, on the accelerator: selection refresh,
+                        in-place Adam on important rows, dense Adam on
+                        non-matrix params, compact complement-gradient
+                        extraction (the host-bound bytes).
+  host_accumulate()   — every step, on the host: acc += g_comp.
+  host_apply()        — every S steps (or Zen-auto trigger): AdamW on
+                        complement rows from the accumulated mean gradient;
+                        returns updated bf16 rows for the device.
+
+`zenflow_step()` composes them into a single functional step — the
+executable specification used by convergence tests; `runtime/zen_runtime.py`
+runs the same functions as two separately-jitted programs with true
+double-buffered overlap (DESIGN.md §2).
+
+Staleness semantics: pipeline="sync" applies the window's update at its own
+boundary; pipeline="async" delays it one window (double-buffering of Fig 7),
+matching the real pipeline bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection as sel
+from repro.core.partition import (ParamInfo, build_partition, path_str,
+                                  tree_to_pathdict, pathdict_to_tree)
+from repro.optim.adam import adam_row_update, _make_adam
+
+Array = jax.Array
+PathDict = dict[str, Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ZenFlowConfig:
+    topk_ratio: float = 0.1
+    update_interval: int = 4          # S
+    refresh_interval: int = 16        # R (must be a multiple of S)
+    warmup_steps: int = 0             # tau: synchronous warmup (S=1)
+    auto_tune: bool = False           # Zen-auto adaptive S
+    s_max: int = 16
+    lr: Union[float, Callable] = 1e-5
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    min_dim: int = 32                 # smaller params stay dense-on-device
+    pipeline: str = "async"           # "async" | "sync"
+    use_kernels: str = "auto"         # "auto" | "never" (Pallas selective-Adam)
+    # BEYOND-PAPER (§Perf): per-channel int8 quantization of the
+    # complement gradients on the host link (paper §6 notes compression is
+    # orthogonal; we integrate it) — halves PCIe-down traffic vs bf16.
+    compress_host_grads: str = "none"  # "none" | "int8"
+
+    def __post_init__(self):
+        if self.refresh_interval % self.update_interval:
+            raise ValueError("refresh_interval must be a multiple of "
+                             "update_interval (refresh happens at window "
+                             "boundaries, after apply)")
+
+    def lr_at(self, step: Array) -> Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+ZenState = dict  # {"step", "sel_idx", "m_sel", "v_sel", "dense", "host", ...}
+
+
+# ---------------------------------------------------------------------------
+# Init
+
+
+def zenflow_init(params, zcfg: ZenFlowConfig, row_shards: int = 1) -> ZenState:
+    """Build ZenFlow state for a params pytree (or ShapeDtypeStructs).
+
+    row_shards: number of shards of each channel axis in the distributed
+    run (local-quota selection); 1 for single-device semantics.
+    """
+    pd = tree_to_pathdict(params)
+    part = build_partition(params, zcfg.topk_ratio, zcfg.min_dim, row_shards)
+    sel_idx, m_sel, v_sel = {}, {}, {}
+    acc, m_host, v_host, master = {}, {}, {}, {}
+    pending_rows, pending_idx = {}, {}
+    like = lambda x, shape, dt: jnp.zeros(shape, dt)
+    for p, info in part.items():
+        if not info.split:
+            continue
+        leaf = pd[p]
+        B, m, n = info.batch_dims, info.m, info.n
+        C = info.quota
+        sel_idx[p] = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), B + (C,))
+        m_sel[p] = jnp.zeros(B + (C, n), jnp.float32)
+        v_sel[p] = jnp.zeros(B + (C, n), jnp.float32)
+        acc[p] = jnp.zeros(B + (m, n), jnp.float32)
+        m_host[p] = jnp.zeros(B + (m, n), jnp.float32)
+        v_host[p] = jnp.zeros(B + (m, n), jnp.float32)
+        master[p] = (jnp.zeros(B + (m, n), jnp.float32)
+                     if isinstance(leaf, jax.ShapeDtypeStruct)
+                     else leaf.astype(jnp.float32))
+        pending_rows[p] = jnp.zeros(B + (m - C, n), jnp.bfloat16)
+        pending_idx[p] = jnp.broadcast_to(
+            jnp.arange(m - C, dtype=jnp.int32), B + (m - C,))
+
+    dense_tree = {p: pd[p] for p, i in part.items() if not i.split}
+    dense_opt = _make_adam(zcfg.lr, zcfg.b1, zcfg.b2, zcfg.eps,
+                           zcfg.weight_decay)
+    dense_state = dense_opt.init(
+        {p: (jnp.zeros(v.shape, v.dtype) if isinstance(v, jax.ShapeDtypeStruct)
+             else v) for p, v in dense_tree.items()})
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "sel_idx": sel_idx, "m_sel": m_sel, "v_sel": v_sel,
+        "dense": dense_state,
+        "imp_ema": {p: jnp.zeros((), jnp.float32) for p in sel_idx},
+        "host": {
+            "acc": acc, "count": jnp.zeros((), jnp.int32),
+            "m_host": m_host, "v_host": v_host, "master": master,
+            "t_host": jnp.zeros((), jnp.int32),
+            "pending_rows": pending_rows, "pending_idx": pending_idx,
+            "pending_valid": jnp.zeros((), jnp.bool_),
+            "s_eff": jnp.full((), zcfg.update_interval, jnp.int32),
+        },
+    }
+
+
+def zenflow_partition(params, zcfg: ZenFlowConfig, row_shards: int = 1):
+    return build_partition(params, zcfg.topk_ratio, zcfg.min_dim, row_shards)
+
+
+# ---------------------------------------------------------------------------
+# Device side
+
+
+def _quantize_rows_int8(rows):
+    """Per-channel symmetric int8: (..., m, n) -> dict{q int8, scale f32}.
+    The host link then carries 1 byte/element + 4 bytes/channel."""
+    r32 = rows.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(r32), axis=-1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(r32 / jnp.maximum(scale, 1e-12)), -127, 127)
+    return {"q": q.astype(jnp.int8), "scale": scale}
+
+
+def _dequantize_rows(g):
+    if isinstance(g, dict):
+        return g["q"].astype(jnp.float32) * g["scale"]
+    return g.astype(jnp.float32)
+
+
+def _moment_handoff(old_idx, new_idx, m_sel, v_sel):
+    """Carry Adam moments for channels that stay selected; zero for
+    newly-promoted ones (host keeps full-shape moments for continuity)."""
+    eq = new_idx[..., :, None] == old_idx[..., None, :]   # (..., C, C)
+    found = jnp.any(eq, axis=-1)
+    pos = jnp.argmax(eq, axis=-1)                          # (..., C)
+    def pick(t):
+        g = jnp.take_along_axis(t, pos[..., None], axis=-2)
+        return jnp.where(found[..., None], g, 0.0)
+    return pick(m_sel), pick(v_sel)
+
+
+def _selective_adam(p, g, idx, m_sel, v_sel, t, lr, zcfg: ZenFlowConfig):
+    """Gather important rows -> Adam -> scatter back. Kernel-accelerated on
+    TPU (kernels/selective_adam.py); jnp fallback elsewhere."""
+    if zcfg.use_kernels == "auto":
+        from repro.kernels import ops as kops
+        if kops.pallas_available():
+            return kops.selective_adam(p, g, idx, m_sel, v_sel, t, lr,
+                                       zcfg.b1, zcfg.b2, zcfg.eps,
+                                       zcfg.weight_decay)
+    p_rows = sel.gather_rows(p, idx)
+    g_rows = sel.gather_rows(g, idx)
+    new_rows, m_new, v_new = adam_row_update(
+        p_rows, g_rows, m_sel, v_sel, t, lr,
+        zcfg.b1, zcfg.b2, zcfg.eps, zcfg.weight_decay)
+    return sel.scatter_rows(p, idx, new_rows), m_new, v_new
+
+
+def device_update(params: PathDict, grads: PathDict, state: ZenState,
+                  zcfg: ZenFlowConfig, partition: dict[str, ParamInfo],
+                  psum_axes: Optional[dict[str, Any]] = None):
+    """One device-side ZenFlow step over pathdicts.
+
+    Returns (new_params, new_state_device_part, host_bound, metrics).
+    host_bound contains exactly the bytes that cross to the host.
+    """
+    step = state["step"]
+    t = step + 1
+    lr_t = zcfg.lr_at(t)
+    refresh = (step % zcfg.refresh_interval == 0)
+
+    new_params = dict(params)
+    new_sel, new_m, new_v, new_ema = {}, {}, {}, {}
+    g_comp, comp_idx_out, old_rows, old_idx_out = {}, {}, {}, {}
+    rho_num = jnp.zeros((), jnp.float32)
+    rho_den = jnp.zeros((), jnp.float32)
+    imp_means = {}
+
+    for p, info in partition.items():
+        if not info.split:
+            continue
+        g = grads[p]
+        w = params[p]
+        m = info.m
+        ax = (psum_axes or {}).get(p)
+        norms = sel.channel_sq_norms(g, ax)               # (..., m)
+        quota = state["sel_idx"][p].shape[-1]
+        cand = sel.local_quota_topk(norms, quota)
+        old_idx = state["sel_idx"][p]
+        idx = jnp.where(refresh, cand, old_idx)
+        mh, vh = _moment_handoff(old_idx, idx, state["m_sel"][p],
+                                 state["v_sel"][p])
+        m_sel_t = jnp.where(refresh, mh, state["m_sel"][p])
+        v_sel_t = jnp.where(refresh, vh, state["v_sel"][p])
+
+        # snapshot of previously-important rows (host master sync at refresh)
+        old_rows[p] = sel.gather_rows(w, old_idx).astype(jnp.bfloat16)
+        old_idx_out[p] = old_idx
+
+        new_w, m_new, v_new = _selective_adam(
+            w, g, idx, m_sel_t, v_sel_t, t, lr_t, zcfg)
+        new_params[p] = new_w.astype(w.dtype)
+        new_sel[p], new_m[p], new_v[p] = idx, m_new, v_new
+
+        cidx = sel.complement_indices(idx, m)
+        comp_idx_out[p] = cidx
+        rows_out = sel.gather_rows(g, cidx)
+        if zcfg.compress_host_grads == "int8":
+            g_comp[p] = _quantize_rows_int8(rows_out)
+        else:
+            g_comp[p] = rows_out.astype(jnp.bfloat16)
+
+        # metrics: rho (complement energy fraction), important-norm EMA
+        total_e = jnp.sum(norms)
+        sel_e = jnp.sum(jnp.take_along_axis(norms, idx, axis=-1))
+        rho_num = rho_num + (total_e - sel_e)
+        rho_den = rho_den + total_e
+        imp_mean = sel_e / jnp.maximum(idx.size, 1)
+        imp_means[p] = imp_mean
+        new_ema[p] = 0.9 * state["imp_ema"][p] + 0.1 * imp_mean
+
+    # dense (non-matrix) params: plain AdamW on device, every step
+    dense_grads = {p: grads[p] for p, i in partition.items() if not i.split}
+    dense_params = {p: params[p] for p, i in partition.items() if not i.split}
+    dense_opt = _make_adam(zcfg.lr, zcfg.b1, zcfg.b2, zcfg.eps,
+                           zcfg.weight_decay)
+    if dense_grads:
+        updates, dense_state = dense_opt.update(
+            dense_grads, state["dense"], dense_params)
+        for p in dense_grads:
+            dp = dense_params[p]
+            new_params[p] = (dp.astype(jnp.float32)
+                             + updates[p]).astype(dp.dtype)
+    else:
+        dense_state = state["dense"]
+
+    rho = rho_num / jnp.maximum(rho_den, 1e-30)
+    host_bound = {
+        "g_comp": g_comp,
+        "comp_idx": comp_idx_out,
+        "old_rows": old_rows,          # master sync payload (refresh only)
+        "old_idx": old_idx_out,
+        "refresh": refresh,
+        # step-0 refresh replaces the placeholder selection before any
+        # device update: nothing was demoted, so no master sync needed
+        # (syncing would round the f32 master through bf16 needlessly)
+        "sync_master": refresh & (step > 0),
+        "imp_means": imp_means,
+    }
+    dev_state = {
+        "step": t,
+        "sel_idx": new_sel, "m_sel": new_m, "v_sel": new_v,
+        "dense": dense_state,
+        "imp_ema": new_ema,
+    }
+    metrics = {"rho": rho, "refresh": refresh}
+    return new_params, dev_state, host_bound, metrics
+
+
+# ---------------------------------------------------------------------------
+# Host side
+
+
+def host_accumulate(host: dict, host_bound: dict, zcfg: ZenFlowConfig) -> dict:
+    """acc += complement grads; sync master rows at selection refresh."""
+    new = dict(host)
+    acc = dict(host["acc"])
+    master = dict(host["master"])
+    sync = host_bound.get("sync_master", host_bound["refresh"])
+    for p, g in host_bound["g_comp"].items():
+        acc[p] = sel.scatter_add_rows(acc[p], host_bound["comp_idx"][p],
+                                      _dequantize_rows(g))
+        synced = sel.scatter_rows(master[p], host_bound["old_idx"][p],
+                                  host_bound["old_rows"][p].astype(jnp.float32))
+        master[p] = jnp.where(sync, synced, master[p])
+    new["acc"] = acc
+    new["master"] = master
+    new["count"] = host["count"] + 1
+    return new
+
+
+def host_apply(host: dict, comp_idx: PathDict, zcfg: ZenFlowConfig,
+               lr_t: Array):
+    """AdamW on complement rows from the accumulated mean gradient.
+
+    Returns (new_host, rows {path: (..., m-C, n) bf16} to scatter on device).
+    """
+    new = dict(host)
+    acc, m_h, v_h, master = (dict(host[k]) for k in
+                             ("acc", "m_host", "v_host", "master"))
+    t_host = host["t_host"] + 1
+    cnt = jnp.maximum(host["count"], 1).astype(jnp.float32)
+    out_rows = {}
+    for p in acc:
+        cidx = comp_idx[p]
+        g_rows = sel.gather_rows(acc[p], cidx) / cnt
+        p_rows = sel.gather_rows(master[p], cidx)
+        m_rows = sel.gather_rows(m_h[p], cidx)
+        v_rows = sel.gather_rows(v_h[p], cidx)
+        new_rows, m_new, v_new = adam_row_update(
+            p_rows, g_rows, m_rows, v_rows, t_host, lr_t,
+            zcfg.b1, zcfg.b2, zcfg.eps, zcfg.weight_decay)
+        master[p] = sel.scatter_rows(master[p], cidx, new_rows)
+        m_h[p] = sel.scatter_rows(m_h[p], cidx, m_new)
+        v_h[p] = sel.scatter_rows(v_h[p], cidx, v_new)
+        acc[p] = jnp.zeros_like(acc[p])
+        out_rows[p] = new_rows.astype(jnp.bfloat16)
+    new.update({"acc": acc, "m_host": m_h, "v_host": v_h, "master": master,
+                "t_host": t_host, "count": jnp.zeros((), jnp.int32)})
+    return new, out_rows
+
+
+def apply_host_rows(params: PathDict, rows: PathDict,
+                    comp_idx: PathDict) -> PathDict:
+    """Scatter host-updated complement rows into device params."""
+    out = dict(params)
+    for p, r in rows.items():
+        out[p] = sel.scatter_rows(params[p], comp_idx[p], r)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Single-program functional step (executable spec; sync & async-delayed)
+
+
+def _window_boundary(state: ZenState, zcfg: ZenFlowConfig,
+                     acc_vs_imp: Optional[Array] = None) -> Array:
+    """True when the host update should be applied after this step."""
+    t = state["step"] + 1                    # 1-based count of completed steps
+    s_eff = state["host"]["s_eff"]
+    warm = t <= zcfg.warmup_steps
+    boundary = (t % s_eff) == 0
+    if zcfg.auto_tune and acc_vs_imp is not None:
+        boundary = boundary | (acc_vs_imp >= 1.0)
+        boundary = boundary | (state["host"]["count"] + 1 >= zcfg.s_max)
+    return jnp.where(warm, True, boundary)
+
+
+def zenflow_step(params, grads, state: ZenState, zcfg: ZenFlowConfig,
+                 partition=None, psum_axes=None):
+    """Full functional ZenFlow step on pytrees (params and grads share
+    structure). Returns (new_params, new_state, metrics)."""
+    pd = tree_to_pathdict(params)
+    gd = tree_to_pathdict(grads)
+    if partition is None:
+        partition = build_partition(params, zcfg.topk_ratio, zcfg.min_dim)
+
+    new_pd, dev_state, host_bound, metrics = device_update(
+        pd, gd, state, zcfg, partition, psum_axes)
+
+    host = host_accumulate(state["host"], host_bound, zcfg)
+
+    # Zen-auto monitor: accumulated complement channel energy vs important
+    if zcfg.auto_tune:
+        from repro.core.autotune import acc_vs_important
+        ratio = acc_vs_important(host, host_bound, dev_state["imp_ema"])
+    else:
+        ratio = None
+    boundary = _window_boundary(state, zcfg, ratio)
+    t = dev_state["step"]
+    lr_t = zcfg.lr_at(t)
+
+    comp_idx = host_bound["comp_idx"]
+
+    def do_apply(host):
+        h2, rows = host_apply(host, comp_idx, zcfg, lr_t)
+        return h2, rows, comp_idx
+
+    def no_apply(host):
+        rows = {p: jnp.zeros_like(host["pending_rows"][p]) for p in comp_idx}
+        return host, rows, comp_idx
+
+    host2, fresh_rows, fresh_idx = jax.lax.cond(boundary, do_apply, no_apply,
+                                                host)
+
+    if zcfg.pipeline == "sync":
+        apply_rows, apply_idx = fresh_rows, fresh_idx
+        apply_valid = boundary
+        pend_rows = host2["pending_rows"]
+        pend_idx = host2["pending_idx"]
+        pend_valid = host2["pending_valid"]
+    else:  # async: scatter the PREVIOUS window's rows, stash this window's
+        apply_rows = host2["pending_rows"]
+        apply_idx = host2["pending_idx"]
+        apply_valid = host2["pending_valid"] & boundary
+        pend_rows = {p: jnp.where(boundary, fresh_rows[p],
+                                  host2["pending_rows"][p])
+                     for p in fresh_rows}
+        pend_idx = {p: jnp.where(boundary, fresh_idx[p],
+                                 host2["pending_idx"][p])
+                    for p in fresh_idx}
+        pend_valid = host2["pending_valid"] | boundary
+
+    scattered = apply_host_rows(new_pd, apply_rows, apply_idx)
+    final_pd = {p: jnp.where(apply_valid, scattered[p], new_pd[p])
+                for p in new_pd}
+
+    host2 = dict(host2)
+    host2.update({"pending_rows": pend_rows, "pending_idx": pend_idx,
+                  "pending_valid": pend_valid})
+    if zcfg.auto_tune and ratio is not None:
+        from repro.core.autotune import next_interval
+        host2["s_eff"] = next_interval(host2["s_eff"], ratio, boundary, zcfg)
+
+    new_state = dict(dev_state)
+    new_state["host"] = host2
+    metrics = dict(metrics)
+    metrics["boundary"] = boundary
+    new_params = pathdict_to_tree(final_pd, params)
+    return new_params, new_state, metrics

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (
+    SyntheticInstructionStream, ShardedLoader, make_train_stream,
+)
+
+__all__ = ["SyntheticInstructionStream", "ShardedLoader", "make_train_stream"]

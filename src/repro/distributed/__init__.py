@@ -1,0 +1,10 @@
+"""Distribution layer: logical sharding rules, offload shardings, helpers."""
+from repro.distributed.sharding import (
+    MeshRules, set_mesh_rules, current_rules, rules_for_mesh,
+    shard_act, param_shardings, DEFAULT_RULES, MULTIPOD_RULES,
+)
+
+__all__ = [
+    "MeshRules", "set_mesh_rules", "current_rules", "rules_for_mesh",
+    "shard_act", "param_shardings", "DEFAULT_RULES", "MULTIPOD_RULES",
+]

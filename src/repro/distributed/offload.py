@@ -1,0 +1,63 @@
+"""Fused single-program host-offload mode (TPU path).
+
+On TPU, ZenFlow's host state can live INSIDE the device program via
+`NamedSharding.with_memory_kind("pinned_host")` for residency and
+`jax.experimental.compute_on("device_host")` for the accumulate/apply
+compute — one XLA program, XLA schedules the host work asynchronously.
+
+This container's XLA:CPU SPMD partitioner rejects
+`annotate_device_placement` custom-calls under multi-device partitioning
+(RET_CHECK spmd_partitioner.cc:5669 — verified), so this module is
+exercised by a LOWERING-ONLY test; the two-program runtime
+(runtime/zen_runtime.py) is the default execution mode and is also the
+closer match to the paper's architecture (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.compute_on import compute_on
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.core import selection as sel
+
+
+def host_sharding(mesh: Mesh, *spec) -> NamedSharding:
+    """NamedSharding pinned to host memory."""
+    return NamedSharding(mesh, P(*spec)).with_memory_kind("pinned_host")
+
+
+def host_state_shardings(host_state_spec, segs, rules):
+    """pinned_host shardings for the ZenFlow host state (fused mode)."""
+    from repro.launch.shardspecs import dstate_shardings
+    dev = dstate_shardings(host_state_spec, segs, rules)
+    return jax.tree.map(lambda s: s.with_memory_kind("pinned_host"), dev)
+
+
+def fused_accumulate(acc, g_comp, comp_idx):
+    """Host-resident accumulate expressed with compute_on — the fused-mode
+    equivalent of host_accumulate (per split param)."""
+    with compute_on("device_host"):
+        return sel.scatter_add_rows(acc, comp_idx, g_comp.astype(jnp.float32))
+
+
+def make_fused_accumulate_step(mesh: Mesh):
+    """A minimal fused-mode program: device grads -> host accumulate.
+
+    Returns (fn, in_specs) for lowering tests; full-step fusion follows
+    the same pattern with host_apply under the same compute_on scope."""
+    p_g = NamedSharding(mesh, P("data", "model"))
+    p_acc = host_sharding(mesh, "data", "model")
+    p_g_host = p_g.with_memory_kind("pinned_host")
+
+    def step(acc, g):
+        # explicit device->host transfer (the PCIe hop), then host compute
+        g_host = jax.device_put(g, p_g_host)
+        with compute_on("device_host"):
+            new_acc = acc + g_host.astype(jnp.float32)
+        return new_acc
+
+    return step, (p_acc, p_g)

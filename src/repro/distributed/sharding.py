@@ -1,0 +1,240 @@
+"""Logical-axis sharding rules (MaxText-style) mapped onto the production mesh.
+
+Models annotate activations/params with *logical* axis names; a `MeshRules`
+maps logical names to mesh axes. Rules differ per topology (single-pod vs
+multi-pod) and can be overridden per-experiment (the perf hillclimb in
+EXPERIMENTS.md §Perf swaps rule tables, not model code).
+
+Mesh axes:
+  "pod"   — across-pod data parallelism (gradient all-reduce over DCI)
+  "data"  — within-pod batch + FSDP (ZeRO-3 weight sharding)
+  "model" — tensor parallelism / expert parallelism / vocab parallelism
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, tuple, None]
+
+
+@dataclass(frozen=True)
+class MeshRules:
+    """logical axis name -> mesh axis (or tuple of axes, or None)."""
+    rules: dict = field(default_factory=dict)
+    mesh: Optional[Mesh] = None
+
+    def axis(self, logical: Optional[str]) -> Axis:
+        if logical is None:
+            return None
+        if logical not in self.rules:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.rules[logical]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.axis(a) for a in logical))
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def override(self, **kv) -> "MeshRules":
+        new = dict(self.rules)
+        new.update(kv)
+        return replace(self, rules=new)
+
+
+# Baseline (paper-faithful) rule tables. The §Perf hillclimb produces
+# variants via .override() — see telemetry/roofline.py presets.
+_SINGLE_POD = {
+    "batch": "data",
+    "seq": None,
+    "embed": None,
+    "embed_fsdp": "data",        # weight row (channel) axis — ZeRO-3 shard
+    "heads": "model",
+    "kv_heads": "model",         # auto-dropped when Hkv % model != 0 (GQA)
+    "head_dim": None,
+    "mlp": "model",
+    "moe_mlp": None,             # expert-internal hidden dim
+    "expert": "model",           # expert parallelism
+    "vocab": "model",
+    "loss_batch": "data",        # batch axes for the unembed/xent region
+                                 # (never spans "model": keeps logits
+                                 # vocab-sharded even in pure-DP mode)
+    "layers": None,
+    "kv_seq": None,              # decode KV cache sequence dim (SP if set)
+    "ssm_state": None,
+    "conv": None,
+}
+
+_MULTI_POD = dict(_SINGLE_POD)
+_MULTI_POD.update({
+    "batch": ("pod", "data"),
+    "loss_batch": ("pod", "data"),
+    # params replicated across pods: pure DP over DCI (grad all-reduce only)
+})
+
+DEFAULT_RULES = MeshRules(rules=_SINGLE_POD)
+MULTIPOD_RULES = MeshRules(rules=_MULTI_POD)
+
+_tls = threading.local()
+
+
+def set_mesh_rules(rules: Optional[MeshRules]):
+    """Context manager installing rules for model-code activation constraints."""
+    @contextlib.contextmanager
+    def cm():
+        prev = getattr(_tls, "rules", None)
+        _tls.rules = rules
+        try:
+            yield rules
+        finally:
+            _tls.rules = prev
+    return cm()
+
+
+def current_rules() -> Optional[MeshRules]:
+    return getattr(_tls, "rules", None)
+
+
+def shard_act(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint if rules are installed; no-op otherwise.
+
+    Trailing logical axes may be dropped for lower-rank arrays. Axes whose
+    mesh factor does not divide the dim are dropped (replicated) — forcing
+    them would make the SPMD partitioner fall back to full
+    rematerialization/replication copies.
+    """
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    names = list(logical)[:x.ndim]
+    names += [None] * (x.ndim - len(names))
+    spec = []
+    used: set = set()
+    for dim, name in zip(x.shape, names):
+        ax = rules.axis(name) if isinstance(name, str) else name
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if any(a in used for a in axes if a):
+            spec.append(None)        # axis already consumed by another dim
+            continue
+        size = _axis_size(rules.mesh, ax)
+        if size and dim % size == 0:
+            spec.append(ax)
+            used.update(a for a in axes if a)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*spec)))
+
+
+def attn_strategy(n_heads: int, seq_len: int) -> str:
+    """Attention parallelism for this arch on the current mesh:
+
+    "batch"  — the batch axis already spans the model axis (odd-head-count
+               archs in pure-DP/ZeRO-3 mode): attention is batch-local,
+               constrain q/k/v to the batch sharding only;
+    "heads"  — classic TP (head count divides the model axis);
+    "seq"    — sequence-parallel attention: q/scores/ctx sharded on the
+               sequence dim over the model axis, kv replicated (GQA kv is
+               small). Fallback when heads don't divide and batch can't
+               span the mesh (odd-H multi-pod train); collective-heavy,
+               see EXPERIMENTS.md §Perf.
+    "none"   — replicate (tiny sequences).
+    """
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return "heads"
+    batch_ax = rules.axis("batch")
+    batch_axes = batch_ax if isinstance(batch_ax, tuple) else (batch_ax,)
+    model_ax = rules.axis("mlp")
+    if model_ax in batch_axes:
+        return "batch"
+    hsz = _axis_size(rules.mesh, rules.axis("heads"))
+    if hsz and n_heads % hsz == 0:
+        return "heads"
+    msz = _axis_size(rules.mesh, model_ax)
+    if msz and seq_len % msz == 0 and seq_len >= msz:
+        return "seq"
+    return "none"
+
+
+def rules_for_mesh(mesh: Mesh, overrides: Optional[dict] = None) -> MeshRules:
+    base = MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+    rules = replace(base, mesh=mesh)
+    if overrides:
+        rules = rules.override(**overrides)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings: map a params pytree (by path) to NamedShardings.
+
+def _param_logical_axes(path: str, shape: tuple) -> tuple:
+    """Logical axes for a parameter, keyed by its tree path name.
+
+    Convention: stacked-layer weights are (L, in, out) -> (layers, row, col);
+    2-D weights are (in, out). Rows are ZenFlow channels; FSDP shards rows.
+    """
+    name = path.split("/")[-1]
+    nd = len(shape)
+    if name in ("embedding", "pos_embedding"):
+        return ("vocab", "embed_fsdp")[:nd]
+    # column-parallel (output dim on model): inputs projected up
+    col_parallel = ("wq", "wkv", "wqkv", "w_in", "w_gate_up", "router",
+                    "w_patch", "wk_cross", "wv_cross", "w_rkvg", "in_proj")
+    # row-parallel (input dim on model): projections back to embed
+    row_parallel = ("wo", "w_out", "w_down", "out_proj")
+    base = name.rstrip("0123456789_")
+    if name in col_parallel or base in col_parallel:
+        kv_like = name in ("wkv", "wk_cross", "wv_cross")
+        out_axis = "kv_heads" if kv_like else "mlp"
+        if nd == 3:
+            return ("layers", "embed_fsdp", out_axis)
+        return ("embed_fsdp", out_axis)
+    if name in row_parallel or base in row_parallel:
+        if nd == 3:
+            return ("layers", "mlp", "embed_fsdp")
+        return ("mlp", "embed_fsdp")
+    if name.startswith("expert"):
+        # (L, E, in, out): experts on "expert" axis, rows (the ZenFlow
+        # channel axis) FSDP-sharded — without the row shard a 480B-class
+        # expert table would put tens of GiB per device
+        axes = ("layers", "expert", "embed_fsdp", "moe_mlp")
+        return axes[-nd:] if nd <= 4 else axes
+    # 1-D / small params: replicated
+    return (None,) * nd
+
+
+def param_shardings(params_spec, rules: MeshRules):
+    """ShapeDtypeStruct pytree -> NamedSharding pytree using logical rules."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_spec)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        logical = _param_logical_axes(pstr, leaf.shape)
+        # drop shardings that don't divide the dim evenly
+        spec = []
+        for dim, ax in zip(leaf.shape, (rules.axis(a) if isinstance(a, str) else a
+                                        for a in logical)):
+            size = _axis_size(rules.mesh, ax)
+            spec.append(ax if (size and dim % size == 0 and dim >= size) else None)
+        out.append(NamedSharding(rules.mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _axis_size(mesh: Mesh, ax: Axis) -> int:
+    if ax is None or mesh is None:
+        return 0
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]

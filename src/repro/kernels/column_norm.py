@@ -1,0 +1,55 @@
+"""Per-input-channel squared-norm reduction — the paper's O(m) gradient
+importance proxy (§3.3) as a Pallas TPU kernel.
+
+g (M, N) bf16 -> norms (M, 1) f32: each (block_m, block_n) VMEM tile is
+squared and row-reduced; the grid's column axis accumulates into the output
+block (revisited output pattern: out index_map ignores j, so the same
+(block_m, 1) output block stays resident in VMEM across the N/block_n
+column steps — one HBM write per row block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 512
+
+
+def _kernel(g_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.sum(g * g, axis=1, keepdims=True)
+
+
+def column_norm_pallas(g: Array, block_m: int = DEFAULT_BLOCK_M,
+                       block_n: int = DEFAULT_BLOCK_N,
+                       interpret: bool = False) -> Array:
+    """(M, N) -> (M,) f32 per-row sum of squares."""
+    M, N = g.shape
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    if M % block_m:
+        block_m = M
+    if N % block_n:
+        block_n = N
+    grid = (M // block_m, N // block_n)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        interpret=interpret,
+    )(g)
+    return out[:, 0]

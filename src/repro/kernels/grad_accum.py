@@ -1,0 +1,44 @@
+"""Fused gradient accumulation (acc += g) Pallas kernel.
+
+The host-side inner loop of ZenFlow's accumulation window (§3.1): f32
+accumulator, bf16 incoming gradients, accumulator aliased in place so each
+(block_m, block_n) tile makes one read-modify-write pass. Used device-side
+in fused offload mode; the host runtime uses the same jnp ref (XLA:CPU
+vectorizes it)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 512
+
+
+def _kernel(acc_ref, g_ref, out_ref):
+    out_ref[...] = acc_ref[...] + g_ref[...].astype(jnp.float32)
+
+
+def grad_accum_pallas(acc: Array, g: Array, block_m: int = DEFAULT_BLOCK_M,
+                      block_n: int = DEFAULT_BLOCK_N,
+                      interpret: bool = False) -> Array:
+    M, N = acc.shape
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    if M % block_m:
+        block_m = M
+    if N % block_n:
+        block_n = N
+    grid = (M // block_m, N // block_n)
+    spec = pl.BlockSpec((block_m, block_n), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(acc.shape, jnp.float32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(acc, g)

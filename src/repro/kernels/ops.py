@@ -1,0 +1,76 @@
+"""Jitted kernel wrappers with platform dispatch.
+
+On TPU: real Pallas lowering. Elsewhere: the pure-jnp ref (identical math);
+REPRO_PALLAS_INTERPRET=1 forces interpret-mode Pallas (kernel-body
+execution on CPU) — used by the kernel test suite.
+
+All wrappers accept leading batch dims (stacked layers) via vmap.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.column_norm import column_norm_pallas
+from repro.kernels.grad_accum import grad_accum_pallas
+from repro.kernels.selective_adam import selective_adam_pallas
+
+Array = jax.Array
+
+
+def _force_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1"
+
+
+def pallas_available() -> bool:
+    return jax.default_backend() == "tpu" or _force_interpret()
+
+
+def _batched(fn_2d, core_args: int):
+    """Lift a 2-D-core function over shared leading batch dims."""
+    def go(*args):
+        lead = args[0].ndim - 2
+        if lead == 0:
+            return fn_2d(*args)
+        in_axes = [0] * core_args + [None] * (len(args) - core_args)
+        return jax.vmap(lambda *a: go(*a), in_axes=in_axes)(*args)
+    return go
+
+
+def selective_adam(p: Array, g: Array, idx: Array, m: Array, v: Array,
+                   t: Array, lr: Array, b1: float = 0.9, b2: float = 0.999,
+                   eps: float = 1e-8, wd: float = 0.0):
+    """Fused gather->Adam->scatter on selected rows.
+    p, g: (..., M, N); idx: (..., C); m, v: (..., C, N)."""
+    if pallas_available():
+        fn = partial(selective_adam_pallas, b1=b1, b2=b2, eps=eps, wd=wd,
+                     interpret=_force_interpret())
+    else:
+        fn = partial(ref.selective_adam_ref, b1=b1, b2=b2, eps=eps, wd=wd)
+
+    def core(p2, g2, idx1, m2, v2):
+        return fn(p2, g2, idx1, m2, v2, t, lr)
+
+    return _batched(core, 5)(p, g, idx, m, v)
+
+
+def column_norm(g: Array) -> Array:
+    """Per-row (input-channel) sum of squares: (..., M, N) -> (..., M) f32."""
+    if pallas_available():
+        fn = partial(column_norm_pallas, interpret=_force_interpret())
+    else:
+        fn = ref.column_norm_ref
+    return _batched(fn, 1)(g)
+
+
+def grad_accum(acc: Array, g: Array) -> Array:
+    """acc += g with f32 accumulate: (..., M, N)."""
+    if pallas_available():
+        fn = partial(grad_accum_pallas, interpret=_force_interpret())
+    else:
+        fn = ref.grad_accum_ref
+    return _batched(fn, 2)(acc, g)

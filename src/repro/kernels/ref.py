@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def selective_adam_ref(p: Array, g: Array, idx: Array, m: Array, v: Array,
+                       t: Array, lr: Array, b1: float, b2: float,
+                       eps: float, wd: float):
+    """Gather rows at idx -> bias-corrected AdamW -> scatter back.
+
+    p, g: (M, N); idx: (C,); m, v: (C, N) f32. Returns (p', m', v')."""
+    p_rows = p[idx].astype(jnp.float32)
+    g_rows = g[idx].astype(jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * g_rows
+    v_new = b2 * v + (1.0 - b2) * jnp.square(g_rows)
+    tf = t.astype(jnp.float32)
+    m_hat = m_new / (1.0 - jnp.power(b1, tf))
+    v_hat = v_new / (1.0 - jnp.power(b2, tf))
+    upd = m_hat / (jnp.sqrt(v_hat) + eps)
+    if wd:
+        upd = upd + wd * p_rows
+    new_rows = p_rows - lr * upd
+    return p.at[idx].set(new_rows.astype(p.dtype)), m_new, v_new
+
+
+def column_norm_ref(g: Array) -> Array:
+    """Per-input-channel (row) sum of squares: (M, N) -> (M,) f32."""
+    return jnp.sum(jnp.square(g.astype(jnp.float32)), axis=-1)
+
+
+def grad_accum_ref(acc: Array, g: Array) -> Array:
+    """acc (M, N) f32 += g (M, N) (any float dtype)."""
+    return acc + g.astype(jnp.float32)

@@ -1,0 +1,98 @@
+"""Fused gather->Adam->scatter Pallas TPU kernel — the paper's "selective
+GPU-side optimizer" (§4) as a TPU-native kernel.
+
+Design (HARDWARE ADAPTATION, DESIGN.md §5): instead of a CUDA scatter
+kernel, we use Pallas *scalar-prefetch dynamic block indexing*: the selected
+channel indices are prefetched to SMEM and the BlockSpec index_map of the
+parameter/gradient operands maps grid step i to row idx[i] — the gather and
+scatter are expressed as block addressing, so each selected row makes
+exactly one HBM->VMEM->HBM round trip fused with the Adam math (no
+materialized gathered copies). m/v moments live compactly as (C, N) and are
+aliased in-place; the parameter operand is aliased too, so unselected rows
+are never touched.
+
+Block shape: (1, block_n) with block_n a multiple of 128 (lane width);
+rows are gathered individually because selected channels are scattered in
+HBM — the (8, 128) sublane penalty of 1-row blocks is bounded by C·N being
+~k=10% of the matrix, and the fusion removes two full round trips vs the
+unfused gather/update/scatter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+DEFAULT_BLOCK_N = 512
+
+
+def _kernel(idx_ref, hyper_ref, p_ref, g_ref, m_ref, v_ref,
+            p_out, m_out, v_out, *, b1: float, b2: float, eps: float,
+            wd: float):
+    t = hyper_ref[0]
+    lr = hyper_ref[1]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    v = v_ref[...]
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    c1 = 1.0 - jnp.power(b1, t)
+    c2 = 1.0 - jnp.power(b2, t)
+    upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+    if wd:
+        upd = upd + wd * p
+    p_out[...] = (p - lr * upd).astype(p_out.dtype)
+    m_out[...] = m_new
+    v_out[...] = v_new
+
+
+def selective_adam_pallas(p: Array, g: Array, idx: Array, m: Array, v: Array,
+                          t: Array, lr: Array, b1: float = 0.9,
+                          b2: float = 0.999, eps: float = 1e-8,
+                          wd: float = 0.0, block_n: int = DEFAULT_BLOCK_N,
+                          interpret: bool = False):
+    """p, g: (M, N); idx: (C,) int32; m, v: (C, N) f32.
+    Returns (p', m', v') with rows at idx updated in place."""
+    M, N = p.shape
+    C = idx.shape[0]
+    block_n = min(block_n, N)
+    if N % block_n:
+        block_n = N  # fall back to one lane-block per row
+    grid = (C, N // block_n)
+    hyper = jnp.stack([t.astype(jnp.float32), lr.astype(jnp.float32)])
+
+    kern = functools.partial(_kernel, b1=b1, b2=b2, eps=eps, wd=wd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j, idx, hyper: (idx[i], j)),
+            pl.BlockSpec((1, block_n), lambda i, j, idx, hyper: (idx[i], j)),
+            pl.BlockSpec((1, block_n), lambda i, j, idx, hyper: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, idx, hyper: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i, j, idx, hyper: (idx[i], j)),
+            pl.BlockSpec((1, block_n), lambda i, j, idx, hyper: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, idx, hyper: (i, j)),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        # inputs: [idx, hyper, p, g, m, v] -> alias p/m/v to outputs
+        input_output_aliases={2: 0, 4: 1, 5: 2},
+        interpret=interpret,
+    )(idx, hyper, p, g, m, v)

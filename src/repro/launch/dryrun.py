@@ -1,0 +1,191 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: the production mesh needs 512
+# placeholder host devices (16x16 single-pod / 2x16x16 multi-pod).
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input shape
+x mesh) cell and record memory/cost/collective artifacts.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both \
+        --out results/dryrun.json
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-7b \
+        --shapes train_4k --mesh single
+
+Results are cached incrementally in the output JSON; completed cells are
+skipped on re-run (--force to redo)."""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch import shardspecs
+from repro.telemetry import hlo_stats
+
+
+ASSIGNED = [
+    "whisper-small", "gemma-7b", "phi4-mini-3.8b", "gemma-2b", "qwen3-4b",
+    "rwkv6-7b", "zamba2-2.7b", "arctic-480b", "kimi-k2-1t-a32b",
+    "phi-3-vision-4.2b",
+]
+
+HBM_PER_CHIP = 16 * 2**30       # TPU v5e
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides=None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        fn, specs, rules = shardspecs.build_train_cell(
+            cfg, shape, mesh, overrides=overrides)
+        donate = (0, 1, 2)          # params, dstate, pending update in place
+    elif shape.kind == "prefill":
+        fn, specs, rules = shardspecs.build_prefill_cell(
+            cfg, shape, mesh, overrides=overrides)
+        donate = ()
+    else:
+        fn, specs, rules = shardspecs.build_decode_cell(
+            cfg, shape, mesh, overrides=overrides)
+        donate = (2,)               # KV cache aliased in place (serving loop)
+
+    with mesh:
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = hlo_stats.collective_summary(hlo)
+    churn = hlo_stats.reshape_transpose_count(hlo)
+
+    per_dev = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }
+    # donated args alias outputs: live ~ args + temp + unaliased outputs.
+    # NOTE: XLA:CPU can't alias all donated buffers and legalizes bf16 dots
+    # via hoisted f32 converts, so the raw number is an upper bound; the
+    # analytic residency (costmodel.device_residency) is the TPU estimate.
+    live = per_dev["argument_bytes"] + per_dev["temp_bytes"] + \
+        max(per_dev["output_bytes"] - per_dev["alias_bytes"], 0)
+    from repro.telemetry.costmodel import device_residency
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    resid = device_residency(cfg, shape, mesh_shape)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_per_device": per_dev,
+        "live_bytes_per_device": live,
+        "fits_hbm_16g": bool(live <= HBM_PER_CHIP),
+        "analytic_live_bytes": resid["total"],
+        "analytic_fits_hbm_16g": bool(resid["total"] <= HBM_PER_CHIP),
+        "analytic_residency": {k: round(v / 2**30, 3)
+                               for k, v in resid.items()},
+        "hlo_flops_module": ca.get("flops"),
+        "hlo_bytes_module": ca.get("bytes accessed"),
+        "collectives": colls,
+        "layout_churn": churn,
+        "hlo_chars": len(hlo),
+    }
+    return rec
+
+
+def cells_for(arch: str) -> list[str]:
+    cfg = get_config(arch)
+    return [s for s in SHAPES if s not in cfg.skip_shapes]
+
+
+def skipped_cells(arch: str) -> dict:
+    return dict(get_config(arch).skip_shapes)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="'all' (assigned 10) or a config name")
+    ap.add_argument("--shapes", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--overrides", default="",
+                    help="sharding-rule overrides k=v,k=v (perf hillclimb)")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = None
+    if args.overrides:
+        overrides = dict(kv.split("=") for kv in args.overrides.split(","))
+        overrides = {k: (None if v == "None" else v)
+                     for k, v in overrides.items()}
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for skip_shape, reason in skipped_cells(arch).items():
+            key = f"{arch}|{skip_shape}|skip"
+            results[key] = {"arch": arch, "shape": skip_shape,
+                            "status": "skipped", "reason": reason}
+            n_skip += 1
+        shapes = cells_for(arch) if args.shapes == "all" \
+            else args.shapes.split(",")
+        for shape_name in shapes:
+            if shape_name in skipped_cells(arch):
+                continue
+            for multi in meshes:
+                mesh_tag = "2x16x16" if multi else "16x16"
+                key = f"{arch}|{shape_name}|{mesh_tag}"
+                if key in results and results[key].get("status") == "ok" \
+                        and not args.force:
+                    n_ok += 1
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi, overrides)
+                    n_ok += 1
+                    print(f"  ok: compile={rec['compile_s']}s "
+                          f"live={rec['live_bytes_per_device']/2**30:.2f}GiB "
+                          f"fits={rec['fits_hbm_16g']} "
+                          f"coll={rec['collectives']['total_bytes']/2**20:.0f}MiB",
+                          flush=True)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_tag, "status": "fail",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                    print(f"  FAIL: {type(e).__name__}: {str(e)[:200]}",
+                          flush=True)
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    print(f"[dryrun] done: ok={n_ok} fail={n_fail} "
+          f"skipped(documented)={n_skip}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

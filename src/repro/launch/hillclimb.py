@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede jax init — same production mesh as the dry-run)
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> validate for
+the three chosen (arch x shape) pairs. Each experiment compiles the REAL
+program on the production mesh and records analytic roofline terms + HLO
+collective/memory evidence before and after.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --pair gemma7b
+    PYTHONPATH=src python -m repro.launch.hillclimb --pair zamba2
+    PYTHONPATH=src python -m repro.launch.hillclimb --pair kimi
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import shardspecs
+from repro.telemetry import hlo_stats
+from repro.telemetry.roofline import analyze
+
+
+def compile_cell(arch, shape_name, overrides=None, remat="full",
+                 microbatches=None, zcfg=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    fn, specs, rules = shardspecs.build_train_cell(
+        cfg, shape, mesh, overrides=overrides, remat=remat,
+        microbatches=microbatches, zcfg=zcfg)
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(fn, donate_argnums=(0, 1, 2)).lower(*specs).compile()
+    dt = time.time() - t0
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = hlo_stats.collective_summary(hlo)
+    churn = hlo_stats.reshape_transpose_count(hlo)
+    return {
+        "compile_s": round(dt, 1),
+        "live_gib": round((ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                           + max(ma.output_size_in_bytes
+                                 - ma.alias_size_in_bytes, 0)) / 2**30, 2),
+        "hlo_collective_gib": round(coll["total_bytes"] / 2**30, 2),
+        "hlo_collective_by_kind": {k: round(v["bytes"] / 2**30, 2)
+                                   for k, v in coll["by_kind"].items()},
+        "layout_churn": churn,
+    }
+
+
+def experiment(name, arch, shape_name, base_kw, change_kw, hypothesis,
+               mesh_shape=None, analytic_kw_base=None, analytic_kw_new=None):
+    mesh_shape = mesh_shape or {"data": 16, "model": 16}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    a_base = analyze(cfg, shape, mesh_shape, **(analytic_kw_base or {}))
+    a_new = analyze(cfg, shape, mesh_shape, **(analytic_kw_new or {}))
+    print(f"\n=== {name}: {arch}/{shape_name}")
+    print(f"hypothesis: {hypothesis}")
+    before = compile_cell(arch, shape_name, **base_kw)
+    print(f"  before: {before}")
+    after = compile_cell(arch, shape_name, **change_kw)
+    print(f"  after : {after}")
+    rec = {
+        "name": name, "arch": arch, "shape": shape_name,
+        "hypothesis": hypothesis,
+        "before": before, "after": after,
+        "analytic_before": {"compute_s": a_base.compute_s,
+                            "memory_s": a_base.memory_s,
+                            "collective_s": a_base.collective_s,
+                            "useful_ratio": a_base.useful_ratio,
+                            "roofline_frac": a_base.roofline_frac,
+                            "bottleneck": a_base.bottleneck},
+        "analytic_after": {"compute_s": a_new.compute_s,
+                           "memory_s": a_new.memory_s,
+                           "collective_s": a_new.collective_s,
+                           "useful_ratio": a_new.useful_ratio,
+                           "roofline_frac": a_new.roofline_frac,
+                           "bottleneck": a_new.bottleneck},
+    }
+    dom = a_base.bottleneck
+    key = {"compute": "compute_s", "memory": "memory_s",
+           "collective": "collective_s"}[dom]
+    b, a = rec["analytic_before"][key], rec["analytic_after"][key]
+    hlo_delta = (before["hlo_collective_gib"] or 1) and \
+        (1 - after["hlo_collective_gib"] / max(before["hlo_collective_gib"],
+                                               1e-9))
+    rec["dominant_term"] = dom
+    rec["dominant_delta_frac"] = round(1 - a / max(b, 1e-12), 4)
+    rec["hlo_collective_delta_frac"] = round(hlo_delta, 4)
+    confirmed = (a < b * 0.98
+                 or after["hlo_collective_gib"]
+                 < before["hlo_collective_gib"] * 0.98
+                 or after["live_gib"] < before["live_gib"] * 0.98)
+    rec["verdict"] = "confirmed" if confirmed else "refuted"
+    return rec
+
+
+def pair_gemma7b():
+    """Paper-representative dense 7B train; compute-bound (useful=0.75
+    from full-remat recompute). Hypothesis: with microbatches=16 the
+    per-microbatch live activations are small enough to drop remat
+    entirely -> expected_flops falls from 4x fwd to 3x fwd (-25% compute
+    term), trading ~2x activation residency."""
+    return experiment(
+        "gemma7b_drop_remat", "gemma-7b", "train_4k",
+        base_kw={"remat": "full", "microbatches": 8},
+        change_kw={"remat": "none", "microbatches": 16},
+        hypothesis="drop remat at mb=16: compute term -25% (useful 0.75->1.0)"
+                   ", activation residency rises but stays under HBM",
+        analytic_kw_base={"remat_extra": 1.0},
+        analytic_kw_new={"remat_extra": 0.0},
+    )
+
+
+def pair_zamba2():
+    """Most collective-bound train cell: 54 mamba layers x TP all-reduces
+    of (tokens, D) dominate. Hypothesis: pure-DP/ZeRO-3 (batch over
+    data x model, weights gathered per layer) replaces ~69 GB of activation
+    all-reduce per device-step with ~16 GB of weight gathers -> collective
+    term ~-55%+."""
+    ov = {"batch": ("data", "model"), "heads": None}
+    return experiment(
+        "zamba2_pure_dp", "zamba2-2.7b", "train_4k",
+        base_kw={"remat": "full"},
+        change_kw={"remat": "full", "overrides": ov},
+        hypothesis="pure-DP over 256 chips: replace per-layer TP activation "
+                   "all-reduces with ZeRO-3 weight gathers (small model, "
+                   "big activations)",
+        analytic_kw_base={},
+        analytic_kw_new={"moe_dispatch": "psum"},
+    )
+
+
+def pair_kimi():
+    """Largest model; collective-bound (FSDP expert-table regathers per
+    microbatch + psum-EP combine). Hypothesis: fewer microbatches (8->2)
+    cut per-step weight regather traffic ~4x; a2a dispatch (analytic)
+    would cut the MoE combine a further ~14x (top_k/model vs full
+    activation all-reduce)."""
+    return experiment(
+        "kimi_fewer_microbatches", "kimi-k2-1t-a32b", "train_4k",
+        base_kw={"remat": "full", "microbatches": 8},
+        change_kw={"remat": "full", "microbatches": 2},
+        hypothesis="mb 8->2: FSDP expert-table regathers scale with "
+                   "microbatch count; 4x fewer regathers at ~4x activation "
+                   "residency (still bounded by seq-chunked loss)",
+        analytic_kw_base={"moe_dispatch": "psum"},
+        analytic_kw_new={"moe_dispatch": "a2a"},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all",
+                    choices=["all", "gemma7b", "zamba2", "kimi"])
+    ap.add_argument("--out", default="results/perf_iterations.json")
+    args = ap.parse_args()
+    pairs = {"gemma7b": pair_gemma7b, "zamba2": pair_zamba2,
+             "kimi": pair_kimi}
+    todo = list(pairs) if args.pair == "all" else [args.pair]
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    for p in todo:
+        rec = pairs[p]()
+        results = [r for r in results if r["name"] != rec["name"]]
+        results.append(rec)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"  -> {rec['verdict']} (dominant {rec['dominant_term']} "
+              f"delta {rec['dominant_delta_frac']:+.1%}, HLO coll delta "
+              f"{rec['hlo_collective_delta_frac']:+.1%})")
+
+
+if __name__ == "__main__":
+    main()

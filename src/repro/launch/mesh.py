@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing never touches jax device
+state — required because the dry-run must set XLA_FLAGS before any jax
+initialization."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, model_parallel: int = 0):
+    """Smoke/elastic helper: largest (data, model) mesh over `devices`."""
+    if model_parallel <= 0:
+        model_parallel = 1
+        d = devices
+        while d % 2 == 0 and model_parallel < 16 and d > model_parallel * 2:
+            model_parallel *= 2
+            d //= 2
+    data = devices // model_parallel
+    return jax.make_mesh((data, model_parallel), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,98 @@
+"""Generate the §Roofline table (all 40 baseline cells, single-pod mesh)
+and the §Perf hillclimb comparisons from the analytic cost model +
+dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report \
+        --dryrun results/dryrun.json --out results/roofline.json
+"""
+import argparse
+import json
+import math
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.telemetry import costmodel as cm
+from repro.telemetry.roofline import analyze, format_table
+
+ASSIGNED = [
+    "whisper-small", "gemma-7b", "phi4-mini-3.8b", "gemma-2b", "qwen3-4b",
+    "rwkv6-7b", "zamba2-2.7b", "arctic-480b", "kimi-k2-1t-a32b",
+    "phi-3-vision-4.2b",
+]
+
+SINGLE_POD = {"data": 16, "model": 16}
+MULTI_POD = {"pod": 2, "data": 16, "model": 16}
+
+
+def what_moves_it(row) -> str:
+    if row.bottleneck == "compute":
+        return ("reduce remat recompute (checkpoint policy) or MoE capacity "
+                "padding; compute is the roofline ceiling otherwise")
+    if row.bottleneck == "memory":
+        return ("decode/weight-streaming bound: batch more requests per "
+                "step or quantize weights/KV (int8) to cut HBM bytes")
+    return ("cut collective volume: fewer microbatches (FSDP regathers), "
+            "a2a MoE dispatch, bf16 collectives, or overlap with compute")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+
+    dr = {}
+    if os.path.exists(args.dryrun):
+        with open(args.dryrun) as f:
+            dr = json.load(f)
+
+    rows = []
+    records = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if sname in cfg.skip_shapes:
+                records.append({"arch": arch, "shape": sname,
+                                "status": "skipped",
+                                "reason": cfg.skip_shapes[sname]})
+                continue
+            r = analyze(cfg, shape, SINGLE_POD)
+            rows.append(r)
+            key = f"{arch}|{sname}|16x16"
+            cell = dr.get(key, {})
+            rec = r.as_dict()
+            rec["what_moves_dominant_term"] = what_moves_it(r)
+            rec["dryrun"] = {
+                "compile_s": cell.get("compile_s"),
+                "live_gib_raw": round(cell.get("live_bytes_per_device", 0)
+                                      / 2**30, 2),
+                "analytic_live_gib": round(cell.get("analytic_live_bytes", 0)
+                                           / 2**30, 2),
+                "hlo_collective_gib": round(
+                    cell.get("collectives", {}).get("total_bytes", 0) / 2**30,
+                    2),
+                "hlo_flops_module": cell.get("hlo_flops_module"),
+            }
+            records.append(rec)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(format_table(rows))
+    print(f"\n[roofline] {len(rows)} baseline cells -> {args.out}")
+
+    # flag the three hillclimb picks
+    trains = [r for r in rows if r.shape == "train_4k"]
+    worst = min(rows, key=lambda r: r.roofline_frac)
+    most_coll = max(rows, key=lambda r: r.collective_s / max(r.step_s, 1e-30))
+    print(f"\nworst roofline fraction : {worst.arch}/{worst.shape} "
+          f"({100*worst.roofline_frac:.1f}%)")
+    print(f"most collective-bound   : {most_coll.arch}/{most_coll.shape} "
+          f"(coll {most_coll.collective_s:.3f}s vs step "
+          f"{most_coll.step_s:.3f}s)")
+    print("paper-representative    : llama2-7b-scale dense train_4k "
+          "(gemma-7b closest assigned)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Input-spec construction for the dry-run / launchers: ShapeDtypeStructs
+with attached NamedShardings for every program input of a cell
+(arch x shape x mesh), for all three program kinds (train / prefill /
+decode)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.core.partition import tree_to_pathdict, pathdict_to_tree
+from repro.distributed import zen_spmd
+from repro.distributed.sharding import (MeshRules, rules_for_mesh,
+                                        param_shardings, _axis_size)
+from repro.models.model_zoo import build_model, make_input_specs
+
+Array = jax.Array
+
+
+def _sds(spec, sharding):
+    return jax.ShapeDtypeStruct(spec.shape, spec.dtype, sharding=sharding)
+
+
+def rules_for_cell(mesh: Mesh, shape: ShapeConfig, cfg: ArchConfig,
+                   overrides: Optional[dict] = None) -> MeshRules:
+    """Cell-specific sharding rules.
+
+    * decode: KV-cache sequence parallelism (batch rarely spans the mesh);
+    * odd-head-count archs (H % model != 0 — whisper 12H, phi4 24H,
+      gemma-2b 8H, arctic 56H on a 16-way model axis): classic head-TP
+      is unshardable, so
+        - train, batch divisible by all chips -> pure-DP/ZeRO-3 (batch
+          spans ("data","model"), weights stay sharded and are gathered
+          per use);
+        - prefill -> batch on "model", sequence on the data axes;
+        - otherwise -> sequence-parallel attention over "model"
+          (collective-heavy; a §Perf hillclimb target).
+    """
+    rules = rules_for_mesh(mesh, overrides)
+    names = mesh.axis_names
+    batch_ax = rules.axis("batch")
+    batch_size = _axis_size(mesh, batch_ax)
+    if shape.kind == "decode":
+        if shape.global_batch % max(batch_size, 1) or \
+                shape.global_batch < batch_size:
+            # batch too small to shard (long_500k): sequence parallelism
+            # over every axis; heads replicated
+            all_axes = tuple(names)
+            return rules.override(batch=None, heads=None, kv_seq=all_axes)
+        # shard the KV cache sequence dim on "model" (SP combine),
+        # heads replicated in SP decode; batch on data axes
+        return rules.override(kv_seq="model", heads=None)
+
+    # >100B archs: shard weight rows across pods too (ZeRO-3 over DCI) —
+    # params replicated per pod would not fit 16 GiB HBM
+    from repro.telemetry.costmodel import arch_param_count
+    if "pod" in names and arch_param_count(cfg) > 100e9:
+        rules = rules.override(embed_fsdp=("pod", "data"))
+
+    msz = _axis_size(mesh, "model")
+    has_attn = cfg.family not in ("ssm",)
+    odd_heads = has_attn and msz and cfg.n_heads % msz != 0
+    if not odd_heads:
+        return rules
+    chips = math.prod(mesh.devices.shape)
+    data_axes = batch_ax if isinstance(batch_ax, tuple) else (batch_ax,)
+    # NOTE (measured, EXPERIMENTS.md §Dry-run): for arctic (odd-head MoE)
+    # pure-DP measured ~10x fewer HLO collective bytes than EP+seq-attn
+    # (293 vs 2964 GiB/device) because XLA's collective pipeliner amortizes
+    # the ZeRO-3 expert gathers across the step; we ship the measured
+    # winner. The no-hoisting closed form favors EP (roofline.py keeps the
+    # conservative "tp" scheme for MoE).
+    if shape.kind == "train" and shape.global_batch % chips == 0:
+        all_axes = tuple(names)
+        return rules.override(batch=all_axes, heads=None)
+    if shape.kind == "prefill" and shape.global_batch % msz == 0:
+        seq_axes = tuple(a for a in names if a != "model")
+        seq_ax = seq_axes if len(seq_axes) > 1 else seq_axes[0]
+        return rules.override(batch="model", seq=seq_ax, heads=None)
+    # multi-pod odd-H train: sequence-parallel attention over "model"
+    return rules.override(heads=None)
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, rules: MeshRules):
+    """Sharded ShapeDtypeStructs for the data batch of a cell."""
+    mesh = rules.mesh
+    specs = make_input_specs(cfg, shape)
+    batch_ax = rules.axis("batch")
+    bsz = _axis_size(mesh, batch_ax)
+    if shape.global_batch % max(bsz, 1):
+        batch_ax = None
+
+    def shard(spec, *axes):
+        return _sds(spec, NamedSharding(mesh, P(*axes[:len(spec.shape)])))
+
+    if shape.kind in ("train", "prefill"):
+        out = {"tokens": shard(specs["tokens"], batch_ax, None)}
+        if "labels" in specs:
+            out["labels"] = shard(specs["labels"], batch_ax, None)
+        if "frame_embeds" in specs:
+            out["frame_embeds"] = shard(specs["frame_embeds"], batch_ax,
+                                        None, None)
+        if "patch_embeds" in specs:
+            out["patch_embeds"] = shard(specs["patch_embeds"], batch_ax,
+                                        None, None)
+        return out
+
+    # decode: token + cache + cache_len
+    kv_ax = rules.axis("kv_seq")
+    heads_model = rules.rules.get("ssm_heads", "model")
+    cache = {}
+    for name, spec in specs["cache"].items():
+        nd = len(spec.shape)
+        if name in ("k", "v", "cross_k", "cross_v", "shared_k", "shared_v"):
+            axes = (None, batch_ax, kv_ax if name not in ("cross_k", "cross_v")
+                    else None, None, None)
+        elif name == "wkv_state":       # (L,B,H,hd,hd)
+            hax = "model" if spec.shape[2] % _axis_size(mesh, "model") == 0 \
+                else None
+            axes = (None, batch_ax, hax, None, None)
+        elif name == "ssm_state":       # (L,B,H,N,P)
+            hax = "model" if spec.shape[2] % _axis_size(mesh, "model") == 0 \
+                else None
+            axes = (None, batch_ax, hax, None, None)
+        elif name == "conv_state":      # (L,B,K-1,d_inner)
+            axes = (None, batch_ax, None, None)
+        else:                           # shift states (L,B,D)
+            axes = (None, batch_ax, None)
+        cache[name] = _sds(spec, NamedSharding(mesh, P(*axes[:nd])))
+    return {
+        "token": _sds(specs["token"], NamedSharding(mesh, P(batch_ax, None))),
+        "cache": cache,
+        "cache_len": _sds(specs["cache_len"], NamedSharding(mesh, P(batch_ax))),
+    }
+
+
+def _state_sharding_for(path: str, leaf, segs, rules: MeshRules):
+    """Sharding for a ZenFlow device-state / pending leaf by path.
+
+    Segmented-state layout: (lead..., RS, X, n) for 3-D cores (m_sel,
+    v_sel, rows) and (lead..., RS, X) for index arrays; `lead` carries the
+    param's leading-dim shardings (layers, experts — critical for MoE
+    tables, which otherwise replicate hundreds of GiB per device)."""
+    mesh = rules.mesh
+    parts = path.split("/")
+    kind = parts[0]
+    param_path = "/".join(parts[1:])
+    nd = len(leaf.shape)
+    if param_path in segs and kind in ("sel_idx", "m_sel", "v_sel",
+                                       "rows", "idx"):
+        s = segs[param_path]
+        spec = [None] * nd
+        core = 2 if kind in ("sel_idx", "idx") else 3
+        for i, ax in enumerate(s.lead_spec[: max(nd - core, 0)]):
+            spec[i] = ax
+        if core == 2:
+            spec[-2] = s.row_axis_spec
+        else:
+            spec[-3] = s.row_axis_spec
+            spec[-1] = s.col_axis_spec
+        return NamedSharding(mesh, P(*spec))
+    return NamedSharding(mesh, P())
+
+
+def dstate_shardings(dstate_spec, segs, rules: MeshRules):
+    pd = tree_to_pathdict(dstate_spec)
+    # note: pathdict flattening loses the nested tree; map over the tree
+    flat, treedef = jax.tree_util.tree_flatten_with_path(dstate_spec)
+    out = []
+    from repro.core.partition import path_str
+    for path, leaf in flat:
+        p = path_str(path)
+        out.append(_state_sharding_for(p, leaf, segs, rules))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def attach(spec_tree, sharding_tree):
+    return jax.tree.map(lambda s, sh: _sds(s, sh), spec_tree, sharding_tree)
+
+
+def pick_microbatches(shape: ShapeConfig, rules: MeshRules,
+                      target_tokens_per_device: int = 8192) -> int:
+    """Gradient-accumulation factor: bound per-device live activations to
+    ~target tokens while keeping each microbatch divisible by the batch
+    shards."""
+    shards = max(_axis_size(rules.mesh, rules.axis("batch")), 1)
+    if shape.global_batch % shards:
+        return 1
+    per_dev = shape.global_batch // shards
+    want_elems = max(1, target_tokens_per_device // shape.seq_len)
+    mb = max(1, per_dev // want_elems)
+    while shape.global_batch % (mb * shards) or \
+            (shape.global_batch // mb) % shards:
+        mb -= 1
+    return max(mb, 1)
+
+
+def build_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                     zcfg: Optional[ZenFlowConfig] = None,
+                     overrides: Optional[dict] = None,
+                     remat: str = "full",
+                     microbatches: Optional[int] = None):
+    """Returns (step_fn, arg_specs tuple, rules) for the ZenFlow train step."""
+    from repro.models.transformer import TrainOptions
+    if zcfg is None:
+        zcfg = ZenFlowConfig(use_kernels="never")
+    rules = rules_for_cell(mesh, shape, cfg, overrides)
+    if microbatches is None:
+        microbatches = pick_microbatches(shape, rules)
+    model = build_model(cfg, TrainOptions(remat=remat))
+    from repro.telemetry.costmodel import arch_param_count
+    big = arch_param_count(cfg) > 100e9
+    step_fn, segs, partition = zen_spmd.make_device_step(
+        model, zcfg, rules, microbatches=microbatches,
+        accum_dtype=jnp.bfloat16 if big else jnp.float32)
+
+    pspec = model.param_specs()
+    psh = param_shardings(pspec, rules)
+    params_specs = attach(pspec, psh)
+
+    dspec = jax.eval_shape(
+        lambda: zen_spmd.zen_device_state_init(pspec, zcfg, segs))
+    dstate_specs = attach(dspec, dstate_shardings(dspec, segs, rules))
+
+    pend_spec = zen_spmd.pending_specs(segs, pspec)
+    pend_specs = attach(pend_spec, dstate_shardings(pend_spec, segs, rules))
+
+    bspecs = batch_shardings(cfg, shape, rules)
+    return step_fn, (params_specs, dstate_specs, pend_specs, bspecs), rules
+
+
+def build_prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                       overrides: Optional[dict] = None):
+    from repro.models.transformer import TrainOptions
+    rules = rules_for_cell(mesh, shape, cfg, overrides)
+    model = build_model(cfg, TrainOptions(remat="none"))
+
+    def prefill_fn(params, batch):
+        from repro.distributed.sharding import set_mesh_rules
+        with set_mesh_rules(rules):
+            kw = {k: v for k, v in batch.items() if k != "tokens"}
+            return model.prefill(params, batch["tokens"], shape.seq_len, **kw)
+
+    pspec = model.param_specs()
+    params_specs = attach(pspec, param_shardings(pspec, rules))
+    bspecs = batch_shardings(cfg, shape, rules)
+    return prefill_fn, (params_specs, bspecs), rules
+
+
+def build_decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                      overrides: Optional[dict] = None):
+    from repro.models.transformer import TrainOptions
+    rules = rules_for_cell(mesh, shape, cfg, overrides)
+    model = build_model(cfg, TrainOptions(remat="none"))
+
+    pspec = model.param_specs()
+    params_specs = attach(pspec, param_shardings(pspec, rules))
+    b = batch_shardings(cfg, shape, rules)
+    cache_shardings = jax.tree.map(lambda sds: sds.sharding, b["cache"])
+
+    def decode_fn(params, token, cache, cache_len):
+        from repro.distributed.sharding import set_mesh_rules
+        with set_mesh_rules(rules):
+            logits, new_cache, new_len = model.decode_step(
+                params, token, cache, cache_len)
+            # pin the output cache to the input sharding so XLA can alias
+            # the donated buffers (the serving loop updates in place)
+            new_cache = jax.tree.map(jax.lax.with_sharding_constraint,
+                                     new_cache, cache_shardings)
+            return logits, new_cache, new_len
+    return decode_fn, (params_specs, b["token"], b["cache"], b["cache_len"]), \
+        rules

@@ -1,0 +1,4 @@
+"""Model substrate: layers, transformer families, MoE, SSM, hybrid, multimodal."""
+from repro.models.model_zoo import build_model, ModelDef
+
+__all__ = ["build_model", "ModelDef"]

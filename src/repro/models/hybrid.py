@@ -1,0 +1,311 @@
+"""Full-model assembly for attention-free (rwkv6) and hybrid (zamba2)
+families: embedding -> mixer stack -> unembed, with train / prefill /
+decode paths mirroring transformer.py's API.
+
+Zamba2 pattern: `shared_attn_every` Mamba2 layers are followed by one
+invocation of a *single shared* attention+MLP block (one parameter set,
+re-applied; the per-invocation LoRA of the real model is omitted — see
+DESIGN.md). State for decode = per-layer SSM carries + one KV cache per
+shared-block invocation.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_act, current_rules
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as tfm
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+
+
+def init_params(key: Array, cfg: ArchConfig) -> dict:
+    k_emb, k_lyr, k_shared = jax.random.split(key, 3)
+    params = {
+        "embedding": L.init_dense(k_emb, (cfg.vocab, cfg.d_model), scale=0.02),
+        "ln_final": jnp.zeros((cfg.d_model,), jnp.bfloat16),
+    }
+    if cfg.norm == "layernorm":
+        params["lnb_final"] = jnp.zeros((cfg.d_model,), jnp.bfloat16)
+    if not cfg.tie_embeddings:
+        params["w_lm_head"] = L.init_dense(
+            jax.random.fold_in(k_emb, 1), (cfg.d_model, cfg.vocab), scale=0.02)
+    if cfg.ssm.kind == "rwkv6":
+        params["layers"] = ssm.init_rwkv_layer_params(k_lyr, cfg, cfg.n_layers)
+    else:
+        params["layers"] = ssm.init_mamba_layer_params(k_lyr, cfg, cfg.n_layers)
+    if cfg.ssm.shared_attn_every:
+        params["shared"] = _init_shared_block(k_shared, cfg)
+    return params
+
+
+def _init_shared_block(key: Array, cfg: ArchConfig) -> dict:
+    D, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    gated = cfg.act in ("swiglu", "geglu")
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": L.init_dense(ks[0], (D, H * hd)),
+        "wkv": L.init_dense(ks[1], (D, 2 * Hkv * hd)),
+        "wo": L.init_dense(ks[2], (H * hd, D)),
+        "w_in": L.init_dense(ks[3], (D, 2 * cfg.d_ff if gated else cfg.d_ff)),
+        "w_out": L.init_dense(ks[4], (cfg.d_ff, D)),
+        "ln_attn": jnp.zeros((D,), jnp.bfloat16),
+        "ln_mlp": jnp.zeros((D,), jnp.bfloat16),
+    }
+
+
+def param_specs(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def n_shared_invocations(cfg: ArchConfig) -> int:
+    if not cfg.ssm.shared_attn_every:
+        return 0
+    return cfg.n_layers // cfg.ssm.shared_attn_every
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block (full-seq and decode forms)
+
+
+def _shared_block_seq(h, sp, cfg, opts, positions, return_kv=False):
+    x = L.rms_norm(h, sp["ln_attn"])
+    b, s, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ sp["wq"]).reshape(b, s, H, hd)
+    k, v = jnp.split((x @ sp["wkv"]).reshape(b, s, 2 * Hkv, hd), 2, axis=2)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q = shard_act(q, "batch", "seq", "heads", "head_dim")
+    if opts.use_flash and s > opts.attn_chunk:
+        ctx = L.flash_attention(q, k, v, causal=True, chunk_size=opts.attn_chunk)
+    else:
+        ctx = L.full_attention(q, k, v, causal=True)
+    h = h + ctx.reshape(b, s, -1) @ sp["wo"]
+    x = L.rms_norm(h, sp["ln_mlp"])
+    h = h + L.gated_mlp(x, sp["w_in"], sp["w_out"],
+                        act=cfg.act if cfg.act in ("swiglu", "geglu") else "swiglu")
+    h = shard_act(h, "batch", "seq", "embed")
+    return (h, (k, v)) if return_kv else (h, None)
+
+
+def _shared_block_decode(h, sp, cfg, cache_k, cache_v, cache_len, sp_axis=None):
+    x = L.rms_norm(h, sp["ln_attn"])
+    b = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ sp["wq"]).reshape(b, 1, H, hd)
+    k, v = jnp.split((x @ sp["wkv"]).reshape(b, 1, 2 * Hkv, hd), 2, axis=2)
+    pos = cache_len[:, None]
+    q = L.apply_rope(q, pos, cfg.rope_theta)
+    k = L.apply_rope(k, pos, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_len[0], axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_len[0], axis=1)
+    if sp_axis is not None:
+        ctx = tfm._sp_decode_attention(q, cache_k, cache_v, sp_axis,
+                                       cache_len)
+    else:
+        ctx = L.decode_attention(q, cache_k, cache_v, cache_len + 1)
+    h = h + ctx.reshape(b, 1, -1) @ sp["wo"]
+    x = L.rms_norm(h, sp["ln_mlp"])
+    h = h + L.gated_mlp(x, sp["w_in"], sp["w_out"],
+                        act=cfg.act if cfg.act in ("swiglu", "geglu") else "swiglu")
+    return h, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+
+
+def forward(params, tokens, cfg: ArchConfig, opts=tfm.DEFAULT_OPTS,
+            return_cache=False, unembed_mode: str = "full", **_unused):
+    B, S = tokens.shape
+    h = params["embedding"][tokens].astype(jnp.bfloat16)
+    h = shard_act(h, "batch", "seq", "embed")
+    positions = jnp.arange(S)[None]
+    every = cfg.ssm.shared_attn_every
+    block = ssm.rwkv_block if cfg.ssm.kind == "rwkv6" else ssm.mamba_block
+
+    def mixer_body(carry, lp):
+        new_h, st = block(carry, lp, cfg)
+        return new_h, st if return_cache else ()
+    mixer_body = tfm._remat_wrap(mixer_body, opts)
+
+    shared_kvs = []
+    states = []
+    if every:
+        n_groups = n_shared_invocations(cfg)
+        lp_grouped = jax.tree.map(
+            lambda x: x.reshape((n_groups, every) + x.shape[1:]),
+            params["layers"])
+        for gi in range(n_groups):
+            lp_g = jax.tree.map(lambda x: x[gi], lp_grouped)
+            h, st = jax.lax.scan(mixer_body, h, lp_g)
+            if return_cache:
+                states.append(st)
+            h, kv = _shared_block_seq(h, params["shared"], cfg, opts,
+                                      positions, return_kv=return_cache)
+            if return_cache:
+                shared_kvs.append(kv)
+    else:
+        h, st = jax.lax.scan(mixer_body, h, params["layers"])
+        if return_cache:
+            states.append(st)
+
+    if cfg.norm == "layernorm":
+        h = L.layer_norm(h, params["ln_final"], params["lnb_final"])
+    else:
+        h = L.rms_norm(h, params["ln_final"])
+    if unembed_mode == "full":
+        out = tfm.unembed(params, h, cfg)
+    elif unembed_mode == "last":
+        out = tfm.unembed(params, h[:, -1:], cfg)
+    else:
+        out = h
+    if return_cache:
+        return out, states, shared_kvs
+    return out
+
+
+def loss_fn(params, batch, cfg: ArchConfig, opts=tfm.DEFAULT_OPTS):
+    h = forward(params, batch["tokens"], cfg, opts, unembed_mode="none")
+    loss = tfm.lm_loss(params, h, batch["labels"], cfg)
+    return loss, {"xent": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int):
+    spec = {}
+    if cfg.ssm.kind == "rwkv6":
+        tm, cm, st = ssm.rwkv_state_specs(cfg, batch)
+        spec.update({"tm_shift": tm, "cm_shift": cm, "wkv_state": st})
+    else:
+        conv, st = ssm.mamba_state_specs(cfg, batch, cfg.n_layers)
+        spec.update({"conv_state": conv, "ssm_state": st})
+    if cfg.ssm.shared_attn_every:
+        n_inv = n_shared_invocations(cfg)
+        hd = cfg.resolved_head_dim
+        kv = jax.ShapeDtypeStruct(
+            (n_inv, batch, max_seq, cfg.n_kv_heads, hd), jnp.bfloat16)
+        spec["shared_k"] = kv
+        spec["shared_v"] = jax.ShapeDtypeStruct(kv.shape, kv.dtype)
+    return spec
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq))
+
+
+def decode_step(params, token, cache, cache_len, cfg: ArchConfig,
+                opts=tfm.DEFAULT_OPTS):
+    """One decode step for ssm/hybrid families."""
+    h = params["embedding"][token].astype(jnp.bfloat16)  # (B,1,D)
+    every = cfg.ssm.shared_attn_every
+    rules = current_rules()
+    sp_axis = None
+    if rules is not None and rules.mesh is not None and rules.axis("kv_seq"):
+        sp_axis = rules.axis("kv_seq")
+
+    new_cache = dict(cache)
+    if cfg.ssm.kind == "rwkv6":
+        # run sequentially over layers via scan on (B,D) carry
+        def body2(hc, xs):
+            lp, tm, cm, st = xs
+            h2, (tm2, cm2, st2) = ssm.rwkv_block(hc[:, None, :], lp, cfg,
+                                                 carry=(tm, cm, st))
+            return h2[:, 0], (tm2, cm2, st2)
+        h0 = h[:, 0]
+        h0, (tm, cm, st) = jax.lax.scan(
+            body2, h0, (params["layers"], cache["tm_shift"],
+                        cache["cm_shift"], cache["wkv_state"]))
+        h = h0[:, None, :]
+        new_cache.update({"tm_shift": tm, "cm_shift": cm, "wkv_state": st})
+    else:
+        def body2(hc, xs):
+            lp, conv, st = xs
+            h2, (conv2, st2) = ssm.mamba_block(hc[:, None, :], lp, cfg,
+                                               carry=(conv, st))
+            return h2[:, 0], (conv2, st2)
+        h0 = h[:, 0]
+        if every:
+            n_groups = n_shared_invocations(cfg)
+            lp_grouped = jax.tree.map(
+                lambda x: x.reshape((n_groups, every) + x.shape[1:]),
+                params["layers"])
+            conv_g = cache["conv_state"].reshape(
+                (n_groups, every) + cache["conv_state"].shape[1:])
+            st_g = cache["ssm_state"].reshape(
+                (n_groups, every) + cache["ssm_state"].shape[1:])
+            convs, sts, ks, vs = [], [], [], []
+            for gi in range(n_groups):
+                lp_i = jax.tree.map(lambda x: x[gi], lp_grouped)
+                h0, (conv2, st2) = jax.lax.scan(
+                    body2, h0, (lp_i, conv_g[gi], st_g[gi]))
+                convs.append(conv2)
+                sts.append(st2)
+                h1, ck, cv = _shared_block_decode(
+                    h0[:, None, :], params["shared"], cfg,
+                    cache["shared_k"][gi], cache["shared_v"][gi],
+                    cache_len, sp_axis)
+                h0 = h1[:, 0]
+                ks.append(ck)
+                vs.append(cv)
+            new_cache["conv_state"] = jnp.concatenate(convs, 0)
+            new_cache["ssm_state"] = jnp.concatenate(sts, 0)
+            new_cache["shared_k"] = jnp.stack(ks, 0)
+            new_cache["shared_v"] = jnp.stack(vs, 0)
+        else:
+            h0, (conv, st) = jax.lax.scan(
+                body2, h0, (params["layers"], cache["conv_state"],
+                            cache["ssm_state"]))
+            new_cache.update({"conv_state": conv, "ssm_state": st})
+        h = h0[:, None, :]
+
+    if cfg.norm == "layernorm":
+        h = L.layer_norm(h, params["ln_final"], params["lnb_final"])
+    else:
+        h = L.rms_norm(h, params["ln_final"])
+    logits = tfm.unembed(params, h, cfg)
+    return logits, new_cache, cache_len + 1
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_seq: int,
+            opts=tfm.DEFAULT_OPTS, **_unused):
+    """Prompt processing returning decode-ready state."""
+    logits, states, shared_kvs = forward(params, tokens, cfg, opts,
+                                         return_cache=True,
+                                         unembed_mode="last")
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_seq)
+    if cfg.ssm.kind == "rwkv6":
+        tm, cm, st = states[0]
+        cache.update({"tm_shift": tm, "cm_shift": cm, "wkv_state": st})
+    else:
+        if cfg.ssm.shared_attn_every:
+            conv = jnp.concatenate([s[0] for s in states], 0)
+            stt = jnp.concatenate([s[1] for s in states], 0)
+            cache.update({"conv_state": conv, "ssm_state": stt})
+            ks = jnp.stack([kv[0] for kv in shared_kvs], 0)
+            vs = jnp.stack([kv[1] for kv in shared_kvs], 0)
+            pad = max_seq - S
+            cache["shared_k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            cache["shared_v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            conv, stt = states[0]
+            cache.update({"conv_state": conv, "ssm_state": stt})
+    cache_len = jnp.full((B,), S, jnp.int32)
+    return logits, cache, cache_len

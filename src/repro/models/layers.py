@@ -1,0 +1,300 @@
+"""Common neural-net layers: norms, RoPE, attention (full / chunked-flash /
+decode / sequence-parallel decode), gated MLPs.
+
+All weights use JAX convention ``(in, out)`` so the ZenFlow channel axis
+(input channels) is the *row* axis — see DESIGN.md §2 note 1.
+Computation is bf16 matmul with f32 accumulation/softmax.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    angles = angles[..., None, :]                               # (..., seq, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+
+
+def _repeat_kv(k: Array, n_rep: int) -> Array:
+    """(B, S, Hkv, d) -> (B, S, Hkv*n_rep, d) by repetition (GQA)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def full_attention(q: Array, k: Array, v: Array, causal: bool = True,
+                   q_offset: int = 0) -> Array:
+    """Quadratic reference attention. q: (B,Sq,H,d) k,v: (B,Sk,Hkv,d).
+
+    bf16 operands with f32 MXU accumulation (preferred_element_type) — no
+    f32 copies of q/k/v are materialized."""
+    n_rep = q.shape[2] // k.shape[2]
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(sk)[None, :]
+        scores = jnp.where(qpos >= kpos, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def flash_attention(q: Array, k: Array, v: Array, causal: bool = True,
+                    chunk_size: int = 1024, q_offset: int = 0) -> Array:
+    """Memory-efficient (online-softmax) attention: O(Sq·chunk) score memory.
+
+    Scans over KV chunks keeping running (max, denom, weighted acc) — the
+    standard flash-attention recurrence expressed in jax.lax.scan so XLA can
+    keep the working set bounded. This is the sub-quadratic prefill path.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    n_rep = h // k.shape[2]
+    if sk % chunk_size:
+        chunk_size = math.gcd(sk, chunk_size) or sk
+    n_chunks = sk // chunk_size
+    scale = 1.0 / math.sqrt(d)
+
+    k_ch = k.reshape(b, n_chunks, chunk_size, k.shape[2], d)
+    v_ch = v.reshape(b, n_chunks, chunk_size, v.shape[2], d)
+    k_ch = jnp.moveaxis(k_ch, 1, 0)  # (n_chunks, B, C, Hkv, d)
+    v_ch = jnp.moveaxis(v_ch, 1, 0)
+
+    qpos = (jnp.arange(sq) + q_offset)[None, None, :, None]  # (1,1,Sq,1)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc_prev = carry
+        kc, vc, idx = inp
+        kc = _repeat_kv(kc, n_rep)
+        vc = _repeat_kv(vc, n_rep)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            kpos = (idx * chunk_size + jnp.arange(chunk_size))[None, None, None, :]
+            s = jnp.where(qpos >= kpos, s, -1e30)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), ()
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (k_ch, v_ch, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B,Sq,H,d)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_len: Optional[Array] = None) -> Array:
+    """Single-position decode: q (B,1,H,d) against KV cache (B,S,Hkv,d).
+
+    Memory-bound streaming read of the cache — the decode-roofline shape.
+    `cache_len` masks positions >= current length (None = full cache valid).
+    """
+    n_rep = q.shape[2] // k_cache.shape[2]
+    kc = _repeat_kv(k_cache, n_rep)
+    vc = _repeat_kv(v_cache, n_rep)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
+                   preferred_element_type=jnp.float32) * scale
+    if cache_len is not None:
+        mask = jnp.arange(k_cache.shape[1])[None, None, None, :] < cache_len[:, None, None, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), vc,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def decode_attention_partial(q: Array, k_shard: Array, v_shard: Array,
+                             valid: Optional[Array] = None
+                             ) -> tuple[Array, Array, Array]:
+    """Sequence-parallel flash-decode: each device computes a partial
+    softmax over its KV-sequence shard; caller combines with
+    `combine_partial_attention` after a psum/all-gather of (m, l, acc).
+
+    `valid`: (B, S_shard) bool mask — positions beyond the live cache
+    length must be excluded BEFORE the partial max/denominator.
+    Returns (m, l, acc): max-logit (B,H,1), denom (B,H,1), weighted sum
+    (B,H,1,d) — all in f32.
+    """
+    n_rep = q.shape[2] // k_shard.shape[2]
+    kc = _repeat_kv(k_shard, n_rep)
+    vc = _repeat_kv(v_shard, n_rep)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
+                   preferred_element_type=jnp.float32) * scale
+    if valid is not None:
+        s = jnp.where(valid[:, None, None, :], s, -1e30)
+    m = jnp.max(s, axis=-1)                       # (B,H,1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                       # (B,H,1)
+    acc = jnp.einsum("bhqk,bkhd->bhqd", p.astype(q.dtype), vc,
+                     preferred_element_type=jnp.float32)  # (B,H,1,d)
+    return m, l, acc
+
+
+def combine_partial_attention(m: Array, l: Array, acc: Array,
+                              axis_name: str) -> Array:
+    """Combine flash-decode partials across `axis_name` (SP combine)."""
+    m_glob = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * corr, axis_name)
+    acc_glob = jax.lax.psum(acc * corr[..., None], axis_name)
+    out = acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2)  # (B,1,H,d)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+
+
+def gated_mlp(x: Array, w_in: Array, w_out: Array, act: str = "swiglu") -> Array:
+    """Fused-gate MLP. w_in: (D, 2F) = [gate | up]; w_out: (F, D)."""
+    from repro.distributed.sharding import shard_act
+    h = x @ w_in
+    h = shard_act(h, "batch", "seq", "mlp")
+    gate, up = jnp.split(h, 2, axis=-1)
+    g32 = gate.astype(jnp.float32)
+    if act == "swiglu":
+        g = jax.nn.silu(g32)
+    elif act == "geglu":
+        g = jax.nn.gelu(g32, approximate=True)
+    else:
+        raise ValueError(f"unknown gated act {act}")
+    h = (g.astype(x.dtype)) * up
+    h = shard_act(h, "batch", "seq", "mlp")
+    return h @ w_out
+
+
+def mlp(x: Array, w_in: Array, w_out: Array, b_in: Optional[Array] = None,
+        b_out: Optional[Array] = None, act: str = "gelu") -> Array:
+    from repro.distributed.sharding import shard_act
+    h = x @ w_in
+    if b_in is not None:
+        h = h + b_in
+    h = shard_act(h, "batch", "seq", "mlp")
+    h32 = h.astype(jnp.float32)
+    if act == "gelu":
+        h = jax.nn.gelu(h32, approximate=True).astype(x.dtype)
+    elif act == "relu":
+        h = jax.nn.relu(h32).astype(x.dtype)
+    else:
+        raise ValueError(f"unknown act {act}")
+    out = h @ w_out
+    if b_out is not None:
+        out = out + b_out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Losses
+
+
+def softmax_xent(logits: Array, labels: Array, z_loss: float = 0.0,
+                 max_chunk_elems: float = 2.0**33) -> Array:
+    """Mean token cross-entropy; labels == -100 are masked out.
+
+    Large (B*S, V) logits are processed in sequence chunks (lax.scan) so
+    the f32 softmax working set stays bounded (~max_chunk_elems global
+    elements per chunk; /chips per device) — without this the xent region
+    dominates live memory at 256k-vocab x 4k-seq shapes."""
+    B, S, V = logits.shape
+
+    def piece(lg, lb):
+        lg = lg.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, jnp.maximum(lb, 0)[..., None],
+                                 axis=-1)[..., 0]
+        loss = lse - ll
+        if z_loss:
+            loss = loss + z_loss * jnp.square(lse)
+        mask = (lb >= 0).astype(jnp.float32)
+        return jnp.sum(loss * mask), jnp.sum(mask)
+
+    n_chunks = 1
+    while (B * S // n_chunks) * V > max_chunk_elems and \
+            S % (2 * n_chunks) == 0:
+        n_chunks *= 2
+    if n_chunks == 1:
+        s, m = piece(logits, labels)
+        return s / jnp.maximum(m, 1.0)
+
+    c = S // n_chunks
+    lg = jnp.moveaxis(logits.reshape(B, n_chunks, c, V), 1, 0)
+    lb = jnp.moveaxis(labels.reshape(B, n_chunks, c), 1, 0)
+
+    def body(carry, xs):
+        s, m = piece(*xs)
+        return (carry[0] + s, carry[1] + m), ()
+
+    (s, m), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                    jnp.zeros((), jnp.float32)), (lg, lb))
+    return s / jnp.maximum(m, 1.0)
+
+
+def init_dense(key: Array, shape: tuple, scale: Optional[float] = None,
+               dtype=jnp.bfloat16) -> Array:
+    """Truncated-normal init, fan-in scaled by default."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[-2] if len(shape) >= 2 else shape[-1])
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)

@@ -1,0 +1,102 @@
+"""Unified model interface: `build_model(cfg)` returns a ModelDef with
+init / loss / forward / prefill / decode plus ShapeDtypeStruct factories
+(`param_specs`, `input_specs`) used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import hybrid as hybrid_lib
+from repro.models import transformer as tfm
+
+
+class ModelDef(NamedTuple):
+    cfg: ArchConfig
+    init: Callable            # (key) -> params
+    param_specs: Callable     # () -> ShapeDtypeStruct pytree
+    loss_fn: Callable         # (params, batch) -> (loss, metrics)
+    forward: Callable         # (params, tokens, **kw) -> logits[, aux]
+    prefill: Callable         # (params, tokens, max_seq, **kw) -> (logits, cache, len)
+    decode_step: Callable     # (params, token, cache, len) -> (logits, cache, len)
+    cache_specs: Callable     # (batch, max_seq) -> ShapeDtypeStruct pytree
+    input_specs: Callable     # (ShapeConfig) -> dict of ShapeDtypeStructs
+
+
+def build_model(cfg: ArchConfig, opts: tfm.TrainOptions = tfm.DEFAULT_OPTS
+                ) -> ModelDef:
+    if cfg.family in ("ssm", "hybrid"):
+        mod = hybrid_lib
+    else:
+        mod = tfm
+
+    def init(key):
+        return mod.init_params(key, cfg)
+
+    def param_specs():
+        return mod.param_specs(cfg)
+
+    def loss_fn(params, batch):
+        return mod.loss_fn(params, batch, cfg, opts)
+
+    def forward(params, tokens, **kw):
+        return mod.forward(params, tokens, cfg, opts, **kw)
+
+    def prefill(params, tokens, max_seq, **kw):
+        return mod.prefill(params, tokens, cfg, max_seq, opts, **kw)
+
+    def decode_step(params, token, cache, cache_len):
+        return mod.decode_step(params, token, cache, cache_len, cfg, opts)
+
+    def cache_specs(batch, max_seq):
+        return mod.cache_specs(cfg, batch, max_seq)
+
+    def input_specs(shape: ShapeConfig):
+        return make_input_specs(cfg, shape)
+
+    return ModelDef(cfg, init, param_specs, loss_fn, forward, prefill,
+                    decode_step, cache_specs, input_specs)
+
+
+def make_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a cell.
+
+    train/prefill: token batch (+ stub modality embeddings).
+    decode: one new token + the KV/SSM cache at seq_len (serve_step).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {
+            "tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32),
+        }
+        _add_modality(specs, cfg, B, S)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), jnp.int32)}
+        _add_modality(specs, cfg, B, S)
+        return specs
+    # decode: serve_step(token, cache, cache_len)
+    if cfg.family in ("ssm", "hybrid"):
+        cache = hybrid_lib.cache_specs(cfg, B, S)
+    else:
+        cache = tfm.cache_specs(cfg, B, S)
+    return {
+        "token": sds((B, 1), jnp.int32),
+        "cache": cache,
+        "cache_len": sds((B,), jnp.int32),
+    }
+
+
+def _add_modality(specs: dict, cfg: ArchConfig, B: int, S: int) -> None:
+    sds = jax.ShapeDtypeStruct
+    if cfg.encdec is not None:
+        specs["frame_embeds"] = sds(
+            (B, cfg.encdec.enc_seq_len, cfg.d_model), jnp.bfloat16)
+    if cfg.vlm is not None:
+        specs["patch_embeds"] = sds(
+            (B, min(cfg.vlm.n_patches, S), cfg.vlm.patch_dim), jnp.bfloat16)

@@ -1,0 +1,209 @@
+"""Mixture-of-Experts block: top-k router, capacity-bounded sort dispatch,
+grouped matmul via `jax.lax.ragged_dot`, expert parallelism over the
+"expert" (= "model") mesh axis.
+
+Baseline EP strategy ("psum-EP", paper-faithful infra): tokens stay
+replicated across the EP axis (they already are after the attention
+all-reduce); each EP rank computes *only its local experts* on the tokens
+routed to them (static capacity slice after a stable sort), then a single
+all-reduce combines expert outputs. One collective per MoE layer, fully
+static shapes, honest capacity-factor FLOPs.
+
+The a2a-dispatch variant (less collective traffic for small top-k) is a
+§Perf hillclimb item — see telemetry/roofline presets and EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import current_rules, shard_act
+from repro.models import layers as L
+
+Array = jax.Array
+
+
+def init_moe_params(key: Array, cfg: ArchConfig, n_layers: int) -> dict:
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.expert_d_ff
+    ks = jax.random.split(key, 5)
+    out = {
+        "router": L.init_dense(ks[0], (n_layers, D, E), scale=0.02,
+                               dtype=jnp.float32),
+        "expert_in": L.init_dense(ks[1], (n_layers, E, D, 2 * F)),
+        "expert_out": L.init_dense(ks[2], (n_layers, E, F, D)),
+    }
+    extra_ff = 0
+    if m.dense_residual_d_ff:
+        extra_ff = m.dense_residual_d_ff
+    elif m.n_shared_experts:
+        extra_ff = m.n_shared_experts * F
+    if extra_ff:
+        out["w_in2"] = L.init_dense(ks[3], (n_layers, D, 2 * extra_ff))
+        out["w_out2"] = L.init_dense(ks[4], (n_layers, extra_ff, D))
+    return out
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _route(x_flat: Array, router_w: Array, top_k: int):
+    """Returns (top-k ids (T,k), normalized weights (T,k), aux loss scalar)."""
+    logits = x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing aux: E * sum_e f_e * P_e
+    E = router_w.shape[-1]
+    f = jnp.mean(jax.nn.one_hot(top_ids, E, dtype=jnp.float32), axis=(0, 1))
+    p = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * p)
+    return top_ids, top_w, aux
+
+
+def _local_expert_ffn(x_flat: Array, router_w: Array, w_in_loc: Array,
+                      w_out_loc: Array, rank, n_ranks: int, top_k: int,
+                      capacity_factor: float, act: str):
+    """Per-EP-rank MoE computation on locally-owned experts.
+
+    x_flat: (T, D) tokens (replicated across EP); w_in_loc: (E_loc, D, 2F).
+    Returns (partial output (T, D) — sum over EP ranks gives the MoE out,
+    aux loss scalar).
+    """
+    T, D = x_flat.shape
+    E_loc = w_in_loc.shape[0]
+    E = E_loc * n_ranks
+    top_ids, top_w, aux = _route(x_flat, router_w, top_k)
+
+    flat_ids = top_ids.reshape(-1)                        # (T*k,)
+    flat_w = top_w.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), top_k)
+
+    e0 = rank * E_loc
+    local = (flat_ids >= e0) & (flat_ids < e0 + E_loc)
+    # stable sort pushing non-local entries to the end
+    sort_key = jnp.where(local, flat_ids, E)
+    order = jnp.argsort(sort_key, stable=True)
+    C = _round_up(max(int(math.ceil(T * top_k * capacity_factor / n_ranks)), 8), 8)
+    C = min(C, T * top_k)
+    sel = order[:C]                                       # static slice
+    sel_ids = flat_ids[sel]
+    sel_valid = local[sel]
+    sel_tok = flat_tok[sel]
+    sel_w = jnp.where(sel_valid, flat_w[sel], 0.0)
+
+    group_sizes = jnp.bincount(
+        jnp.where(sel_valid, sel_ids - e0, E_loc), length=E_loc + 1)[:E_loc]
+    group_sizes = group_sizes.astype(jnp.int32)
+    # fold padding rows into the last group: they compute garbage with the
+    # last local expert but are zeroed by sel_w below (keeps ragged_dot's
+    # group sizes summing to C, which some lowerings require)
+    group_sizes = group_sizes.at[-1].add(C - jnp.sum(group_sizes))
+
+    x_sel = x_flat[sel_tok]                               # (C, D) gather
+    h = jax.lax.ragged_dot(x_sel, w_in_loc, group_sizes)  # (C, 2F)
+    gate, up = jnp.split(h, 2, axis=-1)
+    g32 = gate.astype(jnp.float32)
+    g = jax.nn.silu(g32) if act == "swiglu" else jax.nn.gelu(g32, approximate=True)
+    h = (g.astype(h.dtype) * up)
+    y_sel = jax.lax.ragged_dot(h, w_out_loc, group_sizes)  # (C, D)
+    y_sel = y_sel * sel_w[:, None].astype(y_sel.dtype)
+
+    out = jnp.zeros((T, D), y_sel.dtype).at[sel_tok].add(
+        jnp.where(sel_valid[:, None], y_sel, 0))
+    return out, aux
+
+
+def moe_block(x: Array, lp: dict, cfg: ArchConfig) -> tuple[Array, Array]:
+    """MoE FFN for one layer. x: (B, S, D). Returns (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    rules = current_rules()
+    ep_ax = rules.axis("expert") if (rules and rules.mesh is not None) else None
+
+    # dense residual (arctic) / shared experts (kimi): plain TP MLP, GSPMD
+    extra = None
+    if "w_in2" in lp:
+        extra = L.gated_mlp(x, lp["w_in2"], lp["w_out2"],
+                            act=cfg.act if cfg.act in ("swiglu", "geglu")
+                            else "swiglu")
+        extra = shard_act(extra, "batch", "seq", "embed")
+
+    x_flat = x.reshape(B * S, D)
+
+    if ep_ax is None:
+        y, aux = _local_expert_ffn(
+            x_flat, lp["router"], lp["expert_in"], lp["expert_out"],
+            rank=0, n_ranks=1, top_k=m.top_k,
+            capacity_factor=m.capacity_factor, act=cfg.act)
+    else:
+        mesh = rules.mesh
+        batch_ax = rules.axis("batch")
+        n_ranks = mesh.shape[ep_ax] if isinstance(ep_ax, str) else \
+            math.prod(mesh.shape[a] for a in ep_ax)
+
+        def per_rank(xf, router_w, w_in, w_out):
+            r = jax.lax.axis_index(ep_ax)
+            y, aux = _local_expert_ffn(
+                xf, router_w, w_in, w_out, rank=r, n_ranks=n_ranks,
+                top_k=m.top_k, capacity_factor=m.capacity_factor, act=cfg.act)
+            y = jax.lax.psum(y, ep_ax)
+            aux_axes = tuple(a for a in (batch_ax if isinstance(batch_ax, tuple)
+                                         else (batch_ax,)) if a)
+            if aux_axes:
+                aux = jax.lax.pmean(aux, aux_axes)
+            return y, aux
+
+        xf2 = x_flat.reshape(B, S * D)  # shard tokens by batch axis only
+        y, aux = jax.shard_map(
+            lambda xf, rw, wi, wo: per_rank(
+                xf.reshape(-1, D), rw, wi, wo),
+            mesh=mesh,
+            in_specs=(P(batch_ax, None), P(None, None),
+                      P(ep_ax, None, None), P(ep_ax, None, None)),
+            out_specs=(P(batch_ax, None), P()),
+        )(xf2, lp["router"], lp["expert_in"], lp["expert_out"])
+        y = y.reshape(B * S, D)
+
+    y = y.reshape(B, S, D)
+    if extra is not None:
+        y = y + extra
+    y = shard_act(y, "batch", "seq", "embed")
+    return y, aux
+
+
+def dense_reference_moe(x: Array, lp: dict, cfg: ArchConfig) -> Array:
+    """O(T·E) dense-dispatch oracle for tests (no capacity drops)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    x_flat = x.reshape(-1, D)
+    logits = x_flat.astype(jnp.float32) @ lp["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    E = m.n_experts
+    w_full = jnp.zeros((x_flat.shape[0], E), jnp.float32)
+    w_full = jax.vmap(lambda w, i, row: row.at[i].set(w))(top_w, top_ids, w_full)
+
+    def one_expert(w_in, w_out):
+        h = x_flat @ w_in
+        gate, up = jnp.split(h, 2, axis=-1)
+        g32 = gate.astype(jnp.float32)
+        g = jax.nn.silu(g32) if cfg.act == "swiglu" else \
+            jax.nn.gelu(g32, approximate=True)
+        return (g.astype(h.dtype) * up) @ w_out
+    ys = jax.vmap(one_expert)(lp["expert_in"], lp["expert_out"])  # (E, T, D)
+    y = jnp.einsum("te,etd->td", w_full, ys.astype(jnp.float32))
+    out = y.reshape(B, S, D).astype(x.dtype)
+    if "w_in2" in lp:
+        out = out + L.gated_mlp(x, lp["w_in2"], lp["w_out2"],
+                                act=cfg.act if cfg.act in ("swiglu", "geglu")
+                                else "swiglu")
+    return out

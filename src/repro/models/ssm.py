@@ -1,0 +1,334 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD), in
+chunked-parallel form for training/prefill and O(1)-state recurrence for
+decode. These are the sub-quadratic backbones for the `long_500k` cells.
+
+Numerical note (DESIGN.md §Arch-adaptation): chunked linear attention with
+data-dependent decay computes within-chunk decay ratios exp(logP_t - logP_a)
+in f32. We use chunk=32 with per-step log-decay clamped to >= -2.75 and a
+chunk-midpoint shift, keeping every intermediate within exp(+-44) (f32 max
+~ exp(88)). A decay below e^-2.75 ~ 0.064/step zeroes contributions within
+2-3 tokens, so the clamp is numerically invisible; the same trick is used
+for Mamba2's scalar per-head decay.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_act
+from repro.models import layers as L
+
+Array = jax.Array
+
+_LOGW_MIN = -2.75
+_CHUNK = 32
+
+# ===========================================================================
+# RWKV6 (Finch)
+
+
+def init_rwkv_layer_params(key: Array, cfg: ArchConfig, n_layers: int) -> dict:
+    D = cfg.d_model
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    F = cfg.d_ff
+    lora = 64
+    ks = jax.random.split(key, 10)
+    lp = {
+        # time-mix
+        "mu": jnp.full((n_layers, 5, D), 0.5, jnp.bfloat16),   # r,k,v,w,g lerps
+        "w_rkvg": L.init_dense(ks[0], (n_layers, D, 4 * H * hd)),
+        "wo": L.init_dense(ks[1], (n_layers, H * hd, D)),
+        "w0": jnp.full((n_layers, D), -1.0, jnp.float32),       # base log-log decay
+        "w_decay_a": L.init_dense(ks[2], (n_layers, D, lora), scale=0.01),
+        "w_decay_b": L.init_dense(ks[3], (n_layers, lora, D), scale=0.01),
+        "u_bonus": jnp.zeros((n_layers, H, hd), jnp.float32),
+        "ln_attn": jnp.zeros((n_layers, D), jnp.bfloat16),
+        "lnb_attn": jnp.zeros((n_layers, D), jnp.bfloat16),
+        "ln_wkv": jnp.ones((n_layers, H, hd), jnp.float32),     # per-head groupnorm
+        # channel-mix
+        "mu_cm": jnp.full((n_layers, 2, D), 0.5, jnp.bfloat16),
+        "w_in": L.init_dense(ks[4], (n_layers, D, F)),
+        "w_out": L.init_dense(ks[5], (n_layers, F, D)),
+        "w_cm_r": L.init_dense(ks[6], (n_layers, D, D)),
+        "ln_mlp": jnp.zeros((n_layers, D), jnp.bfloat16),
+        "lnb_mlp": jnp.zeros((n_layers, D), jnp.bfloat16),
+    }
+    return lp
+
+
+def _token_shift(x: Array, x_prev: Optional[Array] = None) -> Array:
+    """Shift sequence right by one; x_prev fills position 0 (decode carry)."""
+    if x_prev is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = x_prev[:, None, :]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _rwkv_decay(xw: Array, lp: dict) -> Array:
+    """Data-dependent per-channel log-decay, clamped. Returns logw <= 0."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ lp["w_decay_a"].astype(jnp.float32)) \
+        @ lp["w_decay_b"].astype(jnp.float32)
+    loglog = lp["w0"] + lora                      # w = exp(-exp(loglog))
+    logw = -jnp.exp(loglog)
+    return jnp.clip(logw, _LOGW_MIN, -1e-6)
+
+
+def _wkv_chunk(r, k, v, logw, u, s_in):
+    """One chunk of the RWKV6 recurrence (per head, batched).
+
+    r,k,v: (B,H,C,hd); logw: (B,H,C,hd) per-key-channel log decay;
+    u: (H,hd); s_in: (B,H,hd,hd) [key x value]. Returns (o (B,H,C,hd), s_out).
+    """
+    C = r.shape[2]
+    logP = jnp.cumsum(logw, axis=2)                       # inclusive cumsum
+    logP_prev = logP - logw                               # exclusive
+    shift = logP[:, :, -1:, :] * 0.5                      # midpoint shift
+    r_s = r * jnp.exp(logP_prev - shift)                  # (B,H,C,hd)
+    k_s = k * jnp.exp(shift - logP)
+    # strict-lower intra-chunk attention
+    A = jnp.einsum("bhti,bhai->bhta", r_s, k_s)           # (B,H,C,C)
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    A = jnp.where(mask, A, 0.0)
+    diag = jnp.sum(r * u[None, :, None, :] * k, axis=-1)  # (B,H,C)
+    o = jnp.einsum("bhta,bhaj->bhtj", A, v)
+    o = o + diag[..., None] * v
+    # inter-chunk: state contribution
+    o = o + jnp.einsum("bhti,bhij->bhtj", r * jnp.exp(logP_prev), s_in)
+    # state update
+    decay_to_end = jnp.exp(logP[:, :, -1:, :] - logP)     # (B,H,C,hd)
+    s_out = s_in * jnp.exp(logP[:, :, -1, :, None]) + \
+        jnp.einsum("bhti,bhtj->bhij", k * decay_to_end, v)
+    return o, s_out
+
+
+def rwkv_time_mix(x: Array, lp: dict, cfg: ArchConfig,
+                  x_prev: Optional[Array] = None,
+                  state: Optional[Array] = None):
+    """RWKV6 time-mix over a full sequence (chunked).
+
+    Returns (out (B,S,D), last_x (B,D), new_state (B,H,hd,hd))."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    xs = _token_shift(x, x_prev)
+    mu = lp["mu"]
+    xr, xk, xv, xw, xg = (x * mu[i] + xs * (1 - mu[i]) for i in range(5))
+    rkvg = jnp.concatenate([xr, xk, xv, xg], axis=-1)
+    # fused projection (block-diagonal application of the 4 sub-matrices)
+    rkvg = _fused_rkvg(rkvg, lp["w_rkvg"], D, H * hd)
+    r, k, v, g = jnp.split(rkvg, 4, axis=-1)
+    g = jax.nn.silu(g.astype(jnp.float32))
+    logw = _rwkv_decay(xw, lp)                            # (B,S,D)
+
+    def heads(t):  # (B,S,H*hd) -> (B,H,S,hd)
+        return jnp.moveaxis(t.reshape(B, S, H, hd), 2, 1)
+    r_, k_, v_, w_ = map(heads, (r.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32), logw))
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    chunk = min(_CHUNK, S)
+    n_chunks = S // chunk if S % chunk == 0 else 1
+    if S % chunk != 0:
+        chunk = S
+        n_chunks = 1
+
+    def body(s, inp):
+        rc, kc, vc, wc = inp
+        o, s_new = _wkv_chunk(rc, kc, vc, wc, lp["u_bonus"], s)
+        return s_new, o
+
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(B, H, n_chunks, chunk, hd), 2, 0)       # (n,B,H,C,hd)
+    s_final, o = jax.lax.scan(body, state, tuple(map(resh, (r_, k_, v_, w_))))
+    o = jnp.moveaxis(o, 0, 2).reshape(B, H, S, hd)        # (B,H,S,hd)
+    # per-head groupnorm
+    o = o * jax.lax.rsqrt(jnp.mean(jnp.square(o), axis=-1, keepdims=True) + 1e-5)
+    o = o * lp["ln_wkv"][None, :, None, :]
+    o = jnp.moveaxis(o, 1, 2).reshape(B, S, H * hd)
+    out = ((o * g).astype(jnp.bfloat16)) @ lp["wo"]
+    return shard_act(out, "batch", "seq", "embed"), x[:, -1], s_final
+
+
+def _fused_rkvg(x4: Array, w: Array, D: int, out: int) -> Array:
+    """Apply 4 stacked (D,out) blocks of w (D, 4*out) to the 4 slices of
+    x4 (..., 4*D) block-diagonally."""
+    xr, xk, xv, xg = jnp.split(x4, 4, axis=-1)
+    wr, wk, wv, wg = jnp.split(w, 4, axis=-1)
+    return jnp.concatenate(
+        [xr @ wr, xk @ wk, xv @ wv, xg @ wg], axis=-1)
+
+
+def rwkv_channel_mix(x: Array, lp: dict, x_prev: Optional[Array] = None):
+    xs = _token_shift(x, x_prev)
+    mu = lp["mu_cm"]
+    xk = x * mu[0] + xs * (1 - mu[0])
+    xr = x * mu[1] + xs * (1 - mu[1])
+    k = jnp.square(jax.nn.relu((xk @ lp["w_in"]).astype(jnp.float32)))
+    r = jax.nn.sigmoid((xr @ lp["w_cm_r"]).astype(jnp.float32))
+    out = (r * (k.astype(jnp.bfloat16) @ lp["w_out"]).astype(jnp.float32))
+    return shard_act(out.astype(x.dtype), "batch", "seq", "embed"), x[:, -1]
+
+
+def rwkv_block(h: Array, lp: dict, cfg: ArchConfig, carry=None):
+    """Full RWKV6 layer. carry = (x_prev_tm, x_prev_cm, wkv_state) or None."""
+    tm_prev = cm_prev = st = None
+    if carry is not None:
+        tm_prev, cm_prev, st = carry
+    x = L.layer_norm(h, lp["ln_attn"], lp["lnb_attn"])
+    dx, tm_last, st_new = rwkv_time_mix(x, lp, cfg, tm_prev, st)
+    h = h + dx
+    x = L.layer_norm(h, lp["ln_mlp"], lp["lnb_mlp"])
+    dx, cm_last = rwkv_channel_mix(x, lp, cm_prev)
+    h = h + dx
+    return h, (tm_last, cm_last, st_new)
+
+
+def rwkv_state_specs(cfg: ArchConfig, batch: int):
+    H, hd, D = cfg.n_heads, cfg.resolved_head_dim, cfg.d_model
+    n = cfg.n_layers
+    return (
+        jax.ShapeDtypeStruct((n, batch, D), jnp.bfloat16),      # tm shift
+        jax.ShapeDtypeStruct((n, batch, D), jnp.bfloat16),      # cm shift
+        jax.ShapeDtypeStruct((n, batch, H, hd, hd), jnp.float32),
+    )
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+
+
+def init_mamba_layer_params(key: Array, cfg: ArchConfig, n_layers: int) -> dict:
+    D = cfg.d_model
+    s = cfg.ssm
+    d_inner = int(D * s.d_inner_mult)
+    N = s.d_state
+    P = 64                               # head channel width
+    H = d_inner // P
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": L.init_dense(ks[0], (n_layers, D, 2 * d_inner)),   # [z | x]
+        "w_bcdt": L.init_dense(ks[1], (n_layers, D, 2 * N + H)),      # B,C,dt
+        "conv_w": L.init_dense(ks[2], (n_layers, s.conv_kernel, d_inner),
+                               scale=0.5),
+        "conv_b": jnp.zeros((n_layers, d_inner), jnp.bfloat16),
+        "A_log": jnp.zeros((n_layers, H), jnp.float32),
+        "D_skip": jnp.ones((n_layers, H), jnp.float32),
+        "dt_bias": jnp.zeros((n_layers, H), jnp.float32),
+        "ln_attn": jnp.zeros((n_layers, D), jnp.bfloat16),
+        "ln_ssm": jnp.ones((n_layers, d_inner), jnp.float32),
+        "out_proj": L.init_dense(ks[3], (n_layers, d_inner, D)),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array,
+                 x_prev: Optional[Array] = None):
+    """Depthwise causal conv, width K. x: (B,S,C); w: (K,C).
+    x_prev: (B,K-1,C) carry for decode. Returns (y, new_carry)."""
+    K = w.shape[0]
+    if x_prev is None:
+        x_prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([x_prev, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), xp[:, -(K - 1):]
+
+
+def _ssd_chunk(xh, Bc, Cc, loga, s_in):
+    """One SSD chunk. xh: (B,H,C,P) inputs (already Δ-scaled);
+    Bc,Cc: (B,C,N); loga: (B,H,C) per-head log decay; s_in: (B,H,N,P)."""
+    Cn = xh.shape[2]
+    logA = jnp.cumsum(loga, axis=2)                       # (B,H,C) inclusive
+    shift = logA[:, :, -1:] * 0.5
+    # y_t contribution of x_a (a <= t): C_t . prod_{s=a+1..t} a_s . B_a x_a
+    # (state decays BEFORE the input enters: inclusive logA on the C side)
+    C_s = Cc[:, None] * jnp.exp(logA - shift)[..., None]        # (B,H,C,N)
+    B_s = Bc[:, None] * jnp.exp(shift - logA)[..., None]
+    Amat = jnp.einsum("bhtn,bhan->bhta", C_s, B_s)
+    mask = jnp.tril(jnp.ones((Cn, Cn), bool))             # inclusive diag
+    Amat = jnp.where(mask, Amat, 0.0)
+    y = jnp.einsum("bhta,bhap->bhtp", Amat, xh)
+    # inter-chunk: s_in decays by prod_{1..t} before being read at t
+    y = y + jnp.einsum("bhtn,bhnp->bhtp",
+                       Cc[:, None] * jnp.exp(logA)[..., None], s_in)
+    decay_to_end = jnp.exp(logA[:, :, -1:] - logA)        # (B,H,C)
+    s_out = s_in * jnp.exp(logA[:, :, -1])[..., None, None] + \
+        jnp.einsum("bhtn,bhtp->bhnp",
+                   Bc[:, None] * decay_to_end[..., None], xh)
+    return y, s_out
+
+
+def mamba_mix(x: Array, lp: dict, cfg: ArchConfig, carry=None):
+    """Mamba2 mixer over a sequence. Returns (out, new_carry).
+    carry = (conv_state (B,K-1,d_inner), ssm_state (B,H,N,P))."""
+    B, S, D = x.shape
+    s = cfg.ssm
+    d_inner = int(D * s.d_inner_mult)
+    N = s.d_state
+    P = 64
+    H = d_inner // P
+    conv_prev = ssm_prev = None
+    if carry is not None:
+        conv_prev, ssm_prev = carry
+
+    zx = x @ lp["in_proj"]
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bcdt = (x @ lp["w_bcdt"]).astype(jnp.float32)
+    Bc, Cc, dt = jnp.split(bcdt, [N, 2 * N], axis=-1)     # (B,S,N),(B,S,N),(B,S,H)
+    xin, conv_new = _causal_conv(xin, lp["conv_w"], lp["conv_b"], conv_prev)
+
+    delta = jax.nn.softplus(dt + lp["dt_bias"])           # (B,S,H)
+    A = jnp.exp(lp["A_log"])                              # (H,) > 0
+    loga = jnp.clip(-delta * A, _LOGW_MIN, -1e-6)         # (B,S,H)
+
+    xh = jnp.moveaxis(xin.reshape(B, S, H, P), 2, 1).astype(jnp.float32)
+    xh = xh * jnp.moveaxis(delta, -1, 1)[..., None]       # Δ-scaled input
+    loga_h = jnp.moveaxis(loga, -1, 1)                    # (B,H,S)
+
+    if ssm_prev is None:
+        ssm_prev = jnp.zeros((B, H, N, P), jnp.float32)
+
+    chunk = min(_CHUNK, S)
+    if S % chunk != 0:
+        chunk = S
+    n_chunks = S // chunk
+
+    def body(st, inp):
+        xc, bc, cc, ac = inp
+        y, st_new = _ssd_chunk(xc, bc, cc, ac, st)
+        return st_new, y
+
+    xh_c = jnp.moveaxis(xh.reshape(B, H, n_chunks, chunk, P), 2, 0)
+    B_c = jnp.moveaxis(Bc.reshape(B, n_chunks, chunk, N), 1, 0)
+    C_c = jnp.moveaxis(Cc.reshape(B, n_chunks, chunk, N), 1, 0)
+    a_c = jnp.moveaxis(loga_h.reshape(B, H, n_chunks, chunk), 2, 0)
+    st_final, y = jax.lax.scan(body, ssm_prev, (xh_c, B_c, C_c, a_c))
+    y = jnp.moveaxis(y, 0, 2).reshape(B, H, S, P)
+    y = y + lp["D_skip"][None, :, None, None] * xh        # skip
+    y = jnp.moveaxis(y, 1, 2).reshape(B, S, d_inner)
+    # gated RMS norm
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = y * lp["ln_ssm"]
+    out = y.astype(jnp.bfloat16) @ lp["out_proj"]
+    return shard_act(out, "batch", "seq", "embed"), (conv_new, st_final)
+
+
+def mamba_block(h: Array, lp: dict, cfg: ArchConfig, carry=None):
+    x = L.rms_norm(h, lp["ln_attn"])
+    dx, new_carry = mamba_mix(x, lp, cfg, carry)
+    return h + dx, new_carry
+
+
+def mamba_state_specs(cfg: ArchConfig, batch: int, n_layers: int):
+    s = cfg.ssm
+    d_inner = int(cfg.d_model * s.d_inner_mult)
+    H = d_inner // 64
+    return (
+        jax.ShapeDtypeStruct((n_layers, batch, s.conv_kernel - 1, d_inner),
+                             jnp.bfloat16),
+        jax.ShapeDtypeStruct((n_layers, batch, H, s.d_state, 64), jnp.float32),
+    )

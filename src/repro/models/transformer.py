@@ -1,0 +1,534 @@
+"""Decoder-only and encoder-decoder transformer families.
+
+Parameters are plain nested dicts; per-layer weights are stacked on a
+leading L axis and consumed with `lax.scan` (keeps HLO size and compile
+time independent of depth — required for the 61-layer / 512-device
+dry-runs). Weight layout is (in, out): ZenFlow channels are rows.
+
+Modes:
+  forward(...)            — full-sequence teacher-forced logits (train / prefill)
+  prefill(...)            — forward + KV-cache emission
+  decode_step(...)        — one token against a KV cache (serve_step)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard_act, current_rules, attn_strategy
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class TrainOptions:
+    remat: str = "dots"          # "none" | "dots" | "full"
+    attn_chunk: int = 1024       # flash-attention KV chunk
+    use_flash: bool = True       # chunked online-softmax attention
+    scan_layers: bool = True
+
+
+DEFAULT_OPTS = TrainOptions()
+
+
+def _remat_wrap(fn, opts: TrainOptions):
+    if opts.remat == "none":
+        return fn
+    if opts.remat == "full":
+        return jax.checkpoint(fn)
+    policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+
+
+def _layer_param_shapes(cfg: ArchConfig) -> dict:
+    D, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    gated = cfg.act in ("swiglu", "geglu")
+    shapes = {
+        "wq": (D, H * hd),
+        "wkv": (D, 2 * Hkv * hd),
+        "wo": (H * hd, D),
+        "ln_attn": (D,),
+        "ln_mlp": (D,),
+    }
+    if cfg.moe is None:
+        shapes["w_in"] = (D, 2 * cfg.d_ff) if gated else (D, cfg.d_ff)
+        shapes["w_out"] = (cfg.d_ff, D)
+    if cfg.qk_norm:
+        shapes["q_norm"] = (hd,)
+        shapes["k_norm"] = (hd,)
+    if cfg.attn_bias:
+        shapes["b_q"] = (H * hd,)
+        shapes["b_kv"] = (2 * Hkv * hd,)
+        shapes["b_o"] = (D,)
+    if cfg.mlp_bias and cfg.moe is None:
+        shapes["b_in"] = (shapes["w_in"][1],)
+        shapes["b_out"] = (D,)
+    if cfg.norm == "layernorm":
+        shapes["lnb_attn"] = (D,)
+        shapes["lnb_mlp"] = (D,)
+    return shapes
+
+
+def _stack_layer_params(key: Array, cfg: ArchConfig, n_layers: int) -> dict:
+    shapes = _layer_param_shapes(cfg)
+    out = {}
+    keys = jax.random.split(key, len(shapes))
+    for k, (name, shp) in zip(keys, sorted(shapes.items())):
+        full = (n_layers,) + shp
+        if len(shp) == 1:
+            out[name] = jnp.zeros(full, jnp.bfloat16)
+        else:
+            out[name] = L.init_dense(k, full)
+    if cfg.moe is not None:
+        out.update(moe_lib.init_moe_params(key, cfg, n_layers))
+    return out
+
+
+def init_params(key: Array, cfg: ArchConfig) -> dict:
+    k_emb, k_lyr, k_enc, k_misc = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embedding": L.init_dense(k_emb, (cfg.vocab, cfg.d_model), scale=0.02),
+        "ln_final": jnp.zeros((cfg.d_model,), jnp.bfloat16),
+        "layers": _stack_layer_params(k_lyr, cfg, cfg.n_layers),
+    }
+    if cfg.norm == "layernorm":
+        params["lnb_final"] = jnp.zeros((cfg.d_model,), jnp.bfloat16)
+    if not cfg.tie_embeddings:
+        params["w_lm_head"] = L.init_dense(k_misc, (cfg.d_model, cfg.vocab), scale=0.02)
+    if cfg.pos_embedding == "learned":
+        params["pos_embedding"] = L.init_dense(
+            k_misc, (cfg.max_pos, cfg.d_model), scale=0.02)
+    if cfg.encdec is not None:
+        params["encoder"] = _init_encoder(k_enc, cfg)
+        # cross-attention weights live alongside decoder self-attn
+        dec = params["layers"]
+        D, H, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+        kx = jax.random.split(k_enc, 4)
+        dec["wq2"] = L.init_dense(kx[0], (cfg.n_layers, D, H * hd))
+        dec["wkv2"] = L.init_dense(kx[1], (cfg.n_layers, D, 2 * cfg.n_kv_heads * hd))
+        dec["wo2"] = L.init_dense(kx[2], (cfg.n_layers, H * hd, D))
+        dec["ln_cross"] = jnp.zeros((cfg.n_layers, D), jnp.bfloat16)
+        if cfg.norm == "layernorm":
+            dec["lnb_cross"] = jnp.zeros((cfg.n_layers, D), jnp.bfloat16)
+    if cfg.vlm is not None:
+        params["w_patch"] = L.init_dense(
+            k_misc, (cfg.vlm.patch_dim, cfg.d_model))
+    return params
+
+
+def _init_encoder(key: Array, cfg: ArchConfig) -> dict:
+    n = cfg.encdec.n_enc_layers
+    enc = _stack_layer_params(key, cfg, n)
+    out = {"layers": enc, "ln_final": jnp.zeros((cfg.d_model,), jnp.bfloat16)}
+    if cfg.norm == "layernorm":
+        out["lnb_final"] = jnp.zeros((cfg.d_model,), jnp.bfloat16)
+    out["pos_embedding"] = L.init_dense(
+        key, (cfg.encdec.enc_seq_len, cfg.d_model), scale=0.02)
+    return out
+
+
+def param_specs(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+
+
+def _norm(x, scale, bias, cfg):
+    if cfg.norm == "layernorm":
+        return L.layer_norm(x, scale, bias)
+    return L.rms_norm(x, scale)
+
+
+def _project_qkv(x, p, cfg, prefix=""):
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b, s, _ = x.shape
+    wq, wkv = p["wq" + prefix], p["wkv" + prefix]
+    q = x @ wq
+    kv = x @ wkv
+    if cfg.attn_bias and not prefix:
+        q = q + p["b_q"]
+        kv = kv + p["b_kv"]
+    q = q.reshape(b, s, H, hd)
+    k, v = jnp.split(kv.reshape(b, s, 2 * Hkv, hd), 2, axis=2)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+        k = L.rms_norm(k, p["k_norm"])
+    strat = attn_strategy(H, s)
+    if strat == "heads":
+        q = shard_act(q, "batch", "seq", "heads", "head_dim")
+        k = shard_act(k, "batch", "seq", "kv_heads", "head_dim")
+        v = shard_act(v, "batch", "seq", "kv_heads", "head_dim")
+    elif strat == "batch":
+        # pure-DP attention: batch spans the model axis already
+        q = shard_act(q, "batch", "seq", None, None)
+        k = shard_act(k, "batch", "seq", None, None)
+        v = shard_act(v, "batch", "seq", None, None)
+    elif strat == "seq":
+        # sequence-parallel attention (odd head counts): q/scores/ctx
+        # sharded on seq over the model axis; kv replicated (GQA -> small)
+        q = shard_act(q, "batch", "mlp", None, None)
+        k = shard_act(k, "batch", None, None, None)
+        v = shard_act(v, "batch", None, None, None)
+    return q, k, v
+
+
+def _attn_out(ctx, p, cfg, prefix=""):
+    b, s = ctx.shape[:2]
+    out = ctx.reshape(b, s, -1) @ p["wo" + prefix]
+    if cfg.attn_bias and not prefix:
+        out = out + p["b_o"]
+    return shard_act(out, "batch", "seq", "embed")
+
+
+def _mlp_block(x, p, cfg):
+    """Returns (out, aux_loss)."""
+    if cfg.moe is not None:
+        return moe_lib.moe_block(x, p, cfg)
+    if cfg.act in ("swiglu", "geglu"):
+        h = L.gated_mlp(x, p["w_in"], p["w_out"], act=cfg.act)
+    else:
+        h = L.mlp(x, p["w_in"], p["w_out"], p.get("b_in"), p.get("b_out"),
+                  act=cfg.act)
+    return shard_act(h, "batch", "seq", "embed"), jnp.zeros((), jnp.float32)
+
+
+def _decoder_block(h, lp, cfg, opts, positions, enc_out=None, causal=True):
+    """One transformer block (full-sequence). Returns (h, (k, v), aux)."""
+    x = _norm(h, lp["ln_attn"], lp.get("lnb_attn"), cfg)
+    q, k, v = _project_qkv(x, lp, cfg)
+    if cfg.pos_embedding == "rope":
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    if opts.use_flash and k.shape[1] > opts.attn_chunk:
+        ctx = L.flash_attention(q, k, v, causal=causal, chunk_size=opts.attn_chunk)
+    else:
+        ctx = L.full_attention(q, k, v, causal=causal)
+    h = h + _attn_out(ctx, lp, cfg)
+    if enc_out is not None:
+        xq = _norm(h, lp["ln_cross"], lp.get("lnb_cross"), cfg)
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        b, s, _ = xq.shape
+        qc = (xq @ lp["wq2"]).reshape(b, s, H, hd)
+        kvc = (enc_out @ lp["wkv2"]).reshape(b, enc_out.shape[1], 2 * cfg.n_kv_heads, hd)
+        kc, vc = jnp.split(kvc, 2, axis=2)
+        ctx2 = L.full_attention(qc, kc, vc, causal=False)
+        h = h + _attn_out(ctx2, lp, cfg, prefix="2")
+    x = _norm(h, lp["ln_mlp"], lp.get("lnb_mlp"), cfg)
+    dx, aux = _mlp_block(x, lp, cfg)
+    h = h + dx
+    h = shard_act(h, "batch", "seq", "embed")
+    return h, (k, v), aux
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+
+
+def embed_inputs(params, tokens, cfg, patch_embeds=None, pos_offset=None):
+    emb = params["embedding"]
+    h = emb[tokens].astype(jnp.bfloat16)
+    if cfg.name.startswith("gemma"):
+        h = h * math.sqrt(cfg.d_model)
+    if cfg.vlm is not None and patch_embeds is not None:
+        pe = patch_embeds.astype(jnp.bfloat16) @ params["w_patch"]
+        npatch = pe.shape[1]
+        h = jnp.concatenate([pe, h[:, npatch:, :]], axis=1)
+    if cfg.pos_embedding == "learned":
+        s = h.shape[1]
+        table = params["pos_embedding"]
+        if pos_offset is not None:
+            pe = table[(pos_offset[:, None] + jnp.arange(s)[None]) %
+                       table.shape[0]]
+            h = h + pe
+        else:
+            h = h + table[:s][None]
+    return shard_act(h, "batch", "seq", "embed")
+
+
+def _run_layers(h, layer_params, cfg, opts, positions, enc_out=None,
+                causal=True, return_cache=False):
+    """Returns (h, kvs, aux_total)."""
+    def body(carry, lp):
+        hh, aux_sum = carry
+        new_h, kv, aux = _decoder_block(hh, lp, cfg, opts, positions,
+                                        enc_out=enc_out, causal=causal)
+        return (new_h, aux_sum + aux), kv if return_cache else ()
+
+    body = _remat_wrap(body, opts)
+    aux0 = jnp.zeros((), jnp.float32)
+    if opts.scan_layers:
+        (h, aux), kvs = jax.lax.scan(body, (h, aux0), layer_params)
+    else:
+        n = jax.tree.leaves(layer_params)[0].shape[0]
+        kvs = []
+        aux = aux0
+        for i in range(n):
+            lp = jax.tree.map(lambda x: x[i], layer_params)
+            (h, aux), kv = body((h, aux), lp)
+            kvs.append(kv)
+        if return_cache and kvs:
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+    return h, kvs, aux
+
+
+def encode(params, frame_embeds, cfg, opts=DEFAULT_OPTS):
+    """Whisper-style encoder over stub frame embeddings (B, S_enc, D)."""
+    enc = params["encoder"]
+    h = frame_embeds.astype(jnp.bfloat16)
+    h = h + enc["pos_embedding"][None, :h.shape[1]]
+    positions = jnp.arange(h.shape[1])[None]
+    h, _, _ = _run_layers(h, enc["layers"], cfg, opts, positions, causal=False)
+    return _norm(h, enc["ln_final"], enc.get("lnb_final"), cfg)
+
+
+def forward(params, tokens, cfg: ArchConfig, opts: TrainOptions = DEFAULT_OPTS,
+            frame_embeds=None, patch_embeds=None, return_cache=False,
+            unembed_mode: str = "full"):
+    """Teacher-forced forward. unembed_mode: "full" -> logits (B,S,V);
+    "last" -> logits (B,1,V) for the final position (prefill);
+    "none" -> final hidden states (the fused chunked loss unembeds itself).
+    Returns (out, aux_loss) or (out, aux, kvs, enc_out) with return_cache."""
+    h = embed_inputs(params, tokens, cfg, patch_embeds)
+    positions = jnp.arange(tokens.shape[1])[None]
+    enc_out = None
+    if cfg.encdec is not None:
+        enc_out = encode(params, frame_embeds, cfg, opts)
+    h, kvs, aux = _run_layers(h, params["layers"], cfg, opts, positions,
+                              enc_out=enc_out, causal=True,
+                              return_cache=return_cache)
+    h = _norm(h, params["ln_final"], params.get("lnb_final"), cfg)
+    if unembed_mode == "full":
+        out = unembed(params, h, cfg)
+    elif unembed_mode == "last":
+        out = unembed(params, h[:, -1:], cfg)
+    else:
+        out = h
+    if return_cache:
+        return out, aux, kvs, enc_out
+    return out, aux
+
+
+def lm_loss(params, h, labels, cfg: ArchConfig,
+            max_chunk_elems: float = 2.0**31) -> Array:
+    """Fused chunked unembed + cross-entropy: scans over sequence chunks so
+    the (B, c, V) logits and their f32 softmax never materialize for the
+    full sequence (decisive for 256k-vocab archs; bwd recomputes per
+    chunk)."""
+    B, S, D = h.shape
+    V = cfg.vocab
+
+    def piece(hc, lc):
+        logits = unembed(params, hc, cfg)
+        lg = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, jnp.maximum(lc, 0)[..., None],
+                                 axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - ll) * mask), jnp.sum(mask)
+
+    n = 1
+    while B * (S // n) * V > max_chunk_elems and S % (2 * n) == 0:
+        n *= 2
+    if n == 1:
+        s, m = piece(h, labels)
+        return s / jnp.maximum(m, 1.0)
+    c = S // n
+    hs = jnp.moveaxis(h.reshape(B, n, c, D), 1, 0)
+    lbs = jnp.moveaxis(labels.reshape(B, n, c), 1, 0)
+
+    def body(carry, xs):
+        s, m = piece(*xs)
+        return (carry[0] + s, carry[1] + m), ()
+
+    (s, m), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, lbs))
+    return s / jnp.maximum(m, 1.0)
+
+
+def unembed(params, h, cfg):
+    # keep logits vocab-sharded: the loss region's batch axes never span
+    # "model" (matters in pure-DP mode where batch covers the whole mesh)
+    h = shard_act(h, "loss_batch", "seq", "embed")
+    if cfg.tie_embeddings:
+        logits = h @ params["embedding"].T.astype(jnp.bfloat16)
+    else:
+        logits = h @ params["w_lm_head"]
+    return shard_act(logits, "loss_batch", "seq", "vocab")
+
+
+def loss_fn(params, batch, cfg: ArchConfig, opts: TrainOptions = DEFAULT_OPTS):
+    h, aux = forward(params, batch["tokens"], cfg, opts,
+                     frame_embeds=batch.get("frame_embeds"),
+                     patch_embeds=batch.get("patch_embeds"),
+                     unembed_mode="none")
+    loss = lm_loss(params, h, batch["labels"], cfg)
+    w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    return loss + w * aux, {"xent": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving path
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_seq: int):
+    """ShapeDtypeStructs for the decode KV cache."""
+    hd = cfg.resolved_head_dim
+    spec = {
+        "k": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd), jnp.bfloat16),
+    }
+    if cfg.encdec is not None:
+        enc_s = cfg.encdec.enc_seq_len
+        spec["cross_k"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, enc_s, cfg.n_kv_heads, hd), jnp.bfloat16)
+        spec["cross_v"] = jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, enc_s, cfg.n_kv_heads, hd), jnp.bfloat16)
+    return spec
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_seq))
+
+
+def prefill(params, tokens, cfg: ArchConfig, max_seq: int,
+            opts: TrainOptions = DEFAULT_OPTS, frame_embeds=None,
+            patch_embeds=None):
+    """Run the prompt, return (last-token logits, cache, cache_len)."""
+    logits, _aux, kvs, enc_out = forward(
+        params, tokens, cfg, opts, frame_embeds=frame_embeds,
+        patch_embeds=patch_embeds, return_cache=True, unembed_mode="last")
+    k, v = kvs
+    s = tokens.shape[1]
+    pad = max_seq - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": k, "v": v}
+    if cfg.encdec is not None:
+        dec = params["layers"]
+        def cross_kv(wkv):
+            kvc = enc_out @ wkv                      # (B, S_enc, 2*Hkv*hd)
+            b, se, _ = kvc.shape
+            return jnp.split(kvc.reshape(b, se, 2 * cfg.n_kv_heads, -1), 2, axis=2)
+        ck, cv = jax.vmap(cross_kv, in_axes=0, out_axes=0)(dec["wkv2"])
+        cache["cross_k"], cache["cross_v"] = ck, cv
+    cache_len = jnp.full((tokens.shape[0],), s, jnp.int32)
+    return logits, cache, cache_len
+
+
+def _decode_block(h, lp, cfg, cache_k, cache_v, cache_len, pos,
+                  cross_k=None, cross_v=None, sp_axis=None):
+    """One block for a single new position. cache_k/v: (B, Smax, Hkv, hd)."""
+    x = _norm(h, lp["ln_attn"], lp.get("lnb_attn"), cfg)
+    q, k_new, v_new = _project_qkv(x, lp, cfg)
+    if cfg.pos_embedding == "rope":
+        q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = L.apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    b = h.shape[0]
+    idx = cache_len[0]  # uniform decode position across batch
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, idx, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, idx, axis=1)
+    if sp_axis is not None:
+        ctx = _sp_decode_attention(q, cache_k, cache_v, sp_axis,
+                                   cache_len)
+    else:
+        ctx = L.decode_attention(q, cache_k, cache_v, cache_len + 1)
+    h = h + _attn_out(ctx, lp, cfg)
+    if cross_k is not None:
+        xq = _norm(h, lp["ln_cross"], lp.get("lnb_cross"), cfg)
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        qc = (xq @ lp["wq2"]).reshape(b, 1, H, hd)
+        ctx2 = L.decode_attention(qc, cross_k, cross_v)
+        h = h + _attn_out(ctx2, lp, cfg, prefix="2")
+    x = _norm(h, lp["ln_mlp"], lp.get("lnb_mlp"), cfg)
+    dx, _aux = _mlp_block(x, lp, cfg)
+    h = h + dx
+    return h, cache_k, cache_v
+
+
+def _sp_decode_attention(q, cache_k, cache_v, sp_axis, cache_len=None):
+    """Sequence-parallel flash decode: KV cache sharded on seq dim.
+    `cache_len` (B,) masks dead cache positions inside each shard's
+    partial softmax (positions up to and including the newly-written
+    token are live)."""
+    rules = current_rules()
+    mesh = rules.mesh
+    from jax.sharding import PartitionSpec as P
+    batch_ax = rules.axis("batch") if q.shape[0] > 1 else None
+    heads_ax = rules.axis("heads")
+    kv_ax = rules.axis("kv_seq")
+    smax = cache_k.shape[1]
+    if cache_len is not None:
+        valid = jnp.arange(smax)[None, :] < (cache_len + 1)[:, None]
+    else:
+        valid = jnp.ones((q.shape[0], smax), jnp.bool_)
+
+    def local(q, kc, vc, valid):
+        m, l, acc = L.decode_attention_partial(q, kc, vc, valid)
+        out = L.combine_partial_attention(m, l, acc, kv_ax)
+        return out.astype(q.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch_ax, None, heads_ax, None),
+                  P(batch_ax, kv_ax, None, None),
+                  P(batch_ax, kv_ax, None, None),
+                  P(batch_ax, kv_ax)),
+        out_specs=P(batch_ax, None, heads_ax, None),
+    )(q, cache_k, cache_v, valid)
+
+
+def decode_step(params, token, cache, cache_len, cfg: ArchConfig,
+                opts: TrainOptions = DEFAULT_OPTS):
+    """One decode step: token (B, 1) -> logits (B, 1, V), updated cache."""
+    h = embed_inputs(params, token, cfg, pos_offset=cache_len)
+    pos = cache_len  # (B,)
+    rules = current_rules()
+    sp_axis = None
+    if rules is not None and rules.mesh is not None and rules.axis("kv_seq"):
+        sp_axis = rules.axis("kv_seq")
+
+    if cfg.encdec is not None:
+        def body(carry, lp_and_cache):
+            lp, ck, cv, crossk, crossv = lp_and_cache
+            hh, ck, cv = _decode_block(
+                carry, lp, cfg, ck, cv, cache_len, pos,
+                cross_k=crossk, cross_v=crossv, sp_axis=sp_axis)
+            return hh, (ck, cv)
+        h, (new_k, new_v) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+    else:
+        def body2(carry, lp_kv):
+            lp, ck, cv = lp_kv
+            hh, ck, cv = _decode_block(carry, lp, cfg, ck, cv, cache_len, pos,
+                                       sp_axis=sp_axis)
+            return hh, (ck, cv)
+        h, (new_k, new_v) = jax.lax.scan(
+            body2, h, (params["layers"], cache["k"], cache["v"]))
+
+    h = _norm(h, params["ln_final"], params.get("lnb_final"), cfg)
+    logits = unembed(params, h, cfg)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = new_k, new_v
+    return logits, new_cache, cache_len + 1

@@ -1,0 +1,30 @@
+"""Pure-JAX optimizer substrate (no optax dependency).
+
+Optimizers follow a minimal GradientTransformation protocol:
+    opt = adamw(lr=1e-5, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from repro.optim.base import (
+    GradientTransformation,
+    OptState,
+    apply_updates,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.adam import adam, adamw, AdamState, adam_row_update
+from repro.optim.sgd import sgd, momentum
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_with_warmup,
+    linear_warmup,
+    Schedule,
+)
+
+__all__ = [
+    "GradientTransformation", "OptState", "apply_updates", "global_norm",
+    "clip_by_global_norm", "adam", "adamw", "AdamState", "adam_row_update",
+    "sgd", "momentum", "constant_schedule", "cosine_with_warmup",
+    "linear_warmup", "Schedule",
+]

@@ -1,0 +1,108 @@
+"""Adam / AdamW in pure JAX.
+
+Also exposes `adam_row_update`, the rank-agnostic single-tensor Adam step
+reused by the ZenFlow selective GPU optimizer and the host-side optimizer
+(same math on full matrices, selected rows, or compact complement rows).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+
+ScalarOrSchedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+class AdamState(NamedTuple):
+    step: jax.Array        # int32 scalar
+    mu: any                # first-moment pytree (f32)
+    nu: any                # second-moment pytree (f32)
+
+
+def _lr_at(lr: ScalarOrSchedule, step: jax.Array) -> jax.Array:
+    if callable(lr):
+        return lr(step)
+    return jnp.asarray(lr, jnp.float32)
+
+
+def adam_row_update(
+    p: jax.Array,
+    g: jax.Array,
+    mu: jax.Array,
+    nu: jax.Array,
+    step: jax.Array,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One bias-corrected AdamW step on a single tensor (any shape).
+
+    Returns (new_p_f32, new_mu, new_nu). `p` may be bf16; math is f32.
+    `step` is the 1-based step count for bias correction.
+    """
+    g = g.astype(jnp.float32)
+    p32 = p.astype(jnp.float32)
+    mu = b1 * mu + (1.0 - b1) * g
+    nu = b2 * nu + (1.0 - b2) * jnp.square(g)
+    t = step.astype(jnp.float32)
+    mu_hat = mu / (1.0 - jnp.power(b1, t))
+    nu_hat = nu / (1.0 - jnp.power(b2, t))
+    upd = mu_hat / (jnp.sqrt(nu_hat) + eps)
+    if weight_decay:
+        upd = upd + weight_decay * p32
+    return p32 - lr * upd, mu, nu
+
+
+def _make_adam(
+    lr: ScalarOrSchedule,
+    b1: float,
+    b2: float,
+    eps: float,
+    weight_decay: float,
+) -> GradientTransformation:
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                         nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state: AdamState, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+
+        def upd(m, v, p):
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay and p is not None:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -lr_t * u
+
+        if weight_decay and params is not None:
+            updates = jax.tree.map(upd, mu, nu, params)
+        else:
+            updates = jax.tree.map(lambda m, v: upd(m, v, None), mu, nu)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def adam(lr: ScalarOrSchedule = 1e-3, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> GradientTransformation:
+    return _make_adam(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr: ScalarOrSchedule = 1e-5, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> GradientTransformation:
+    """AdamW with decoupled weight decay (paper default: wd=0.0, lr=1e-5)."""
+    return _make_adam(lr, b1, b2, eps, weight_decay=weight_decay)

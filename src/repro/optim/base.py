@@ -1,0 +1,52 @@
+"""Optimizer base protocol and gradient utilities."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+Params = Any
+Updates = Any
+
+
+class GradientTransformation(NamedTuple):
+    """Minimal optax-style gradient transformation."""
+    init: Callable[[Params], OptState]
+    update: Callable[..., tuple[Updates, OptState]]
+
+
+def apply_updates(params: Params, updates: Updates) -> Params:
+    """params + updates, preserving parameter dtypes (updates may be f32)."""
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> tuple[Params, jax.Array]:
+    """Clip gradients by global norm; returns (clipped, pre-clip norm)."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Compose gradient transformations left-to-right."""
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)

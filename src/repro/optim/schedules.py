@@ -1,0 +1,38 @@
+"""Learning-rate schedules (paper setup: cosine with 5% warmup)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_schedule(value: float) -> Schedule:
+    def fn(step):
+        return jnp.full((), value, jnp.float32)
+    return fn
+
+
+def linear_warmup(peak: float, warmup_steps: int) -> Schedule:
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, s / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_with_warmup(peak: float, total_steps: int,
+                       warmup_frac: float = 0.05,
+                       final_frac: float = 0.0) -> Schedule:
+    """Cosine decay to final_frac*peak after linear warmup of warmup_frac."""
+    warmup_steps = max(int(total_steps * warmup_frac), 1)
+    decay_steps = max(total_steps - warmup_steps, 1)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / warmup_steps
+        prog = jnp.clip((s - warmup_steps) / decay_steps, 0.0, 1.0)
+        cos = final_frac * peak + (1 - final_frac) * peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,48 @@
+"""SGD / momentum in pure JAX."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+from repro.optim.adam import ScalarOrSchedule, _lr_at
+
+
+class MomentumState(NamedTuple):
+    step: jax.Array
+    velocity: any
+
+
+def sgd(lr: ScalarOrSchedule = 1e-2) -> GradientTransformation:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, state, params=None):
+        step = state + 1
+        lr_t = _lr_at(lr, step)
+        return jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads), step
+
+    return GradientTransformation(init, update)
+
+
+def momentum(lr: ScalarOrSchedule = 1e-2, beta: float = 0.9,
+             nesterov: bool = False) -> GradientTransformation:
+    def init(params):
+        vel = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return MomentumState(step=jnp.zeros((), jnp.int32), velocity=vel)
+
+    def update(grads, state: MomentumState, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        vel = jax.tree.map(lambda v, g: beta * v + g.astype(jnp.float32),
+                           state.velocity, grads)
+        if nesterov:
+            updates = jax.tree.map(
+                lambda v, g: -lr_t * (beta * v + g.astype(jnp.float32)), vel, grads)
+        else:
+            updates = jax.tree.map(lambda v: -lr_t * v, vel)
+        return updates, MomentumState(step=step, velocity=vel)
+
+    return GradientTransformation(init, update)

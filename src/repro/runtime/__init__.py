@@ -1,0 +1,3 @@
+from repro.runtime.zen_runtime import ZenFlowRuntime, RuntimeConfig
+
+__all__ = ["ZenFlowRuntime", "RuntimeConfig"]

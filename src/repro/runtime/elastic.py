@@ -1,0 +1,71 @@
+"""Elastic scaling: rebuild the mesh on a device-set change and restore
+from the last checkpoint with re-sharding.
+
+Global checkpoint arrays are mesh-agnostic; params and dense optimizer
+state re-shard transparently (device_put with the new NamedShardings).
+ZenFlow selection state is tied to the channel-shard factor RS: if the new
+mesh changes RS, sel_idx/m_sel/v_sel shapes change — we re-derive the
+selection on the first step of the resumed run (a single refresh; bounded
+impact identical to a scheduled refresh, see DESIGN.md)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.distributed import zen_spmd
+from repro.distributed.sharding import MeshRules, rules_for_mesh
+
+
+def compatible_selection(old_segs: dict, new_segs: dict) -> bool:
+    """True if ZenFlow per-segment shapes survive the mesh change."""
+    if set(old_segs) != set(new_segs):
+        return False
+    return all(old_segs[p].row_shards == new_segs[p].row_shards and
+               old_segs[p].quota == new_segs[p].quota for p in old_segs)
+
+
+def elastic_restore(model, zcfg: ZenFlowConfig, new_mesh, ckpt: CheckpointManager,
+                    overrides: Optional[dict] = None):
+    """Restore a runtime state dict onto a (possibly different) mesh.
+
+    Returns (state_dict, rules, segs, resumed_step, zen_state_survived).
+    The checkpoint holds ZenFlowRuntime.state_dict(). If the new mesh keeps
+    the channel-shard factor, the full state restores; otherwise only
+    params survive and ZenFlow state is re-initialized (selection
+    re-derives on the next refresh — bounded impact, same as a scheduled
+    refresh; the host master is rebuilt from the restored params)."""
+    rules = rules_for_mesh(new_mesh, overrides)
+    spec = model.param_specs()
+    new_segs = zen_spmd.build_segments(spec, zcfg, rules)
+
+    full_like = {
+        "params": spec,
+        "dstate": zen_spmd.zen_device_state_init(spec, zcfg, new_segs),
+        "host_state": zen_spmd.zen_host_state_init(spec, zcfg, new_segs),
+        "pending": zen_spmd.pending_specs(new_segs, spec),
+        "steps_in_window": np.zeros((), np.int32),
+    }
+    try:
+        sd, manifest = ckpt.restore(full_like)
+        return sd, rules, new_segs, manifest["step"], True
+    except Exception:
+        pass
+    # shapes changed (different RS): params-only restore
+    params, manifest = ckpt.restore({"params": spec})
+    params = params["params"]
+    step = manifest["step"]
+    dstate = zen_spmd.zen_device_state_init(spec, zcfg, new_segs)
+    dstate["step"] = jax.numpy.asarray(step, jax.numpy.int32)
+    sd = {
+        "params": params,
+        "dstate": dstate,
+        "host_state": zen_spmd.zen_host_state_init(spec, zcfg, new_segs,
+                                                   params=params),
+        "pending": zen_spmd.zero_pending(new_segs, spec),
+        "steps_in_window": 0,
+    }
+    return sd, rules, new_segs, step, False

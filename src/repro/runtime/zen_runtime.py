@@ -1,0 +1,250 @@
+"""Two-program ZenFlow runtime: the production execution mode (DESIGN.md §2).
+
+One jitted *device program* per step (fwd+bwd+selective update+compact
+complement extraction, host rows landed at window boundaries) and two
+jitted *host programs* (accumulate, apply) executed on a background worker
+that **owns the host state** — all host work is an ordered queue of state
+transitions, so donation stays linear and no lock is needed. This is the
+JAX realization of the paper's Fig 7 zero-stall pipeline:
+
+  device:  FP/BP_t | FP/BP_t+1 | ... | FP/BP_t+S   (never waits for host)
+  host:        acc_t | acc_t+1 | ... | UP(window W) ...
+  upload:                               rows(W) land at boundary of W+1
+
+Fault-tolerance hooks:
+  * checkpoint/restore of the full (params, device, host, loader) state;
+  * straggler absorption — a host apply that misses its boundary extends
+    the window (bounded by s_max) instead of stalling the device;
+  * per-step wall-time EMA watchdog for straggler telemetry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.distributed.sharding import MeshRules
+from repro.distributed import zen_spmd
+
+
+@dataclasses.dataclass
+class RuntimeConfig:
+    donate: bool = True
+    straggler_window_extension: bool = True   # extend S instead of stalling
+    step_time_ema: float = 0.9
+    straggler_factor: float = 3.0             # step > factor*EMA -> flagged
+
+
+class _Future:
+    def __init__(self):
+        self.event = threading.Event()
+        self.value = None
+        self.error: Optional[BaseException] = None
+
+    def ready(self) -> bool:
+        return self.event.is_set()
+
+    def get(self):
+        self.event.wait()
+        if self.error is not None:
+            raise self.error
+        return self.value
+
+
+class _HostWorker:
+    """Background thread that owns the host-side ZenFlow state.
+
+    Every host operation is a queued transition `state -> (state, output)`;
+    the queue order serializes accumulates and applies exactly like the
+    paper's dedicated CPU optimizer processes with shared-memory buffers.
+    """
+
+    def __init__(self, state):
+        self._state = state
+        self._q: queue.Queue = queue.Queue()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, fut = item
+            try:
+                self._state, fut.value = fn(self._state)
+            except BaseException as e:
+                fut.error = e
+            fut.event.set()
+
+    def submit(self, fn: Callable) -> _Future:
+        fut = _Future()
+        self._q.put((fn, fut))
+        return fut
+
+    def snapshot(self):
+        return self.submit(lambda st: (st, st)).get()
+
+    def set_state(self, state):
+        self.submit(lambda _: (state, None)).get()
+
+    def stop(self):
+        self._q.put(None)
+        self._thread.join(timeout=5)
+
+
+class ZenFlowRuntime:
+    """Orchestrates the device/host ZenFlow pipeline for a model."""
+
+    def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
+                 rcfg: RuntimeConfig = RuntimeConfig()):
+        self.model = model
+        self.zcfg = zcfg
+        self.rules = rules
+        self.rcfg = rcfg
+        step_fn, segs, partition = zen_spmd.make_device_step(model, zcfg, rules)
+        self.segs = segs
+        self.partition = partition
+        donate = (0, 1, 2) if rcfg.donate else ()
+        self.device_step = jax.jit(step_fn, donate_argnums=donate)
+        self.host_accumulate, self.host_apply = \
+            zen_spmd.make_host_programs(zcfg)
+        self.worker: Optional[_HostWorker] = None
+        self.params = None
+        self.dstate = None
+        self.pending = None
+        self._apply_future: Optional[_Future] = None
+        self._steps_in_window = 0
+        self._s_eff = zcfg.update_interval
+        self._step_ema = None
+        self.stall_log: list[float] = []
+        self.window_extensions = 0
+
+    # ------------------------------------------------------------------
+    def init(self, key):
+        self.params = self.model.init(key)
+        spec = self.model.param_specs()
+        self.dstate = zen_spmd.zen_device_state_init(spec, self.zcfg, self.segs)
+        host_state = zen_spmd.zen_host_state_init(
+            spec, self.zcfg, self.segs, params=self.params)
+        self.worker = _HostWorker(host_state)
+        self.pending = zen_spmd.zero_pending(self.segs, spec)
+        return self
+
+    # ------------------------------------------------------------------
+    def step(self, batch) -> dict:
+        """One pipelined training step (device never waits on host apply
+        unless straggler extension is disabled)."""
+        t0 = time.perf_counter()
+        step_no = int(self.dstate["step"])
+
+        self.params, self.dstate, host_bound, metrics = self.device_step(
+            self.params, self.dstate, self.pending, batch)
+        # pending was donated; rebuild as empty until an apply lands
+        self.pending = zen_spmd.zero_pending(self.segs,
+                                             self.model.param_specs())
+        self._steps_in_window += 1
+
+        # async host accumulate (ordered behind any in-flight apply)
+        self.worker.submit(
+            lambda st, hb=host_bound: (self.host_accumulate(st, hb), None))
+
+        t = step_no + 1
+        warm = t <= self.zcfg.warmup_steps
+        boundary = warm or (self._steps_in_window >= self._s_eff)
+        stall = 0.0
+
+        if boundary and self._apply_future is not None:
+            if not self._apply_future.ready() \
+                    and self.rcfg.straggler_window_extension \
+                    and self._steps_in_window < self.zcfg.s_max and not warm:
+                # host straggler: absorb as bounded staleness, not a stall
+                self.window_extensions += 1
+                boundary = False
+            else:
+                ts = time.perf_counter()
+                rows, idx = self._apply_future.get()   # may block (stall)
+                stall = time.perf_counter() - ts
+                self.pending = {"rows": rows, "idx": idx,
+                                "valid": jnp.ones((), jnp.bool_)}
+                self._apply_future = None
+
+        if boundary:
+            comp_idx = host_bound["comp_idx"]
+            lr_t = self.zcfg.lr_at(jnp.asarray(t))
+
+            def do_apply(st, ci=comp_idx, lr=lr_t):
+                st2, rows = self.host_apply(st, ci, lr)
+                return st2, (rows, ci)
+
+            prev = self._apply_future
+            self._apply_future = self.worker.submit(do_apply)
+            if prev is not None:
+                # shouldn't happen (collected above), but never leak one
+                rows, idx = prev.get()
+                self.pending = {"rows": rows, "idx": idx,
+                                "valid": jnp.ones((), jnp.bool_)}
+            self._steps_in_window = 0
+            if warm:
+                # warmup: land synchronously (paper's tau warm-up, no
+                # staleness while gradients are large)
+                rows, idx = self._apply_future.get()
+                self.pending = {"rows": rows, "idx": idx,
+                                "valid": jnp.ones((), jnp.bool_)}
+                self._apply_future = None
+
+        dt = time.perf_counter() - t0
+        self._step_ema = dt if self._step_ema is None else \
+            self.rcfg.step_time_ema * self._step_ema + \
+            (1 - self.rcfg.step_time_ema) * dt
+        out = {k: (float(v) if jnp.ndim(v) == 0 else v)
+               for k, v in metrics.items()}
+        out.update({
+            "step_time": dt, "stall": stall, "boundary": bool(boundary),
+            "straggler_flag": bool(dt > self.rcfg.straggler_factor *
+                                   (self._step_ema or dt)),
+            "window_extensions": self.window_extensions,
+        })
+        self.stall_log.append(stall)
+        return out
+
+    # ------------------------------------------------------------------
+    def flush(self):
+        """Land any in-flight host apply (end of run / checkpoint)."""
+        if self._apply_future is not None:
+            rows, idx = self._apply_future.get()
+            self.pending = {"rows": rows, "idx": idx,
+                            "valid": jnp.ones((), jnp.bool_)}
+            self._apply_future = None
+
+    def state_dict(self) -> dict:
+        self.flush()
+        return {
+            "params": self.params,
+            "dstate": self.dstate,
+            "host_state": self.worker.snapshot(),
+            "pending": self.pending,
+            "steps_in_window": self._steps_in_window,
+        }
+
+    def load_state_dict(self, sd: dict):
+        self.params = sd["params"]
+        self.dstate = sd["dstate"]
+        self.pending = sd["pending"]
+        self._steps_in_window = int(sd.get("steps_in_window", 0))
+        if self.worker is None:
+            self.worker = _HostWorker(sd["host_state"])
+        else:
+            self.worker.set_state(sd["host_state"])
+        return self
+
+    def close(self):
+        if self.worker is not None:
+            self.worker.stop()

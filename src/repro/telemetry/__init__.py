@@ -1,0 +1,3 @@
+from repro.telemetry import costmodel, hlo_stats, roofline, simulator
+
+__all__ = ["costmodel", "hlo_stats", "roofline", "simulator"]

@@ -1,0 +1,459 @@
+"""Analytic cost model: parameters, FLOPs, HBM bytes and collective bytes
+per (arch x shape x mesh) — the primary source for the §Roofline terms.
+
+Why analytic: `compiled.cost_analysis()` counts `lax.scan`/while bodies
+ONCE (verified empirically in this container: a 32-layer scan reports
+~1 layer of FLOPs), so module-level numbers undercount by the trip count
+of every loop (layers, flash-attention KV chunks, SSM chunks). Rather than
+guessing trip counts out of HLO text, we compute closed forms from the
+architecture definitions we control, and *validate them against
+cost_analysis on small unrolled configs* in tests/test_costmodel.py.
+
+Conventions: matmul flops = 2*m*k*n; causal attention scores+AV count a
+0.5 factor; bwd = 2x fwd; remat (full recompute of the layer body under
+`dots_with_no_batch_dims_saveable`, which saves nothing batched here)
+adds ~1x fwd.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+# TPU v5e hardware constants (per chip), per the assignment:
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link (we use 1-link conservative)
+HOST_LINK_BW = 28e9             # effective PCIe to host (paper-measured)
+
+
+# ---------------------------------------------------------------------------
+# Parameter counts
+
+
+def _dense_layer_params(cfg: ArchConfig) -> int:
+    D, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    gated = cfg.act in ("swiglu", "geglu")
+    attn = D * H * hd + D * 2 * Hkv * hd + H * hd * D
+    if cfg.attn_bias:
+        attn += H * hd + 2 * Hkv * hd + D
+    if cfg.moe is not None:
+        return attn + _moe_layer_params(cfg) + 2 * D
+    mlp = D * (2 * cfg.d_ff if gated else cfg.d_ff) + cfg.d_ff * D
+    if cfg.mlp_bias:
+        mlp += (2 * cfg.d_ff if gated else cfg.d_ff) + D
+    norms = 2 * D * (2 if cfg.norm == "layernorm" else 1)
+    qk = 2 * hd if cfg.qk_norm else 0
+    return attn + mlp + norms + qk
+
+
+def _moe_layer_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    m = cfg.moe
+    D, Fe = cfg.d_model, m.expert_d_ff
+    router = D * m.n_experts
+    per_expert = D * 2 * Fe + Fe * D
+    n_active = m.top_k if active_only else m.n_experts
+    total = router + n_active * per_expert
+    extra_ff = m.dense_residual_d_ff or (m.n_shared_experts * Fe)
+    if extra_ff:
+        total += D * 2 * extra_ff + extra_ff * D
+    return total
+
+
+def _rwkv_layer_params(cfg: ArchConfig) -> int:
+    D, F = cfg.d_model, cfg.d_ff
+    lora = 64
+    tm = 5 * D + D * 4 * D + D * D + D + D * lora + lora * D + 2 * D
+    cm = 2 * D + D * F + F * D + D * D
+    norms = 4 * D * 2
+    return tm + cm + norms
+
+
+def _mamba_layer_params(cfg: ArchConfig) -> int:
+    D = cfg.d_model
+    s = cfg.ssm
+    d_in = int(D * s.d_inner_mult)
+    H = d_in // 64
+    return (D * 2 * d_in + D * (2 * s.d_state + H) + s.conv_kernel * d_in
+            + d_in + 3 * H + d_in + D + d_in * D)
+
+
+def _shared_attn_block_params(cfg: ArchConfig) -> int:
+    D, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    return (D * H * hd + D * 2 * Hkv * hd + H * hd * D
+            + D * 2 * cfg.d_ff + cfg.d_ff * D + 2 * D)
+
+
+def arch_param_count(cfg: ArchConfig, active_only: bool = False) -> int:
+    D, V = cfg.d_model, cfg.vocab
+    emb = V * D
+    head = 0 if cfg.tie_embeddings else D * V
+    pos = cfg.max_pos * D if cfg.pos_embedding == "learned" else 0
+    total = emb + head + pos + D
+
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.ssm.kind == "rwkv6":
+            total += cfg.n_layers * _rwkv_layer_params(cfg)
+        else:
+            total += cfg.n_layers * _mamba_layer_params(cfg)
+        if cfg.ssm.shared_attn_every:
+            total += _shared_attn_block_params(cfg)
+        return total
+
+    if cfg.moe is not None:
+        D_, H, Hkv, hd = D, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        attn = D_ * H * hd + D_ * 2 * Hkv * hd + H * hd * D_
+        per_layer = attn + _moe_layer_params(cfg, active_only) + 2 * D_
+        total += cfg.n_layers * per_layer
+        return total
+
+    total += cfg.n_layers * _dense_layer_params(cfg)
+    if cfg.encdec is not None:
+        # decoder layers counted above; add encoder stack + cross-attn
+        enc_layer = _dense_layer_params(cfg)
+        total += cfg.encdec.n_enc_layers * enc_layer
+        total += cfg.encdec.enc_seq_len * D      # encoder pos table
+        hd = cfg.resolved_head_dim
+        cross = (D * cfg.n_heads * hd + D * 2 * cfg.n_kv_heads * hd
+                 + cfg.n_heads * hd * D + D)
+        total += cfg.n_layers * cross
+    return total
+
+
+# ---------------------------------------------------------------------------
+# FLOPs
+
+
+@dataclasses.dataclass(frozen=True)
+class FlopsReport:
+    model_flops: float        # useful: 6*N*T (+ attn) for train; 2*N*T infer
+    expected_hlo_flops: float # incl. remat recompute & capacity overhead
+    attn_flops: float
+    matmul_flops: float
+
+
+def _matmul_params(cfg: ArchConfig) -> int:
+    """Params participating in per-token matmuls (excl. embedding gather,
+    incl. unembed projection)."""
+    n = arch_param_count(cfg, active_only=True)
+    n -= cfg.vocab * cfg.d_model            # embedding gather is not a matmul
+    if cfg.tie_embeddings:
+        n += cfg.vocab * cfg.d_model        # tied unembed matmul
+    if cfg.pos_embedding == "learned":
+        n -= cfg.max_pos * cfg.d_model
+    return n
+
+
+def _attn_flops_per_seq(cfg: ArchConfig, S: int, causal: bool = True) -> float:
+    """scores + AV flops for one sequence, all layers (fwd)."""
+    if cfg.family == "ssm":
+        # rwkv6 linear attention: chunked wkv ~ O(S * hd) per head per chunk
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        chunk = 32
+        # intra-chunk (S/c * c^2 * hd * 2) + state update (S * hd^2 * 2)
+        per_head = 2 * S * chunk * hd + 4 * S * hd * hd
+        return cfg.n_layers * H * per_head
+    factor = 0.5 if causal else 1.0
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    per_layer = 4 * S * S * H * hd * factor
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_in = int(cfg.d_model * s.d_inner_mult)
+        Hm = d_in // 64
+        chunk = 32
+        ssm = cfg.n_layers * Hm * (2 * S * chunk * 64 + 4 * S * 64 * 64)
+        n_shared = cfg.n_layers // s.shared_attn_every if s.shared_attn_every else 0
+        return ssm + n_shared * per_layer
+    n_attn_layers = cfg.n_layers
+    total = n_attn_layers * per_layer
+    if cfg.encdec is not None:
+        Se = cfg.encdec.enc_seq_len
+        total += cfg.encdec.n_enc_layers * 4 * Se * Se * H * hd  # bidirectional
+        total += cfg.n_layers * 4 * S * Se * H * hd              # cross
+    return total
+
+
+def train_flops(cfg: ArchConfig, shape: ShapeConfig,
+                remat_extra: float = 1.0,
+                capacity_factor_overhead: Optional[float] = None) -> FlopsReport:
+    T = shape.global_batch * shape.seq_len
+    Nmm = _matmul_params(cfg)
+    mm_fwd = 2 * Nmm * T
+    attn_fwd = _attn_flops_per_seq(cfg, shape.seq_len) * shape.global_batch
+    fwd = mm_fwd + attn_fwd
+    model = 3 * fwd                                   # fwd + bwd(2x)
+    cf = capacity_factor_overhead
+    if cf is None and cfg.moe is not None:
+        cf = cfg.moe.capacity_factor
+    moe_pad = 0.0
+    if cfg.moe is not None and cf and cf > 1.0:
+        m = cfg.moe
+        expert_mm = 2 * (m.top_k * (cfg.d_model * 2 * m.expert_d_ff
+                                    + m.expert_d_ff * cfg.d_model)) * T
+        moe_pad = (cf - 1.0) * 3 * expert_mm
+    expected = model + remat_extra * fwd + moe_pad
+    return FlopsReport(model, expected, 3 * attn_fwd, 3 * mm_fwd)
+
+
+def prefill_flops(cfg: ArchConfig, shape: ShapeConfig) -> FlopsReport:
+    T = shape.global_batch * shape.seq_len
+    Nmm = _matmul_params(cfg)
+    mm = 2 * Nmm * T
+    attn = _attn_flops_per_seq(cfg, shape.seq_len) * shape.global_batch
+    return FlopsReport(mm + attn, mm + attn, attn, mm)
+
+
+def decode_flops(cfg: ArchConfig, shape: ShapeConfig) -> FlopsReport:
+    """One serve_step: B new tokens against a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    Nmm = _matmul_params(cfg)
+    mm = 2 * Nmm * B
+    if cfg.family == "ssm":
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        attn = cfg.n_layers * H * 4 * hd * hd * B     # state update + read
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        d_in = int(cfg.d_model * s.d_inner_mult)
+        Hm = d_in // 64
+        attn = cfg.n_layers * Hm * 4 * 64 * 64 * B
+        n_shared = cfg.n_layers // s.shared_attn_every
+        attn += n_shared * 4 * S * cfg.n_heads * cfg.resolved_head_dim * B
+    else:
+        attn = cfg.n_layers * 4 * S * cfg.n_heads * cfg.resolved_head_dim * B
+        if cfg.encdec is not None:
+            attn += cfg.n_layers * 4 * cfg.encdec.enc_seq_len * \
+                cfg.n_heads * cfg.resolved_head_dim * B
+    return FlopsReport(mm + attn, mm + attn, attn, mm)
+
+
+# ---------------------------------------------------------------------------
+# HBM bytes (per step, global; divide by chips for per-device)
+
+
+def _act_bytes_per_token(cfg: ArchConfig) -> float:
+    """Approximate activation traffic per token per layer (bf16 rw), one
+    fwd pass: inputs/outputs of each matmul + attention intermediates."""
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        return 2 * (10 * D + 2 * cfg.d_ff)
+    gated = cfg.act in ("swiglu", "geglu")
+    Fe = cfg.moe.expert_d_ff * cfg.moe.top_k if cfg.moe else F
+    mlp = (3 if gated else 2) * Fe
+    return 2 * (6 * D + 2 * H * hd + mlp)
+
+
+def train_bytes(cfg: ArchConfig, shape: ShapeConfig, zen_topk: float = 0.1,
+                remat_extra: float = 1.0) -> float:
+    """Global HBM bytes per train step: weight streaming (fwd+bwd+remat),
+    gradient write+read, ZenFlow selective-optimizer traffic, activations."""
+    T = shape.global_batch * shape.seq_len
+    P = arch_param_count(cfg, active_only=False)
+    Pb = 2 * P                                       # bf16 weights
+    weight_traffic = Pb * (2 + remat_extra)          # fwd + bwd + remat reads
+    grad_traffic = 2 * Pb                            # write + read (bf16)
+    # ZenFlow device-side optimizer: k rows of (p,g,m,v) rw
+    zen = zen_topk * P * (2 * 2 + 2 * 4 * 2)         # p rw bf16 + m,v rw f32
+    acts = _act_bytes_per_token(cfg) * cfg.n_layers * T * (1 + remat_extra * 0.5)
+    return weight_traffic + grad_traffic + zen + acts
+
+
+def prefill_bytes(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    T = shape.global_batch * shape.seq_len
+    P = arch_param_count(cfg, active_only=False)
+    acts = _act_bytes_per_token(cfg) * cfg.n_layers * T * 0.5
+    kv_write = 2 * 2 * cfg.n_layers * cfg.n_kv_heads * \
+        cfg.resolved_head_dim * T
+    return 2 * P + acts + kv_write
+
+
+def decode_bytes(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Dominated by full weight streaming + KV/state cache read."""
+    B, S = shape.global_batch, shape.seq_len
+    P = arch_param_count(cfg, active_only=True)
+    hd = cfg.resolved_head_dim
+    if cfg.family == "ssm":
+        H = cfg.n_heads
+        state = cfg.n_layers * B * H * hd * hd * 4 * 2        # f32 rw
+    elif cfg.family == "hybrid":
+        d_in = int(cfg.d_model * cfg.ssm.d_inner_mult)
+        Hm = d_in // 64
+        state = cfg.n_layers * B * Hm * cfg.ssm.d_state * 64 * 4 * 2
+        n_shared = cfg.n_layers // cfg.ssm.shared_attn_every
+        state += n_shared * B * S * cfg.n_kv_heads * hd * 2 * 2
+    else:
+        state = cfg.n_layers * B * S * cfg.n_kv_heads * hd * 2 * 2  # k+v read
+        if cfg.encdec is not None:
+            state += cfg.n_layers * B * cfg.encdec.enc_seq_len
+    return 2 * P + state
+
+
+# ---------------------------------------------------------------------------
+# Collective bytes (per device, per step) from the sharding rules
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveReport:
+    ici_bytes: float          # per-device intra-pod collective traffic
+    dci_bytes: float          # per-device cross-pod traffic
+    host_bytes: float         # per-device host link (ZenFlow PCIe path)
+    detail: dict
+
+
+def train_collectives(cfg: ArchConfig, shape: ShapeConfig, mesh_shape: dict,
+                      zen_topk: float = 0.1, zen_S: int = 4,
+                      moe_dispatch: str = "psum",
+                      scheme: str = "tp") -> CollectiveReport:
+    """Closed-form collective volumes for the baseline sharding rules:
+      FSDP weight all-gather per layer (fwd + bwd), gradient
+      reduce-scatter, TP activation all-reduces, MoE combine, pod DP
+      all-reduce, ZenFlow norm psum + host transfers.
+
+    scheme="pure_dp": batch spans data x model (odd-head-count archs and
+    the zamba2/rwkv6 §Perf variant): no TP activation all-reduces, weights
+    ZeRO-3-gathered over the whole mesh instead."""
+    data = mesh_shape.get("data", 1)
+    model = mesh_shape.get("model", 1)
+    pod = mesh_shape.get("pod", 1)
+    chips = data * model * pod
+    if scheme == "pure_dp":
+        # fold the model axis into the weight-shard axis; no TP
+        data = data * model
+        model = 1
+    P = arch_param_count(cfg)
+    Pb = 2 * P
+    B_loc = shape.global_batch / (data * pod)
+    S = shape.seq_len
+    D = cfg.d_model
+    tok_loc = B_loc * S
+
+    detail = {}
+    # FSDP: all-gather weights (bf16) fwd + bwd ((data-1)/data of bytes land
+    # on each device); reduce-scatter grads
+    fsdp = Pb / model * (data - 1) / data * 2 if data > 1 else 0.0
+    rs = Pb / model * (data - 1) / data if data > 1 else 0.0
+    detail["fsdp_allgather"] = fsdp
+    detail["grad_reduce_scatter"] = rs
+    # TP: 2 all-reduces per layer of (B_loc, S, D) bf16 (attn out + mlp out)
+    ar_act = 2 * cfg.n_layers * tok_loc * D * 2 * 2 * (model - 1) / model \
+        if model > 1 else 0.0
+    detail["tp_activation_allreduce"] = ar_act
+    # MoE combine (psum-EP): one extra all-reduce of activations per layer
+    if cfg.moe is not None and model > 1:
+        moe_ar = cfg.n_layers * tok_loc * D * 2 * 2 * (model - 1) / model
+        if moe_dispatch == "a2a":
+            m = cfg.moe
+            moe_ar = 2 * cfg.n_layers * tok_loc * m.top_k / model * D * 2
+        detail["moe_combine"] = moe_ar
+    else:
+        detail["moe_combine"] = 0.0
+    # ZenFlow selection proxy: per-channel norms all-reduce, O(m) f32
+    proxy = 4 * _total_channels(cfg) * (model - 1) / model if model > 1 else 0.0
+    detail["zen_norm_psum"] = proxy
+    ici = fsdp + rs + ar_act + detail["moe_combine"] + proxy
+
+    # cross-pod DP: all-reduce grads over DCI once per step
+    dci = 2 * Pb / (data * model) * (pod - 1) / pod if pod > 1 else 0.0
+    detail["pod_grad_allreduce"] = dci
+
+    # ZenFlow host link: (1-k)M down every step + (1-k)M up per window
+    host = (1 - zen_topk) * Pb / chips * (1 + 1 / zen_S)
+    detail["zen_host_link"] = host
+    return CollectiveReport(ici, dci, host, detail)
+
+
+def _total_channels(cfg: ArchConfig) -> int:
+    """Total input-channel count across split params ~ P / avg_out_dim;
+    approximate with sum of row dims: P / d_model as a coarse proxy."""
+    return int(arch_param_count(cfg) / max(cfg.d_model, 1))
+
+
+def decode_collectives(cfg: ArchConfig, shape: ShapeConfig,
+                       mesh_shape: dict) -> CollectiveReport:
+    data = mesh_shape.get("data", 1)
+    model = mesh_shape.get("model", 1)
+    pod = mesh_shape.get("pod", 1)
+    B = shape.global_batch
+    D = cfg.d_model
+    B_loc = max(B / (data * pod), 1) if B >= data * pod else B
+    # TP all-reduces per layer on (B_loc, 1, D)
+    ar = 2 * cfg.n_layers * B_loc * D * 2 * 2 * (model - 1) / model \
+        if model > 1 else 0.0
+    sp = 0.0
+    if B < data:  # SP flash-decode combine: psum of (B,H,1)+(B,H,1,hd) f32
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        n_attn = cfg.n_layers if cfg.family not in ("ssm", "hybrid") else \
+            (cfg.n_layers // cfg.ssm.shared_attn_every
+             if cfg.family == "hybrid" else 0)
+        sp = n_attn * B * (H / model) * (2 + hd) * 4 * 2
+    return CollectiveReport(ar + sp, 0.0, 0.0,
+                            {"tp_allreduce": ar, "sp_combine": sp})
+
+
+# ---------------------------------------------------------------------------
+# Per-device HBM residency (analytic TPU estimate)
+#
+# XLA:CPU legalizes bf16 dots through f32 converts and hoists them out of
+# loops, inflating memory_analysis() temp numbers by up to ~2x for
+# weight/cache-heavy programs. This closed form is the TPU-true residency
+# estimate recorded next to the raw dry-run numbers.
+
+
+def device_residency(cfg: ArchConfig, shape: ShapeConfig, mesh_shape: dict,
+                     zen_topk: float = 0.1, pod_fsdp: bool = False,
+                     accum_bytes: int = 4,
+                     microbatch_tokens_per_dev: int = 8192) -> dict:
+    data = mesh_shape.get("data", 1)
+    model = mesh_shape.get("model", 1)
+    pod = mesh_shape.get("pod", 1)
+    chips = data * model * pod
+    P = arch_param_count(cfg)
+    w_shards = data * model * (pod if (pod_fsdp or P > 100e9) else 1)
+    params_dev = 2 * P / w_shards
+    out = {"params": params_dev}
+    D = cfg.d_model
+    hd = cfg.resolved_head_dim
+
+    if shape.kind == "train":
+        out["zen_mv"] = 8 * zen_topk * P / w_shards
+        out["pending_rows"] = 2 * (1 - zen_topk) * P / w_shards
+        out["grad_accum"] = accum_bytes * P / w_shards
+        out["host_bound_out"] = 2 * (1 - zen_topk) * P / w_shards
+        toks = min(microbatch_tokens_per_dev,
+                   shape.global_batch * shape.seq_len // chips
+                   if shape.global_batch >= chips else
+                   shape.global_batch * shape.seq_len // (data * pod))
+        layer_carry = 2 * D * toks
+        out["act_saves"] = cfg.n_layers * layer_carry
+        # transient: one layer's gathered weights (ZeRO-3) + working set
+        per_layer_w = 2 * P / max(cfg.n_layers, 1) / model
+        out["transient"] = 2 * per_layer_w + 6 * layer_carry
+    elif shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len / chips
+        out["kv_cache"] = 2 * 2 * cfg.n_layers * cfg.n_kv_heads * hd * toks \
+            if cfg.family not in ("ssm", "hybrid") else 0
+        out["transient"] = 8 * D * toks
+    else:
+        B, S = shape.global_batch, shape.seq_len
+        if cfg.family == "ssm":
+            cache = cfg.n_layers * B * cfg.n_heads * hd * hd * 4
+        elif cfg.family == "hybrid":
+            d_in = int(D * cfg.ssm.d_inner_mult)
+            cache = cfg.n_layers * B * (d_in // 64) * cfg.ssm.d_state * 64 * 4
+            n_sh = cfg.n_layers // cfg.ssm.shared_attn_every
+            cache += n_sh * B * S * cfg.n_kv_heads * hd * 2 * 2
+        else:
+            cache = 2 * 2 * cfg.n_layers * B * S * cfg.n_kv_heads * hd
+            if cfg.encdec is not None:
+                cache += 2 * 2 * cfg.n_layers * B * \
+                    cfg.encdec.enc_seq_len * cfg.n_kv_heads * hd
+        cache_shards = chips if B < data * pod else \
+            (data * pod) * (model if S % model == 0 else 1)
+        out["kv_cache"] = cache / cache_shards
+        out["transient"] = 4 * B * D * 16 / max(data * pod, 1)
+    out["total"] = sum(out.values())
+    return out

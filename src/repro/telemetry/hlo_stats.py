@@ -1,0 +1,180 @@
+"""HLO-text statistics: collective inventory with loop-trip multipliers.
+
+Parses `compiled.as_text()` (post-SPMD, per-device shapes):
+  * every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute op with its byte size,
+  * which computation each op lives in,
+  * while-loop structure: ops in a loop body are multiplied by the loop's
+    trip count (extracted from the loop condition's comparison constant —
+    jax.lax.scan lowers to a counted while; when extraction fails the
+    multiplier defaults to 1 and the op is flagged `trip_uncertain`).
+
+Used for: (a) cross-checking the analytic collective model on small
+configs, (b) §Perf hillclimb evidence (collective count/type diffs),
+(c) the dry-run record in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,1024]{1,0}' or tuple '(f32[2], bf16[4,4])' -> bytes."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    computation: str
+    bytes: int
+    multiplier: int
+    trip_uncertain: bool
+    line: str
+
+
+def _split_computations(hlo: str) -> dict[str, str]:
+    """computation name -> body text."""
+    comps = {}
+    current = None
+    buf: list[str] = []
+    for line in hlo.splitlines():
+        m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{",
+                     line) or re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(", line)
+        if ("{" in line and ("->" in line or line.strip().endswith("{"))
+                and not line.strip().startswith("//")
+                and re.match(r"^\s*(ENTRY\s+)?%?[\w\.\-]+\s*[\(]", line)):
+            if current is not None:
+                comps[current] = "\n".join(buf)
+            name = re.match(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)", line).group(1)
+            current = name
+            buf = [line]
+        elif current is not None:
+            buf.append(line)
+    if current is not None:
+        comps[current] = "\n".join(buf)
+    return comps
+
+
+def _loop_structure(comps: dict[str, str]) -> dict[str, tuple[str, str]]:
+    """while-op body/cond computation names found in each computation:
+    returns body_name -> (parent_computation, cond_name)."""
+    out = {}
+    for parent, body in comps.items():
+        for m in re.finditer(
+                r"while\([^)]*\)[^\n]*condition=%?([\w\.\-]+)[^\n]*"
+                r"body=%?([\w\.\-]+)", body):
+            cond, bod = m.group(1), m.group(2)
+            out[bod] = (parent, cond)
+        for m in re.finditer(
+                r"while\([^)]*\)[^\n]*body=%?([\w\.\-]+)[^\n]*"
+                r"condition=%?([\w\.\-]+)", body):
+            bod, cond = m.group(1), m.group(2)
+            out[bod] = (parent, cond)
+    return out
+
+
+def _trip_count(cond_body: Optional[str]) -> Optional[int]:
+    """Largest integer constant in the loop condition — jax counted loops
+    compare the induction var against the trip count."""
+    if not cond_body:
+        return None
+    consts = [int(m.group(1)) for m in
+              re.finditer(r"constant\((\d+)\)", cond_body)]
+    return max(consts) if consts else None
+
+
+def _multipliers(comps: dict[str, str]) -> dict[str, tuple[int, bool]]:
+    """computation -> (effective multiplier, any_uncertain) walking the
+    loop nesting up to the entry."""
+    loops = _loop_structure(comps)
+    memo: dict[str, tuple[int, bool]] = {}
+
+    def walk(name: str, depth=0) -> tuple[int, bool]:
+        if depth > 16:
+            return 1, True
+        if name in memo:
+            return memo[name]
+        if name not in loops:
+            memo[name] = (1, False)
+            return memo[name]
+        parent, cond = loops[name]
+        trip = _trip_count(comps.get(cond))
+        unc = trip is None
+        trip = trip or 1
+        pmul, punc = walk(parent, depth + 1)
+        memo[name] = (trip * pmul, unc or punc)
+        return memo[name]
+
+    return {name: walk(name) for name in comps}
+
+
+# computations reachable only from call/fusion inherit caller multiplier;
+# we approximate: fusions are inlined in HLO text (calls rare post-opt)
+
+
+def collect_collectives(hlo: str) -> list[CollectiveOp]:
+    comps = _split_computations(hlo)
+    mults = _multipliers(comps)
+    ops: list[CollectiveOp] = []
+    for cname, body in comps.items():
+        mult, unc = mults.get(cname, (1, False))
+        for line in body.splitlines():
+            m = re.match(r"\s*%?[\w\.\-]+\s*=\s*([^\s=]+)\s+"
+                         r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                         r"collective-permute)", line)
+            if not m:
+                continue
+            out_shape, kind = m.group(1), m.group(2)
+            b = _shape_bytes(out_shape)
+            ops.append(CollectiveOp(kind, cname, b, mult, unc, line.strip()))
+    return ops
+
+
+def collective_summary(hlo: str) -> dict:
+    """Aggregate: per-kind op counts and byte totals (loop-multiplied)."""
+    ops = collect_collectives(hlo)
+    by_kind: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0.0,
+                                                    "static_count": 0})
+    total = 0.0
+    uncertain = False
+    for op in ops:
+        e = by_kind[op.kind]
+        e["count"] += op.multiplier
+        e["static_count"] += 1
+        e["bytes"] += op.bytes * op.multiplier
+        total += op.bytes * op.multiplier
+        uncertain |= op.trip_uncertain
+    return {"by_kind": dict(by_kind), "total_bytes": total,
+            "trip_uncertain": uncertain, "n_ops_static": len(ops)}
+
+
+def reshape_transpose_count(hlo: str) -> dict:
+    """Layout-churn indicators for the §Perf loop."""
+    return {
+        "reshape": len(re.findall(r"=\s*\S+\s+reshape\(", hlo)),
+        "transpose": len(re.findall(r"=\s*\S+\s+transpose\(", hlo)),
+        "copy": len(re.findall(r"=\s*\S+\s+copy\(", hlo)),
+    }

@@ -1,0 +1,123 @@
+"""Three-term roofline report per (arch x shape x mesh).
+
+  compute term    = FLOPs / (chips * 197e12)
+  memory term     = HBM bytes / (chips * 819e9)
+  collective term = per-device collective bytes / 50e9 (1 ICI link,
+                    conservative; DCI and host-link terms reported
+                    separately since they overlap compute in ZenFlow)
+
+Primary source: the analytic cost model (costmodel.py — see its docstring
+for why cost_analysis() can't be used directly with scanned layers);
+dry-run artifacts (memory_analysis, HLO collective parse) are recorded
+alongside as compile-proof and cross-checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.telemetry import costmodel as cm
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    host_s: float
+    dci_s: float
+    bottleneck: str
+    model_flops: float
+    expected_flops: float
+    useful_ratio: float       # MODEL_FLOPS / expected-HLO FLOPs
+    step_s: float             # max of the three terms (overlap-ideal)
+    roofline_frac: float      # compute_s / step_s  (1.0 = compute-bound)
+    note: str = ""
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def mesh_shape_of(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        if hasattr(mesh, "axis_names") else dict(mesh)
+
+
+def analyze(cfg: ArchConfig, shape: ShapeConfig, mesh_shape: dict,
+            zen_topk: float = 0.1, zen_S: int = 4,
+            remat_extra: float = 1.0, moe_dispatch: str = "psum",
+            scheme: str = "auto", note: str = "") -> RooflineRow:
+    chips = 1
+    for v in mesh_shape.values():
+        chips *= v
+    if scheme == "auto":
+        # mirror launch.shardspecs.rules_for_cell: odd-head-count archs run
+        # pure-DP/ZeRO-3 on train cells (no TP all-reduces)
+        msz = mesh_shape.get("model", 1)
+        odd = cfg.family != "ssm" and msz and cfg.n_heads % msz != 0
+        scheme = "pure_dp" if (odd and shape.kind == "train" and
+                               cfg.moe is None
+                               and shape.global_batch % chips == 0) else "tp"
+
+    if shape.kind == "train":
+        fr = cm.train_flops(cfg, shape, remat_extra=remat_extra)
+        hbm = cm.train_bytes(cfg, shape, zen_topk, remat_extra)
+        coll = cm.train_collectives(cfg, shape, mesh_shape, zen_topk, zen_S,
+                                    moe_dispatch, scheme=scheme)
+    elif shape.kind == "prefill":
+        fr = cm.prefill_flops(cfg, shape)
+        hbm = cm.prefill_bytes(cfg, shape)
+        coll = cm.train_collectives(cfg, shape, mesh_shape, zen_topk, zen_S,
+                                    moe_dispatch)
+        # inference: no FSDP/grad collectives — keep TP/MoE terms only
+        d = coll.detail
+        ici = d["tp_activation_allreduce"] + d["moe_combine"]
+        coll = cm.CollectiveReport(ici, 0.0, 0.0, d)
+    else:
+        fr = cm.decode_flops(cfg, shape)
+        hbm = cm.decode_bytes(cfg, shape)
+        coll = cm.decode_collectives(cfg, shape, mesh_shape)
+
+    compute_s = fr.expected_hlo_flops / (chips * cm.PEAK_FLOPS_BF16)
+    memory_s = hbm / (chips * cm.HBM_BW)
+    collective_s = coll.ici_bytes / cm.ICI_BW
+    host_s = coll.host_bytes / cm.HOST_LINK_BW
+    dci_s = coll.dci_bytes / (cm.ICI_BW / 10)    # DCI ~ 1/10 ICI bw
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    return RooflineRow(
+        arch=cfg.name, shape=shape.name,
+        mesh="x".join(f"{k}{v}" for k, v in mesh_shape.items()),
+        chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        host_s=host_s, dci_s=dci_s,
+        bottleneck=bottleneck,
+        model_flops=fr.model_flops, expected_flops=fr.expected_hlo_flops,
+        useful_ratio=fr.model_flops / max(fr.expected_hlo_flops, 1),
+        step_s=step,
+        roofline_frac=compute_s / max(step, 1e-30),
+        note=note,
+    )
+
+
+def format_table(rows: list[RooflineRow]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':18s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'host_s':>8s} "
+           f"{'bottleneck':>10s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.mesh:18s} {r.compute_s:10.4f} "
+            f"{r.memory_s:10.4f} {r.collective_s:10.4f} {r.host_s:8.4f} "
+            f"{r.bottleneck:>10s} {r.useful_ratio:7.2f} "
+            f"{100*r.roofline_frac:6.1f}%")
+    return "\n".join(lines)

@@ -1,0 +1,145 @@
+"""Discrete-event simulator of the offloaded-training pipeline.
+
+Reproduces the paper's timing figures (Fig 1/2/3/13, Table 1) for four
+systems on calibrated stage latencies:
+
+  zero_offload : FP+BP -> GO (grad offload) -> UP on CPU -> param upload,
+                 all serialized (Fig 2a).
+  stronghold   : layer-wise overlap of BP with GO/UP (Fig 2b) — CPU update
+                 still dominates.
+  zenflow_star : ZenFlow without the zero-stall pipeline (selective update,
+                 synchronous host apply each window boundary).
+  zenflow      : full zero-stall pipeline (double-buffered async host
+                 update hidden under S iterations, Fig 2d/7).
+
+Stage latencies come from the analytic cost model (FLOPs/bandwidth) with
+hardware constants for the paper's A100 testbed or TPU v5e — the same
+simulator reproduces Table 1's Llama2-7B numbers with the paper's measured
+constants (see tests/test_simulator.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class StageTimes:
+    """Per-iteration stage latencies in seconds."""
+    fwd: float
+    bwd: float
+    grad_offload: float       # full-gradient GPU->CPU
+    cpu_update: float         # full-model CPU optimizer
+    param_upload: float       # full updated params CPU->GPU
+
+    @classmethod
+    def paper_llama2_7b(cls) -> "StageTimes":
+        """Table 1 measured values (4xA100, 128 CPU threads, PCIe4)."""
+        return cls(fwd=0.045, bwd=2.0, grad_offload=0.5,
+                   cpu_update=4.6, param_upload=0.5)
+
+
+@dataclasses.dataclass
+class SimResult:
+    system: str
+    step_time: float
+    stall_time: float
+    gpu_busy: float
+    io_bytes_per_step: float
+    util: float
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def simulate(system: str, st: StageTimes, n_steps: int = 64,
+             topk: float = 0.1, S: int = 4,
+             selective_update_gpu: float = 0.0,
+             model_bytes: float = 14e9) -> SimResult:
+    """Run n_steps of the given system; returns averaged per-step metrics."""
+    gpu_compute = st.fwd + st.bwd
+    if system == "zero_offload":
+        # Fig 2a: strictly serialized
+        step = gpu_compute + st.grad_offload + st.cpu_update + st.param_upload
+        stall = step - gpu_compute
+        io = 2 * model_bytes
+    elif system == "stronghold":
+        # Fig 2b: GO and layer-wise CPU update overlap with BP; the tail of
+        # the CPU update + upload beyond BP stalls the GPU (paper §2.3:
+        # 4600 + 2*500 - 2000 = 3600ms for Llama2-7B)
+        hidden = st.bwd
+        tail = max(st.cpu_update + st.grad_offload + st.param_upload - hidden,
+                   0.0)
+        step = gpu_compute + tail
+        stall = tail
+        io = 2 * model_bytes
+    elif system == "zenflow_star":
+        # selective GPU update every step; complement updated on CPU each
+        # window boundary SYNCHRONOUSLY (no pipeline): the (1-k)-scaled CPU
+        # update + transfers stall the boundary step
+        cpu = st.cpu_update * (1 - topk)
+        go = st.grad_offload * (1 - topk)
+        up = st.param_upload * (1 - topk)
+        boundary_stall = go + cpu + up
+        step = gpu_compute + selective_update_gpu + go * 0 + \
+            boundary_stall / S
+        stall = boundary_stall / S
+        io = (S + 1) / S * (1 - topk) * model_bytes + \
+            2 * topk * 0.0  # important rows never leave the device
+    elif system == "zenflow":
+        # zero-stall pipeline: compact offload overlaps BP; CPU update of a
+        # window overlaps the next S iterations of GPU compute; upload
+        # overlaps too. Residual stall only if the CPU can't keep up:
+        cpu = st.cpu_update * (1 - topk)
+        go = st.grad_offload * (1 - topk)          # per step, overlaps BP
+        up = st.param_upload * (1 - topk)          # per window
+        window_gpu = S * (gpu_compute + selective_update_gpu)
+        window_host = cpu + up                     # hidden under window_gpu
+        tail = max(window_host - window_gpu, 0.0)
+        go_tail = max(go - st.bwd, 0.0)            # offload hides under BP
+        step = gpu_compute + selective_update_gpu + go_tail + tail / S
+        stall = go_tail + tail / S
+        io = (S + 1) / S * (1 - topk) * model_bytes
+    else:
+        raise ValueError(f"unknown system {system}")
+
+    return SimResult(
+        system=system, step_time=step, stall_time=stall,
+        gpu_busy=gpu_compute + (selective_update_gpu
+                                if system.startswith("zenflow") else 0.0),
+        io_bytes_per_step=io,
+        util=(gpu_compute / step) if step else 0.0)
+
+
+def utilization_timeline(system: str, st: StageTimes, topk: float = 0.1,
+                         S: int = 4, n_steps: int = 5, dt: float = 0.05
+                         ) -> list[tuple[float, float]]:
+    """(time, gpu_util 0/1) samples — reproduces Fig 1's shape."""
+    res = simulate(system, st, topk=topk, S=S)
+    busy, idle = res.gpu_busy, res.step_time - res.gpu_busy
+    t, out = 0.0, []
+    for _ in range(n_steps):
+        tt = 0.0
+        while tt < busy:
+            out.append((t + tt, 1.0))
+            tt += dt
+        while tt < busy + idle:
+            out.append((t + tt, 0.0))
+            tt += dt
+        t += res.step_time
+    return out
+
+
+def speedup_table(st: StageTimes, topk: float = 0.1, S: int = 4,
+                  model_bytes: float = 14e9) -> dict:
+    base = simulate("zero_offload", st, topk=topk, S=S,
+                    model_bytes=model_bytes)
+    out = {"zero_offload": base.as_dict()}
+    for sysname in ("stronghold", "zenflow_star", "zenflow"):
+        r = simulate(sysname, st, topk=topk, S=S, model_bytes=model_bytes)
+        d = r.as_dict()
+        d["speedup_vs_zero_offload"] = base.step_time / r.step_time
+        d["stall_reduction"] = 1 - (r.stall_time / base.stall_time
+                                    if base.stall_time else 0)
+        out[sysname] = d
+    return out

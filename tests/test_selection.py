@@ -1,0 +1,101 @@
+"""Selection invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection as sel
+
+
+def test_channel_norms_basic():
+    g = jnp.asarray([[1.0, 2.0], [0.0, 0.0], [3.0, 4.0]])
+    np.testing.assert_allclose(sel.channel_sq_norms(g), [5.0, 0.0, 25.0])
+
+
+def test_topk_picks_largest():
+    norms = jnp.asarray([1.0, 9.0, 3.0, 7.0, 5.0])
+    idx = sel.local_quota_topk(norms, 2)
+    assert sorted(np.asarray(idx).tolist()) == [1, 3]
+
+
+def test_complement_is_exact_partition():
+    norms = jnp.asarray(np.random.default_rng(0).normal(size=24) ** 2)
+    idx = sel.local_quota_topk(norms, 7)
+    comp = sel.complement_indices(idx, 24)
+    both = np.concatenate([np.asarray(idx), np.asarray(comp)])
+    assert sorted(both.tolist()) == list(range(24))
+
+
+def test_gather_scatter_roundtrip():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+    idx = jnp.asarray([2, 5, 11], jnp.int32)
+    rows = sel.gather_rows(x, idx)
+    y = sel.scatter_rows(x, idx, rows * 2)
+    np.testing.assert_allclose(np.asarray(y)[np.asarray(idx)],
+                               np.asarray(rows) * 2)
+    mask = np.ones(16, bool)
+    mask[np.asarray(idx)] = False
+    np.testing.assert_allclose(np.asarray(y)[mask], np.asarray(x)[mask])
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(4, 64), frac=st.floats(0.05, 0.9), seed=st.integers(0, 99))
+def test_property_partition_and_energy(m, frac, seed):
+    """(1) selected + complement partition [0, m); (2) selected channels
+    carry at least their proportional share of energy; (3) retention of
+    identical norms is 1.0."""
+    rng = np.random.default_rng(seed)
+    norms = jnp.asarray(rng.exponential(size=m) ** 2)
+    q = sel.quota_for(m, frac)
+    idx = sel.local_quota_topk(norms, q)
+    comp = sel.complement_indices(idx, m)
+    assert sorted(np.concatenate([np.asarray(idx), np.asarray(comp)]).tolist()) \
+        == list(range(m))
+    rho = float(sel.energy_fraction(norms, idx))
+    assert 0.0 <= rho <= 1.0
+    # top-q selection must capture >= q/m of total energy
+    assert (1 - rho) >= q / m - 1e-6
+    idx2 = sel.local_quota_topk(norms, q)
+    assert float(sel.retention_rate(idx, idx2, m)) == 1.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(8, 48), seed=st.integers(0, 50))
+def test_property_local_quota_vs_global(m, seed):
+    """With 1 shard, local-quota selection == exact global top-k."""
+    rng = np.random.default_rng(seed)
+    norms = jnp.asarray(rng.normal(size=m) ** 2)
+    q = max(1, m // 5)
+    local = sel.local_quota_topk(norms, q)
+    glob = sel.global_topk_reference(norms, q)
+    np.testing.assert_array_equal(np.asarray(local), np.asarray(glob))
+
+
+def test_batched_leading_dims():
+    rng = np.random.default_rng(2)
+    norms = jnp.asarray(rng.normal(size=(3, 2, 16)) ** 2)
+    idx = sel.local_quota_topk(norms, 4)
+    assert idx.shape == (3, 2, 4)
+    comp = sel.complement_indices(idx, 16)
+    assert comp.shape == (3, 2, 12)
+
+
+def test_spatial_locality_retention():
+    """Synthetic gradients with concentrated channels: a fixed selection
+    tracked across steps retains the top-k mass (paper Fig 6b shape)."""
+    rng = np.random.default_rng(3)
+    m, n, steps = 64, 32, 20
+    hot = rng.choice(m, 6, replace=False)          # persistent hot channels
+    sel_idx = None
+    retained = []
+    for t in range(steps):
+        g = rng.normal(size=(m, n)) * 0.01
+        g[hot] += rng.normal(size=(6, n)) * 1.0    # spatial locality
+        norms = sel.channel_sq_norms(jnp.asarray(g))
+        new_idx = sel.local_quota_topk(norms, 8)
+        if sel_idx is not None:
+            retained.append(float(sel.retention_rate(sel_idx, new_idx, m)))
+        sel_idx = new_idx
+    assert np.mean(retained) > 0.7   # hot channels dominate selection

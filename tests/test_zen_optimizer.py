@@ -1,0 +1,200 @@
+"""ZenFlow optimizer semantics: equivalence with AdamW, staleness modes,
+autotune, I/O accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.selection import selection_mask
+from repro.core.zen_optimizer import (ZenFlowConfig, zenflow_init,
+                                      zenflow_step)
+from repro.optim import adamw, apply_updates
+
+
+@pytest.fixture
+def params():
+    rng = np.random.default_rng(0)
+    return {
+        "w1": jnp.asarray(rng.normal(size=(64, 128)) * 0.1, jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(2, 64, 64)) * 0.1, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(64,)) * 0.1, jnp.float32),
+    }
+
+
+def _grads(params, i):
+    r = np.random.default_rng(100 + i)
+    return jax.tree.map(
+        lambda p: jnp.asarray(r.normal(size=p.shape) * 0.01,
+                              jnp.float32).astype(jnp.bfloat16), params)
+
+
+def _run_ref(params, steps, lr=1e-3, wd=0.01):
+    opt = adamw(lr=lr, weight_decay=wd)
+    st = opt.init(params)
+    p = params
+    for i in range(steps):
+        upd, st = opt.update(_grads(params, i), st, p)
+        p = apply_updates(p, upd)
+    return p
+
+
+def test_k1_s1_equals_adamw(params):
+    """topk=1.0, S=1, sync: every row is 'important' -> plain AdamW."""
+    p_ref = _run_ref(params, 8)
+    zcfg = ZenFlowConfig(topk_ratio=1.0, update_interval=1,
+                         refresh_interval=1, lr=1e-3, weight_decay=0.01,
+                         pipeline="sync", use_kernels="never")
+    zs = zenflow_init(params, zcfg)
+    p = params
+    for i in range(8):
+        p, zs, _ = zenflow_step(p, _grads(params, i), zs, zcfg)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p[k]), np.asarray(p_ref[k]),
+                                   rtol=3e-5, atol=3e-6)
+
+
+def test_fixed_selection_s1_exact(params):
+    """S=1 sync with stable selection: device rows AND f32 host master both
+    match AdamW exactly (the split changes nothing at S=1)."""
+    p_ref = _run_ref(params, 8)
+    zcfg = ZenFlowConfig(topk_ratio=0.25, update_interval=1,
+                         refresh_interval=100, lr=1e-3, weight_decay=0.01,
+                         pipeline="sync", use_kernels="never")
+    zs = zenflow_init(params, zcfg)
+    p = params
+    for i in range(8):
+        p, zs, _ = zenflow_step(p, _grads(params, i), zs, zcfg)
+    for k in ("w1", "w2"):
+        m = params[k].shape[-2]
+        mask = np.asarray(selection_mask(zs["sel_idx"][k], m))[..., None]
+        np.testing.assert_allclose(np.asarray(p[k]) * mask,
+                                   np.asarray(p_ref[k]) * mask,
+                                   rtol=3e-5, atol=3e-6)
+        master = np.asarray(zs["host"]["master"][k])
+        np.testing.assert_allclose(master * ~mask,
+                                   np.asarray(p_ref[k]) * ~mask,
+                                   rtol=3e-5, atol=3e-6)
+    np.testing.assert_allclose(np.asarray(p["b"]), np.asarray(p_ref["b"]),
+                               rtol=3e-5, atol=3e-6)
+
+
+def test_bounded_staleness_deviation(params):
+    """S=4 async deviates from synchronous AdamW by a bounded amount."""
+    p_ref = _run_ref(params, 16, wd=0.0)
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                         refresh_interval=8, lr=1e-3, pipeline="async",
+                         use_kernels="never")
+    zs = zenflow_init(params, zcfg)
+    p = params
+    for i in range(16):
+        p, zs, met = zenflow_step(p, _grads(params, i), zs, zcfg)
+    for k in params:
+        assert bool(jnp.isfinite(p[k]).all())
+        dev = float(jnp.max(jnp.abs(p[k].astype(jnp.float32)
+                                    - p_ref[k].astype(jnp.float32))))
+        # staleness bound: at most S steps of lr-sized drift
+        assert dev < 1e-3 * 16, f"{k}: {dev}"
+    assert 0.0 <= float(met["rho"]) <= 1.0
+
+
+def test_sync_vs_async_differ_only_within_window(params):
+    """sync and async agree right after both have applied the same windows
+    when gradients stop (staleness flushes out)."""
+    zc_sync = ZenFlowConfig(topk_ratio=0.2, update_interval=2,
+                            refresh_interval=100, lr=1e-3, pipeline="sync",
+                            use_kernels="never")
+    zc_async = ZenFlowConfig(topk_ratio=0.2, update_interval=2,
+                             refresh_interval=100, lr=1e-3, pipeline="async",
+                             use_kernels="never")
+    zs_s, zs_a = zenflow_init(params, zc_sync), zenflow_init(params, zc_async)
+    p_s = p_a = params
+    for i in range(6):
+        g = _grads(params, i)
+        p_s, zs_s, _ = zenflow_step(p_s, g, zs_s, zc_sync)
+        p_a, zs_a, _ = zenflow_step(p_a, g, zs_a, zc_async)
+    # async params lag by exactly one window on complement rows
+    diff = float(jnp.max(jnp.abs(p_s["w1"] - p_a["w1"])))
+    assert diff > 0.0                          # staleness visible
+    # masters agree on what has been applied so far (sync applied 3 windows,
+    # async 2) — after two zero-gradient windows they converge
+    for i in range(6, 10):
+        zg = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.bfloat16), params)
+        p_s, zs_s, _ = zenflow_step(p_s, zg, zs_s, zc_sync)
+        p_a, zs_a, _ = zenflow_step(p_a, zg, zs_a, zc_async)
+    # Adam with zero grads still decays moments -> small drift allowed
+    diff2 = float(jnp.max(jnp.abs(p_s["w1"] - p_a["w1"])))
+    assert diff2 < 2e-3
+
+
+def test_warmup_forces_synchronous(params):
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                         refresh_interval=8, warmup_steps=4, lr=1e-3,
+                         pipeline="sync", use_kernels="never")
+    zs = zenflow_init(params, zcfg)
+    p = params
+    for i in range(4):
+        p, zs, met = zenflow_step(p, _grads(params, i), zs, zcfg)
+        assert bool(met["boundary"])           # every warmup step applies
+
+
+def test_autotune_adapts_interval(params):
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                         refresh_interval=8, auto_tune=True, s_max=8,
+                         lr=1e-3, pipeline="sync", use_kernels="never")
+    zs = zenflow_init(params, zcfg)
+    p = params
+    for i in range(12):
+        p, zs, _ = zenflow_step(p, _grads(params, i), zs, zcfg)
+    s_eff = int(zs["host"]["s_eff"])
+    assert 1 <= s_eff <= 8
+
+
+def test_refresh_must_align_with_window():
+    with pytest.raises(ValueError):
+        ZenFlowConfig(update_interval=4, refresh_interval=6)
+
+
+def test_io_traffic_closed_form():
+    """zen_spmd.io_traffic_report matches the paper's (S+1)/S*(1-k)*M."""
+    from repro.distributed import zen_spmd
+    from repro.distributed.sharding import DEFAULT_RULES
+    from repro.core.zen_optimizer import ZenFlowConfig
+    params = {"w": jax.ShapeDtypeStruct((256, 128), jnp.bfloat16)}
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                         refresh_interval=4, use_kernels="never")
+    segs = zen_spmd.build_segments(params, zcfg, DEFAULT_RULES)
+    host_spec = jax.eval_shape(
+        lambda: {"g_comp": {"w": jnp.zeros((1, 230, 128), jnp.bfloat16)},
+                 "old_rows": {"w": jnp.zeros((1, 26, 128), jnp.bfloat16)}})
+    pend_spec = zen_spmd.pending_specs(segs, params)
+    M = 256 * 128 * 2
+    rep = zen_spmd.io_traffic_report(host_spec, pend_spec, zcfg, M)
+    assert rep["zero_offload_bytes"] == 2 * M
+    # within 15% of the paper's closed form (quota rounding)
+    assert abs(rep["per_step_bytes"] - rep["paper_closed_form_bytes"]) \
+        < 0.15 * rep["paper_closed_form_bytes"]
+    assert rep["reduction_vs_zero_offload"] > 1.5
+
+
+def test_int8_host_grad_compression(params):
+    """int8 complement-gradient compression converges close to bf16 and
+    halves host-link bytes (beyond-paper §Perf optimization)."""
+    import jax
+    zc16 = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                         refresh_interval=8, lr=1e-3, pipeline="sync",
+                         use_kernels="never")
+    zc8 = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                        refresh_interval=8, lr=1e-3, pipeline="sync",
+                        use_kernels="never", compress_host_grads="int8")
+    zs16, zs8 = zenflow_init(params, zc16), zenflow_init(params, zc8)
+    p16 = p8 = params
+    for i in range(12):
+        g = _grads(params, i)
+        p16, zs16, _ = zenflow_step(p16, g, zs16, zc16)
+        p8, zs8, m8 = zenflow_step(p8, g, zs8, zc8)
+    for k in ("w1", "w2"):
+        d = float(jnp.max(jnp.abs(p16[k] - p8[k])))
+        # Adam normalizes by sqrt(v): int8 gradient noise stays within a
+        # few bf16 quanta of the uncompressed trajectory
+        assert d < 5e-3, f"{k}: int8 drift {d}"
+        assert bool(jnp.isfinite(p8[k]).all())
