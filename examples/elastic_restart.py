@@ -1,65 +1,59 @@
 """Fault-tolerance demo: train, checkpoint, simulate a crash, restart and
-verify bitwise-continued training; then an elastic restore.
+verify bitwise-continued training (all through the Engine facade); then an
+elastic restore onto a fresh mesh.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
-import sys
 import tempfile
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, reduced_config
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.data import make_train_stream
-from repro.distributed.sharding import DEFAULT_RULES
-from repro.models import build_model
-from repro.runtime import ZenFlowRuntime
+from repro.engine import Engine
+from repro.launch.mesh import make_mesh
 from repro.runtime.elastic import elastic_restore
 
 
 def main():
     cfg = reduced_config(get_config("llama2-7b"))
-    model = build_model(cfg)
     zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
                          refresh_interval=8, lr=1e-3)
     loader = make_train_stream(cfg.vocab, 32, 8)
 
     with tempfile.TemporaryDirectory() as d:
         ckpt = CheckpointManager(d, async_save=False)
-        rt = ZenFlowRuntime(model, zcfg, DEFAULT_RULES)
-        rt.init(jax.random.PRNGKey(0))
+        eng = Engine.from_config(cfg, zcfg, backend="async")
+        eng.init(jax.random.PRNGKey(0))
         for i in range(8):
             batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
-            m = rt.step(batch)
-        ckpt.save(rt.state_dict(), 8, extra={"loader": loader.state()})
+            m = eng.step(batch)
+        ckpt.save(eng.state_dict(), 8, extra={"loader": loader.state()})
         print(f"[run-1] trained to step 8, loss {m['loss']:.4f}; "
               "checkpoint saved — simulating crash")
         batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
-        expect = rt.step(batch)["loss"]
-        rt.close()
+        expect = eng.step(batch)["loss"]
+        eng.close()
 
         # ---- restart ----
-        rt2 = ZenFlowRuntime(model, zcfg, DEFAULT_RULES)
-        rt2.init(jax.random.PRNGKey(0))          # allocate shapes
-        sd, manifest = ckpt.restore(rt2.state_dict())
-        rt2.load_state_dict(sd)
+        eng2 = Engine.from_config(cfg, zcfg, backend="async")
+        eng2.init(jax.random.PRNGKey(0))         # allocate shapes
         loader2 = make_train_stream(cfg.vocab, 32, 8)
-        loader2.restore(manifest["extra"]["loader"])
+        step = eng2.restore_latest(ckpt, loader2)
         batch2 = {k: jnp.asarray(v) for k, v in loader2.next_batch().items()}
-        got = rt2.step(batch2)["loss"]
-        print(f"[run-2] resumed from step {manifest['step']}: "
+        got = eng2.step(batch2)["loss"]
+        print(f"[run-2] resumed from step {step}: "
               f"loss {got:.6f} (expected {expect:.6f}) "
               f"-> {'EXACT' if abs(got-expect) < 1e-5 else 'MISMATCH'}")
-        rt2.close()
+        eng2.close()
 
         # ---- elastic restore (re-mesh path) ----
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        # elastic_restore understands Engine checkpoints directly
+        model = eng2.model
+        mesh = make_mesh((1, 1), ("data", "model"))
         sd3, rules, segs, step, survived = elastic_restore(
             model, zcfg, mesh, ckpt)
         print(f"[elastic] restored step {step} onto mesh "

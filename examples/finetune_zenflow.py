@@ -1,27 +1,22 @@
 """End-to-end driver: fine-tune a ~100M-parameter model for a few hundred
 steps with ZenFlow, with checkpointing and a dense-AdamW baseline for
-comparison (paper Fig 14 protocol at laptop scale).
+comparison (paper Fig 14 protocol at laptop scale). Both modes run through
+the same Engine — the baseline is just `backend="baseline"`.
 
     PYTHONPATH=src python examples/finetune_zenflow.py --steps 300
+    PYTHONPATH=src python examples/finetune_zenflow.py --steps 300 --baseline
 """
 import argparse
-import sys
-import time
-
-sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, reduced_config
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.data import make_train_stream
-from repro.distributed.sharding import DEFAULT_RULES
-from repro.models import build_model
-from repro.optim import adamw, apply_updates, cosine_with_warmup
-from repro.runtime import ZenFlowRuntime
+from repro.engine import CheckpointCallback, Engine, TelemetryCallback
+from repro.optim import cosine_with_warmup
 
 
 def build_100m():
@@ -41,50 +36,25 @@ def main():
     args = ap.parse_args()
 
     cfg = build_100m()
-    model = build_model(cfg)
-    n = sum(np.prod(x.shape) for x in jax.tree.leaves(model.param_specs()))
-    print(f"[finetune] {cfg.name}: {n/1e6:.1f}M params")
-    loader = make_train_stream(cfg.vocab, args.seq, args.batch)
-    sched = cosine_with_warmup(1e-3, args.steps)
-
-    if args.baseline:
-        params = model.init(jax.random.PRNGKey(0))
-        opt = adamw(lr=sched)
-        state = opt.init(params)
-
-        @jax.jit
-        def step(params, state, batch):
-            (loss, _), grads = jax.value_and_grad(
-                model.loss_fn, has_aux=True)(params, batch)
-            upd, state = opt.update(grads, state, params)
-            return apply_updates(params, upd), state, loss
-
-        t0 = time.time()
-        for i in range(args.steps):
-            batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
-            params, state, loss = step(params, state, batch)
-            if (i + 1) % 50 == 0:
-                print(f"[adamw] step {i+1} loss {float(loss):.4f} "
-                      f"({(i+1)/(time.time()-t0):.2f} it/s)")
-        return
-
     zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
                          refresh_interval=16, warmup_steps=10,
-                         lr=sched)
-    rt = ZenFlowRuntime(model, zcfg, DEFAULT_RULES).init(jax.random.PRNGKey(0))
-    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
-    t0 = time.time()
-    for i in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
-        m = rt.step(batch)
-        if (i + 1) % 50 == 0:
-            print(f"[zenflow] step {i+1} loss {m['loss']:.4f} "
-                  f"rho {m['rho']:.3f} "
-                  f"({(i+1)/(time.time()-t0):.2f} it/s)")
-            ckpt.save(rt.state_dict(), i + 1, extra={"loader": loader.state()})
-    ckpt.wait()
-    rt.close()
-    print(f"[zenflow] finished; checkpoints in {args.ckpt_dir}")
+                         lr=cosine_with_warmup(1e-3, args.steps))
+    backend = "baseline" if args.baseline else "async"
+    loader = make_train_stream(cfg.vocab, args.seq, args.batch)
+
+    callbacks = [TelemetryCallback(every=50, prefix=backend)]
+    if not args.baseline:
+        ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+        callbacks.append(CheckpointCallback(ckpt, every=50, loader=loader))
+
+    eng = Engine.from_config(cfg, zcfg, backend=backend, callbacks=callbacks)
+    n = sum(np.prod(x.shape) for x in jax.tree.leaves(eng.model.param_specs()))
+    print(f"[finetune] {cfg.name}: {n/1e6:.1f}M params ({backend} backend)")
+    eng.init(jax.random.PRNGKey(0))
+    eng.run(loader, args.steps)
+    eng.close()
+    if not args.baseline:
+        print(f"[zenflow] finished; checkpoints in {args.ckpt_dir}")
 
 
 if __name__ == "__main__":

@@ -1,27 +1,20 @@
-"""Quickstart: ZenFlow fine-tuning in ~30 lines.
+"""Quickstart: ZenFlow fine-tuning through the unified Engine in ~25 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import sys
-
-sys.path.insert(0, "src")
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced_config
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.data import make_train_stream
-from repro.distributed.sharding import DEFAULT_RULES
-from repro.models import build_model
-from repro.runtime import ZenFlowRuntime
+from repro.engine import Engine
 
 
 def main():
     # a tiny llama-family model (CPU-runnable); swap for any of the 13
     # registered configs on real hardware
     cfg = reduced_config(get_config("llama2-7b"))
-    model = build_model(cfg)
 
     zcfg = ZenFlowConfig(
         topk_ratio=0.1,        # top 10% of input channels update on-device
@@ -29,17 +22,20 @@ def main():
         refresh_interval=16,   # selection refresh cadence
         lr=2e-3,
     )
-    rt = ZenFlowRuntime(model, zcfg, DEFAULT_RULES).init(jax.random.PRNGKey(0))
+    # backend="async" is the paper's zero-stall two-program pipeline;
+    # "sync" / "fused" / "baseline" run behind the same API
+    eng = Engine.from_config(cfg, zcfg, backend="async")
+    eng.init(jax.random.PRNGKey(0))
 
     loader = make_train_stream(cfg.vocab, seq_len=64, global_batch=8)
     for step in range(40):
         batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
-        m = rt.step(batch)
+        m = eng.step(batch)
         if (step + 1) % 10 == 0:
             print(f"step {step+1:3d}  loss {m['loss']:.4f}  "
                   f"rho {m['rho']:.3f}  stall {m['stall']*1e3:.1f} ms  "
                   f"boundary {m['boundary']}")
-    rt.close()
+    eng.close()
     print("done — GPU(device) never waited on the host optimizer.")
 
 

@@ -3,9 +3,6 @@
     PYTHONPATH=src python examples/serve_decode.py --arch qwen3-4b
 """
 import argparse
-import sys
-
-sys.path.insert(0, "src")
 
 import numpy as np
 

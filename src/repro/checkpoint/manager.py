@@ -79,11 +79,26 @@ def save_pytree(tree, directory: str, step: int,
     return final
 
 
+def _may_skip(key: str, missing_ok) -> bool:
+    if missing_ok is True:
+        return True
+    if not missing_ok:
+        return False
+    return key in missing_ok or key.rsplit("/", 1)[-1] in missing_ok
+
+
 def load_pytree(directory: str, like, step: Optional[int] = None,
-                shardings=None, verify: bool = True):
+                shardings=None, verify: bool = True,
+                missing_ok=False):
     """Restore a pytree structured `like` (arrays or ShapeDtypeStructs).
     `shardings`: optional matching pytree of NamedShardings for re-sharding
-    onto the current mesh (elastic restore)."""
+    onto the current mesh (elastic restore). `missing_ok`: True, or a
+    collection of key names (full paths or basenames) that may be absent
+    from the archive — those keep the `like` leaf value (forward-compat
+    restore of checkpoints written before a state field existed). Prefer
+    the explicit collection: a blanket True masks genuinely mismatched
+    layouts (e.g. a checkpoint from a different backend) as a successful
+    restore of freshly-initialized state."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -99,6 +114,9 @@ def load_pytree(directory: str, like, step: Optional[int] = None,
     leaves = []
     for i, (path, leaf) in enumerate(flat):
         key = path_str(path)
+        if key not in npz.files and _may_skip(key, missing_ok):
+            leaves.append(leaf)
+            continue
         arr = npz[key]
         if verify:
             crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
@@ -166,13 +184,28 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def restore(self, like, step: Optional[int] = None, shardings=None):
+    def restore(self, like, step: Optional[int] = None, shardings=None,
+                missing_ok=False):
         self.wait()
-        return load_pytree(self.directory, like, step, shardings)
+        return load_pytree(self.directory, like, step, shardings,
+                           missing_ok=missing_ok)
 
     def latest_step(self) -> Optional[int]:
         self.wait()
         return latest_step(self.directory)
+
+    def array_keys(self, step: Optional[int] = None) -> list:
+        """Array paths stored at `step` (default: latest); [] when empty.
+        Lets callers detect a checkpoint's layout before restoring."""
+        self.wait()
+        if step is None:
+            step = latest_step(self.directory)
+        if step is None:
+            return []
+        path = os.path.join(self.directory, f"step_{step:08d}",
+                            "manifest.json")
+        with open(path) as f:
+            return list(json.load(f)["arrays"].keys())
 
     def _gc(self):
         steps = sorted(

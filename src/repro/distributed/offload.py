@@ -25,16 +25,46 @@ from repro.core.zen_optimizer import ZenFlowConfig
 from repro.core import selection as sel
 
 
-def host_sharding(mesh: Mesh, *spec) -> NamedSharding:
-    """NamedSharding pinned to host memory."""
-    return NamedSharding(mesh, P(*spec)).with_memory_kind("pinned_host")
+# How host placement shows up in lowered IR: memory-kind custom-calls
+# (pinned_host / S(5)) on TPU+GPU; XLA:CPU elides those for unpinned_host
+# but keeps compute_on's _xla_compute_type attribute.
+HOST_PLACEMENT_MARKERS = ("pinned_host", "S(5)",
+                          '_xla_compute_type = "host"', "device_host")
 
 
-def host_state_shardings(host_state_spec, segs, rules):
-    """pinned_host shardings for the ZenFlow host state (fused mode)."""
+def has_host_placement(ir_text: str) -> bool:
+    """True when lowered IR carries any host-placement marker."""
+    return any(m in ir_text for m in HOST_PLACEMENT_MARKERS)
+
+
+def host_memory_kind(device=None) -> Optional[str]:
+    """Best host-side memory kind this backend can address: "pinned_host"
+    on TPU/GPU; XLA:CPU exposes only "unpinned_host"; None if neither."""
+    dev = device if device is not None else jax.devices()[0]
+    try:
+        kinds = {m.kind for m in dev.addressable_memories()}
+    except Exception:
+        return None
+    for k in ("pinned_host", "unpinned_host"):
+        if k in kinds:
+            return k
+    return None
+
+
+def host_sharding(mesh: Mesh, *spec, kind: Optional[str] = None
+                  ) -> NamedSharding:
+    """NamedSharding pinned to host memory (auto-detected kind)."""
+    kind = kind or host_memory_kind(mesh.devices.flat[0]) or "pinned_host"
+    return NamedSharding(mesh, P(*spec)).with_memory_kind(kind)
+
+
+def host_state_shardings(host_state_spec, segs, rules, kind=None):
+    """Host-memory shardings for the ZenFlow host state (fused mode)."""
     from repro.launch.shardspecs import dstate_shardings
     dev = dstate_shardings(host_state_spec, segs, rules)
-    return jax.tree.map(lambda s: s.with_memory_kind("pinned_host"), dev)
+    kind = kind or host_memory_kind(rules.mesh.devices.flat[0]) \
+        or "pinned_host"
+    return jax.tree.map(lambda s: s.with_memory_kind(kind), dev)
 
 
 def fused_accumulate(acc, g_comp, comp_idx):
@@ -51,7 +81,7 @@ def make_fused_accumulate_step(mesh: Mesh):
     the same pattern with host_apply under the same compute_on scope."""
     p_g = NamedSharding(mesh, P("data", "model"))
     p_acc = host_sharding(mesh, "data", "model")
-    p_g_host = p_g.with_memory_kind("pinned_host")
+    p_g_host = p_g.with_memory_kind(p_acc.memory_kind)
 
     def step(acc, g):
         # explicit device->host transfer (the PCIe hop), then host compute

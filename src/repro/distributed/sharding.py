@@ -103,6 +103,16 @@ def current_rules() -> Optional[MeshRules]:
     return getattr(_tls, "rules", None)
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+    """Version-compatible shard_map (top-level `jax.shard_map` only exists
+    in newer jax; older releases ship jax.experimental.shard_map)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 def shard_act(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     """Apply with_sharding_constraint if rules are installed; no-op otherwise.
 

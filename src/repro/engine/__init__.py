@@ -1,0 +1,28 @@
+"""Unified ZenFlow training API: one `Engine`, pluggable backends."""
+from repro.engine.backends import (
+    AsyncBackend,
+    BackendUnavailable,
+    BaselineBackend,
+    ExecutionBackend,
+    FusedBackend,
+    SyncBackend,
+    available_backends,
+    make_backend,
+    register_backend,
+)
+from repro.engine.callbacks import (
+    Callback,
+    CheckpointCallback,
+    StragglerWatchdog,
+    TelemetryCallback,
+)
+from repro.engine.engine import Engine, default_rules
+
+__all__ = [
+    "Engine", "default_rules",
+    "ExecutionBackend", "SyncBackend", "AsyncBackend", "FusedBackend",
+    "BaselineBackend", "BackendUnavailable",
+    "register_backend", "make_backend", "available_backends",
+    "Callback", "CheckpointCallback", "TelemetryCallback",
+    "StragglerWatchdog",
+]

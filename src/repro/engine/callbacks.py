@@ -1,0 +1,121 @@
+"""Engine callbacks: the checkpoint / telemetry / straggler plumbing that
+used to be re-implemented by every driver (launch/train.py, examples/*)
+and inlined in ZenFlowRuntime.step, factored into composable hooks.
+
+Hook order per step: backend.step -> each callback's `on_step_end` (which
+may enrich the metrics dict in place, e.g. `straggler_flag`).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+
+class Callback:
+    """No-op base. Subclass and override the hooks you need."""
+
+    def on_run_start(self, engine, steps: int) -> None:
+        pass
+
+    def on_step_end(self, engine, step: int, metrics: dict) -> None:
+        pass
+
+    def on_run_end(self, engine, result: dict) -> None:
+        pass
+
+    def on_close(self, engine) -> None:
+        pass
+
+
+class TelemetryCallback(Callback):
+    """Periodic progress line: loss / rho / stall / throughput."""
+
+    def __init__(self, every: int = 10, prefix: str = "train"):
+        self.every = every
+        self.prefix = prefix
+        self._t0: Optional[float] = None
+        self._start = 0
+
+    def on_run_start(self, engine, steps: int) -> None:
+        self._t0 = time.time()
+        self._start = engine.step_count
+
+    def on_step_end(self, engine, step: int, metrics: dict) -> None:
+        if not self.every or step % self.every:
+            return
+        if self._t0 is None:                     # stepped outside run()
+            self._t0, self._start = time.time(), step
+        rate = (step - self._start) / max(time.time() - self._t0, 1e-9)
+        parts = [f"[{self.prefix}] step {step}"]
+        if "loss" in metrics:
+            parts.append(f"loss {metrics['loss']:.4f}")
+        if "rho" in metrics:
+            parts.append(f"rho {metrics['rho']:.3f}")
+        if "stall" in metrics:
+            parts.append(f"stall {metrics['stall']*1e3:.1f}ms")
+        parts.append(f"{rate:.2f} it/s")
+        print("  ".join(parts))
+
+
+class CheckpointCallback(Callback):
+    """Periodic + final checkpoints of `engine.state_dict()`.
+
+    Saves every `every` steps (0 = final only) through a CheckpointManager
+    and records the data-loader cursor so a restart replays no batch.
+    """
+
+    def __init__(self, manager, every: int = 0, loader=None,
+                 save_final: bool = True):
+        self.manager = manager
+        self.every = every
+        self.loader = loader
+        self.save_final = save_final
+        self._last_saved: Optional[int] = None
+
+    def _save(self, engine, step: int) -> None:
+        extra = {}
+        if self.loader is not None:
+            extra["loader"] = self.loader.state()
+        self.manager.save(engine.state_dict(), step, extra=extra)
+        self._last_saved = step
+
+    def on_step_end(self, engine, step: int, metrics: dict) -> None:
+        if self.every and step % self.every == 0:
+            engine.flush()
+            self._save(engine, step)
+
+    def on_run_end(self, engine, result: dict) -> None:
+        if self.save_final and self._last_saved != engine.step_count \
+                and engine.step_count > 0:
+            self._save(engine, engine.step_count)
+        self.manager.wait()
+
+
+class StragglerWatchdog(Callback):
+    """Wall-time EMA watchdog (previously inlined in ZenFlowRuntime.step).
+
+    Flags steps slower than `factor` x the running EMA into
+    `metrics["straggler_flag"]` and keeps the flagged step numbers.
+    """
+
+    def __init__(self, ema: float = 0.9, factor: float = 3.0,
+                 verbose: bool = False):
+        self.ema_coef = ema
+        self.factor = factor
+        self.verbose = verbose
+        self.ema: Optional[float] = None
+        self.flagged: list[int] = []
+
+    def on_step_end(self, engine, step: int, metrics: dict) -> None:
+        dt = metrics.get("step_time")
+        if dt is None:
+            return
+        self.ema = dt if self.ema is None else \
+            self.ema_coef * self.ema + (1 - self.ema_coef) * dt
+        flag = bool(dt > self.factor * (self.ema or dt))
+        metrics["straggler_flag"] = flag
+        if flag:
+            self.flagged.append(step)
+            if self.verbose:
+                print(f"[watchdog] step {step}: {dt*1e3:.1f}ms "
+                      f"(EMA {self.ema*1e3:.1f}ms)")

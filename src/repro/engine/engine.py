@@ -1,0 +1,168 @@
+"""`Engine`: the single training facade over every execution backend.
+
+    from repro.engine import Engine
+    eng = Engine.from_config("llama2-7b", zcfg, backend="async",
+                             callbacks=[TelemetryCallback(every=10)])
+    eng.init(jax.random.PRNGKey(0))
+    for _ in range(steps):
+        metrics = eng.step(loader_batch())
+    eng.close()
+
+or, with the shared loop (checkpointing/telemetry via callbacks):
+
+    eng.run(loader, steps)
+
+One facade, four stock backends (sync / async / fused / baseline — see
+engine/backends.py), uniform checkpointing via
+`state_dict()`/`load_state_dict()` through `CheckpointManager`.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.distributed.sharding import DEFAULT_RULES, MeshRules, rules_for_mesh
+from repro.engine.backends import ExecutionBackend, make_backend
+from repro.engine.callbacks import Callback
+from repro.models import build_model
+from repro.runtime.zen_runtime import OPTIONAL_CKPT_KEYS
+
+
+def default_rules() -> MeshRules:
+    """Single-device rules, or mesh rules over all visible devices."""
+    n_dev = len(jax.devices())
+    if n_dev == 1:
+        return DEFAULT_RULES
+    from repro.launch.mesh import make_mesh_for
+    return rules_for_mesh(make_mesh_for(n_dev))
+
+
+class Engine:
+    """Uniform train-step facade; all mode-specific logic lives in the
+    backend, all side-band concerns (ckpt/telemetry/watchdog) in
+    callbacks."""
+
+    def __init__(self, model, zcfg: ZenFlowConfig,
+                 backend: ExecutionBackend,
+                 callbacks: Sequence[Callback] = ()):
+        self.model = model
+        self.zcfg = zcfg
+        self.backend = backend
+        self.callbacks = list(callbacks)
+        self._step = 0
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_config(cls, cfg, zcfg: Optional[ZenFlowConfig] = None,
+                    backend: Union[str, ExecutionBackend] = "async",
+                    rules: Optional[MeshRules] = None,
+                    callbacks: Sequence[Callback] = (),
+                    rcfg=None, **backend_kw) -> "Engine":
+        """Build an engine from an ArchConfig (or registered config name).
+
+        `backend` is a registry name ("sync" | "async" | "fused" |
+        "baseline" | anything passed to `register_backend`) or an already
+        constructed ExecutionBackend.
+        """
+        if isinstance(cfg, str):
+            cfg = get_config(cfg)
+        model = build_model(cfg)
+        zcfg = ZenFlowConfig() if zcfg is None else zcfg
+        rules = default_rules() if rules is None else rules
+        if isinstance(backend, str):
+            backend = make_backend(backend, model, zcfg, rules,
+                                   rcfg=rcfg, **backend_kw)
+        return cls(model, zcfg, backend, callbacks)
+
+    # ------------------------------------------------------------------
+    @property
+    def step_count(self) -> int:
+        return self._step
+
+    def add_callback(self, cb: Callback) -> "Engine":
+        self.callbacks.append(cb)
+        return self
+
+    def init(self, key) -> "Engine":
+        self.backend.init(key)
+        return self
+
+    def step(self, batch) -> dict:
+        """One training step -> metrics dict (callbacks may enrich it)."""
+        t0 = time.perf_counter()
+        metrics = self.backend.step(batch)
+        metrics.setdefault("step_time", time.perf_counter() - t0)
+        self._step += 1
+        for cb in self.callbacks:
+            cb.on_step_end(self, self._step, metrics)
+        return metrics
+
+    def run(self, loader, steps: int) -> dict:
+        """The shared training loop every driver previously duplicated:
+        pulls batches from `loader`, steps to `steps` (resume-aware), and
+        fires run-level callback hooks."""
+        for cb in self.callbacks:
+            cb.on_run_start(self, steps)
+        losses = []
+        for _ in range(self._step, steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in loader.next_batch().items()}
+            m = self.step(batch)
+            if "loss" in m:
+                losses.append(m["loss"])
+        self.flush()
+        result = {"losses": losses,
+                  "final_loss": losses[-1] if losses else None,
+                  "steps": self._step}
+        for cb in self.callbacks:
+            cb.on_run_end(self, result)
+        return result
+
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {"backend": self.backend.state_dict(),
+                "engine_step": self._step}
+
+    def load_state_dict(self, sd: dict) -> "Engine":
+        self.backend.load_state_dict(sd["backend"])
+        self._step = int(sd.get("engine_step", 0))
+        return self
+
+    def restore_latest(self, ckpt, loader=None) -> Optional[int]:
+        """Resume from the newest checkpoint in `ckpt` (CheckpointManager);
+        returns the resumed step, or None when the directory is empty.
+        Call after `init()` (restore needs the state shapes)."""
+        if ckpt.latest_step() is None:
+            return None
+        like = self.state_dict()
+        keys = ckpt.array_keys()
+        # only fields added after the first release may be absent; any
+        # other mismatch (e.g. a different backend's checkpoint) raises
+        optional = OPTIONAL_CKPT_KEYS + ("engine_step",)
+        if keys and not any(k.startswith("backend/") for k in keys):
+            # pre-Engine checkpoint: backend state dict at the top level
+            backend_sd, manifest = ckpt.restore(like["backend"],
+                                                missing_ok=optional)
+            sd = {"backend": backend_sd,
+                  "engine_step": int(manifest["step"])}
+        else:
+            sd, manifest = ckpt.restore(like, missing_ok=optional)
+        self.load_state_dict(sd)
+        self._step = int(manifest["step"])
+        if loader is not None:
+            loader.restore(manifest["extra"].get(
+                "loader", {"step": self._step}))
+        return self._step
+
+    def flush(self) -> None:
+        self.backend.flush()
+
+    def close(self) -> None:
+        for cb in self.callbacks:
+            cb.on_close(self)
+        self.backend.close()

@@ -25,6 +25,7 @@ from repro.configs import SHAPES, get_config, list_configs
 from repro.launch.mesh import make_production_mesh
 from repro.launch import shardspecs
 from repro.telemetry import hlo_stats
+from repro.telemetry.costmodel import cost_analysis_dict
 
 
 ASSIGNED = [
@@ -63,7 +64,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0 - t_lower
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     colls = hlo_stats.collective_summary(hlo)
     churn = hlo_stats.reshape_transpose_count(hlo)

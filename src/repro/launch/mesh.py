@@ -8,12 +8,22 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """Version-compatible `jax.make_mesh`: newer jax wants explicit Auto
+    axis types (the pre-0.5 default); older jax has no such kwarg."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(devices: int, model_parallel: int = 0):
@@ -25,5 +35,4 @@ def make_mesh_for(devices: int, model_parallel: int = 0):
             model_parallel *= 2
             d //= 2
     data = devices // model_parallel
-    return jax.make_mesh((data, model_parallel), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model_parallel), ("data", "model"))

@@ -1,4 +1,4 @@
-"""End-to-end ZenFlow training driver.
+"""End-to-end ZenFlow training driver (engine-based).
 
     PYTHONPATH=src python -m repro.launch.train --arch llama2-7b \
         --steps 200 --batch 8 --seq 256 --reduced \
@@ -6,38 +6,33 @@
 
 --reduced swaps in the smoke-scale config of the same family (CPU-runnable);
 full configs are for real accelerators. Restarts automatically from the
-latest checkpoint in --ckpt-dir. --baseline adamw runs the dense AdamW
-reference (the "ZeRO-Offload semantics" optimizer) for convergence
-comparisons.
+latest checkpoint in --ckpt-dir. --backend selects the execution mode
+("async" two-program pipeline by default, "sync" functional spec, "fused"
+lowering-checked pinned-host mode, "baseline" dense AdamW — the
+"ZeRO-Offload semantics" reference); --baseline adamw is kept as an alias
+for --backend baseline. All modes share the one Engine loop.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import math
-import os
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, reduced_config
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.data import make_train_stream
-from repro.distributed.sharding import DEFAULT_RULES, rules_for_mesh
-from repro.launch.mesh import make_mesh_for
-from repro.models import build_model
-from repro.optim import adamw, apply_updates, cosine_with_warmup
-from repro.runtime import ZenFlowRuntime, RuntimeConfig
+from repro.engine import (CheckpointCallback, Engine, StragglerWatchdog,
+                          TelemetryCallback)
+from repro.optim import cosine_with_warmup
 
 
-def train_zenflow(args) -> dict:
+def train(args) -> dict:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)
-    model = build_model(cfg)
+    backend = "baseline" if args.baseline else args.backend
     zcfg = ZenFlowConfig(
         topk_ratio=args.topk, update_interval=args.interval,
         refresh_interval=args.interval * 4,
@@ -45,77 +40,25 @@ def train_zenflow(args) -> dict:
         lr=cosine_with_warmup(args.lr, args.steps) if args.cosine else args.lr,
         weight_decay=args.weight_decay, use_kernels="never",
         auto_tune=args.auto_tune)
-    n_dev = len(jax.devices())
-    rules = DEFAULT_RULES if n_dev == 1 else rules_for_mesh(
-        make_mesh_for(n_dev))
-    rt = ZenFlowRuntime(model, zcfg, rules)
 
+    loader = make_train_stream(cfg.vocab, args.seq, args.batch,
+                               seed=args.seed)
+    callbacks = [TelemetryCallback(every=args.log_every, prefix=backend),
+                 StragglerWatchdog()]
     ckpt = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
-    loader = make_train_stream(cfg.vocab, args.seq, args.batch,
-                               seed=args.seed)
-    start = 0
-    if ckpt and ckpt.latest_step() is not None:
-        rt.init(jax.random.PRNGKey(args.seed))   # build shapes
-        sd, manifest = ckpt.restore(rt.state_dict())
-        rt.load_state_dict(sd)
-        start = manifest["step"]
-        loader.restore(manifest["extra"].get("loader", {"step": start}))
-        print(f"[train] resumed from step {start}")
-    else:
-        rt.init(jax.random.PRNGKey(args.seed))
-
-    losses = []
-    t0 = time.time()
-    for i in range(start, args.steps):
-        batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
-        m = rt.step(batch)
-        losses.append(m["loss"])
-        if args.log_every and (i + 1) % args.log_every == 0:
-            rate = (i + 1 - start) / (time.time() - t0)
-            print(f"[train] step {i+1} loss {m['loss']:.4f} "
-                  f"rho {m.get('rho', 0):.3f} {rate:.2f} it/s "
-                  f"stall {m['stall']*1e3:.1f}ms")
-        if ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
-            ckpt.save(rt.state_dict(), i + 1,
-                      extra={"loader": loader.state()})
-    rt.flush()
     if ckpt:
-        ckpt.save(rt.state_dict(), args.steps,
-                  extra={"loader": loader.state()})
-        ckpt.wait()
-    rt.close()
-    return {"losses": losses, "final_loss": losses[-1] if losses else None}
+        callbacks.append(CheckpointCallback(ckpt, every=args.ckpt_every,
+                                            loader=loader))
 
-
-def train_baseline(args) -> dict:
-    """Dense synchronous AdamW (ZeRO-Offload update semantics)."""
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced_config(cfg)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    opt = adamw(lr=cosine_with_warmup(args.lr, args.steps)
-                if args.cosine else args.lr,
-                weight_decay=args.weight_decay)
-    state = opt.init(params)
-
-    @jax.jit
-    def step(params, state, batch):
-        (loss, met), grads = jax.value_and_grad(
-            model.loss_fn, has_aux=True)(params, batch)
-        updates, state = opt.update(grads, state, params)
-        return apply_updates(params, updates), state, loss
-
-    loader = make_train_stream(cfg.vocab, args.seq, args.batch,
-                               seed=args.seed)
-    losses = []
-    for i in range(args.steps):
-        batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
-        params, state, loss = step(params, state, batch)
-        losses.append(float(loss))
-        if args.log_every and (i + 1) % args.log_every == 0:
-            print(f"[baseline] step {i+1} loss {losses[-1]:.4f}")
-    return {"losses": losses, "final_loss": losses[-1] if losses else None}
+    eng = Engine.from_config(cfg, zcfg, backend=backend, callbacks=callbacks)
+    eng.init(jax.random.PRNGKey(args.seed))
+    if ckpt:
+        start = eng.restore_latest(ckpt, loader)
+        if start:
+            print(f"[train] resumed from step {start}")
+    res = eng.run(loader, args.steps)
+    eng.close()
+    return res
 
 
 def main() -> None:
@@ -132,7 +75,10 @@ def main() -> None:
     ap.add_argument("--interval", type=int, default=4)
     ap.add_argument("--warmup", type=int, default=0)
     ap.add_argument("--auto-tune", action="store_true")
-    ap.add_argument("--baseline", default="", choices=["", "adamw"])
+    ap.add_argument("--backend", default="async",
+                    choices=["sync", "async", "fused", "baseline"])
+    ap.add_argument("--baseline", default="", choices=["", "adamw"],
+                    help="deprecated alias for --backend baseline")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -140,8 +86,11 @@ def main() -> None:
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
-    res = train_baseline(args) if args.baseline else train_zenflow(args)
-    print(f"[train] final loss: {res['final_loss']:.4f}")
+    res = train(args)
+    if res["final_loss"] is None:
+        print(f"[train] nothing to do (already at step {res['steps']})")
+    else:
+        print(f"[train] final loss: {res['final_loss']:.4f}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(res, f)

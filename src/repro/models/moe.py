@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import current_rules, shard_act
+from repro.distributed.sharding import current_rules, shard_act, shard_map
 from repro.models import layers as L
 
 Array = jax.Array
@@ -162,7 +162,7 @@ def moe_block(x: Array, lp: dict, cfg: ArchConfig) -> tuple[Array, Array]:
             return y, aux
 
         xf2 = x_flat.reshape(B, S * D)  # shard tokens by batch axis only
-        y, aux = jax.shard_map(
+        y, aux = shard_map(
             lambda xf, rw, wi, wo: per_rank(
                 xf.reshape(-1, D), rw, wi, wo),
             mesh=mesh,

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import shard_act, current_rules, attn_strategy
+from repro.distributed.sharding import shard_act, current_rules, attn_strategy, shard_map
 from repro.models import layers as L
 from repro.models import moe as moe_lib
 
@@ -488,7 +488,7 @@ def _sp_decode_attention(q, cache_k, cache_v, sp_axis, cache_len=None):
         out = L.combine_partial_attention(m, l, acc, kv_ax)
         return out.astype(q.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(batch_ax, None, heads_ax, None),
                   P(batch_ax, kv_ax, None, None),

@@ -12,9 +12,12 @@ from repro.optim.base import (
     apply_updates,
     global_norm,
     clip_by_global_norm,
+    chain,
+    clip,
 )
 from repro.optim.adam import adam, adamw, AdamState, adam_row_update
 from repro.optim.sgd import sgd, momentum
+from repro.optim.zenflow import zenflow
 from repro.optim.schedules import (
     constant_schedule,
     cosine_with_warmup,
@@ -24,7 +27,7 @@ from repro.optim.schedules import (
 
 __all__ = [
     "GradientTransformation", "OptState", "apply_updates", "global_norm",
-    "clip_by_global_norm", "adam", "adamw", "AdamState", "adam_row_update",
-    "sgd", "momentum", "constant_schedule", "cosine_with_warmup",
-    "linear_warmup", "Schedule",
+    "clip_by_global_norm", "chain", "clip", "adam", "adamw", "AdamState",
+    "adam_row_update", "zenflow", "sgd", "momentum", "constant_schedule",
+    "cosine_with_warmup", "linear_warmup", "Schedule",
 ]

@@ -37,6 +37,18 @@ def clip_by_global_norm(tree: Params, max_norm: float) -> tuple[Params, jax.Arra
     return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
 
 
+def clip(max_norm: float) -> GradientTransformation:
+    """Global-norm clipping as a chainable transformation."""
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        clipped, _ = clip_by_global_norm(grads, max_norm)
+        return clipped, state
+
+    return GradientTransformation(init, update)
+
+
 def chain(*transforms: GradientTransformation) -> GradientTransformation:
     """Compose gradient transformations left-to-right."""
     def init(params):

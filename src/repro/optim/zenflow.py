@@ -1,0 +1,43 @@
+"""ZenFlow as a `GradientTransformation`, so the paper's optimizer
+composes like any other member of the substrate:
+
+    opt = chain(clip(1.0), zenflow(zcfg))
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+The adapter runs the full functional spec (`zenflow_step`) and returns
+the parameter delta as the update, so downstream transforms / schedules /
+`apply_updates` see standard optax-style semantics. Params are required
+in `update` (ZenFlow updates rows in place, so the delta is defined
+against the current params).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import GradientTransformation
+
+
+def zenflow(zcfg) -> GradientTransformation:
+    """`zcfg`: a `repro.core.zen_optimizer.ZenFlowConfig`."""
+    # deferred: repro.core.zen_optimizer itself builds on repro.optim.adam,
+    # so a module-level import here would be circular
+    from repro.core.zen_optimizer import zenflow_init, zenflow_step
+
+    def init(params):
+        return zenflow_init(params, zcfg)
+
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError("zenflow().update requires params (the "
+                             "selective update is defined in-place)")
+        new_params, new_state, _metrics = zenflow_step(
+            params, grads, state, zcfg)
+        updates = jax.tree.map(
+            lambda n, p: n.astype(jnp.float32) - p.astype(jnp.float32),
+            new_params, params)
+        return updates, new_state
+
+    return GradientTransformation(init, update)

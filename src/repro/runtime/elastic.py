@@ -33,11 +33,13 @@ def elastic_restore(model, zcfg: ZenFlowConfig, new_mesh, ckpt: CheckpointManage
     """Restore a runtime state dict onto a (possibly different) mesh.
 
     Returns (state_dict, rules, segs, resumed_step, zen_state_survived).
-    The checkpoint holds ZenFlowRuntime.state_dict(). If the new mesh keeps
-    the channel-shard factor, the full state restores; otherwise only
-    params survive and ZenFlow state is re-initialized (selection
-    re-derives on the next refresh — bounded impact, same as a scheduled
-    refresh; the host master is rebuilt from the restored params)."""
+    The checkpoint holds either a bare ZenFlowRuntime.state_dict() or an
+    Engine.state_dict() (runtime dict nested under "backend"). If the new
+    mesh keeps the channel-shard factor, the full state restores;
+    otherwise only params survive and ZenFlow state is re-initialized
+    (selection re-derives on the next refresh — bounded impact, same as a
+    scheduled refresh; the host master is rebuilt from the restored
+    params)."""
     rules = rules_for_mesh(new_mesh, overrides)
     spec = model.param_specs()
     new_segs = zen_spmd.build_segments(spec, zcfg, rules)
@@ -48,14 +50,34 @@ def elastic_restore(model, zcfg: ZenFlowConfig, new_mesh, ckpt: CheckpointManage
         "host_state": zen_spmd.zen_host_state_init(spec, zcfg, new_segs),
         "pending": zen_spmd.pending_specs(new_segs, spec),
         "steps_in_window": np.zeros((), np.int32),
+        "s_eff": np.asarray(zcfg.update_interval, np.int32),
+        "window_extensions": np.zeros((), np.int32),
     }
     try:
-        sd, manifest = ckpt.restore(full_like)
+        keys = ckpt.array_keys()
+    except Exception:
+        keys = []
+    nested = any(k.startswith("backend/") for k in keys)
+    try:
+        # missing_ok: only fields added after the first release may be
+        # absent (they restore at configured defaults); any other missing
+        # key means a different layout and falls through to params-only
+        from repro.runtime.zen_runtime import OPTIONAL_CKPT_KEYS
+        sd, manifest = ckpt.restore(
+            {"backend": full_like} if nested else full_like,
+            missing_ok=OPTIONAL_CKPT_KEYS)
+        if nested:
+            sd = sd["backend"]
         return sd, rules, new_segs, manifest["step"], True
     except Exception:
         pass
-    # shapes changed (different RS): params-only restore
-    params, manifest = ckpt.restore({"params": spec})
+    # shapes changed (different RS): params-only restore (strict — params
+    # must exist in any checkpoint)
+    params_like = {"params": spec}
+    params, manifest = ckpt.restore(
+        {"backend": params_like} if nested else params_like)
+    if nested:
+        params = params["backend"]
     params = params["params"]
     step = manifest["step"]
     dstate = zen_spmd.zen_device_state_init(spec, zcfg, new_segs)

@@ -14,8 +14,11 @@ JAX realization of the paper's Fig 7 zero-stall pipeline:
 Fault-tolerance hooks:
   * checkpoint/restore of the full (params, device, host, loader) state;
   * straggler absorption — a host apply that misses its boundary extends
-    the window (bounded by s_max) instead of stalling the device;
-  * per-step wall-time EMA watchdog for straggler telemetry.
+    the window (bounded by s_max) instead of stalling the device.
+
+Wall-time EMA straggler *telemetry* lives in
+`repro.engine.callbacks.StragglerWatchdog`; prefer driving this runtime
+through `repro.engine.Engine` (backend="async"), which wires it up.
 """
 from __future__ import annotations
 
@@ -34,12 +37,15 @@ from repro.distributed.sharding import MeshRules
 from repro.distributed import zen_spmd
 
 
+# state-dict fields added after the first release: restores of older
+# checkpoints may lack them (they fall back to configured defaults)
+OPTIONAL_CKPT_KEYS = ("s_eff", "window_extensions")
+
+
 @dataclasses.dataclass
 class RuntimeConfig:
     donate: bool = True
     straggler_window_extension: bool = True   # extend S instead of stalling
-    step_time_ema: float = 0.9
-    straggler_factor: float = 3.0             # step > factor*EMA -> flagged
 
 
 class _Future:
@@ -104,11 +110,11 @@ class ZenFlowRuntime:
     """Orchestrates the device/host ZenFlow pipeline for a model."""
 
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
-                 rcfg: RuntimeConfig = RuntimeConfig()):
+                 rcfg: Optional[RuntimeConfig] = None):
         self.model = model
         self.zcfg = zcfg
         self.rules = rules
-        self.rcfg = rcfg
+        self.rcfg = rcfg = RuntimeConfig() if rcfg is None else rcfg
         step_fn, segs, partition = zen_spmd.make_device_step(model, zcfg, rules)
         self.segs = segs
         self.partition = partition
@@ -123,7 +129,6 @@ class ZenFlowRuntime:
         self._apply_future: Optional[_Future] = None
         self._steps_in_window = 0
         self._s_eff = zcfg.update_interval
-        self._step_ema = None
         self.stall_log: list[float] = []
         self.window_extensions = 0
 
@@ -201,15 +206,10 @@ class ZenFlowRuntime:
                 self._apply_future = None
 
         dt = time.perf_counter() - t0
-        self._step_ema = dt if self._step_ema is None else \
-            self.rcfg.step_time_ema * self._step_ema + \
-            (1 - self.rcfg.step_time_ema) * dt
         out = {k: (float(v) if jnp.ndim(v) == 0 else v)
                for k, v in metrics.items()}
         out.update({
             "step_time": dt, "stall": stall, "boundary": bool(boundary),
-            "straggler_flag": bool(dt > self.rcfg.straggler_factor *
-                                   (self._step_ema or dt)),
             "window_extensions": self.window_extensions,
         })
         self.stall_log.append(stall)
@@ -232,6 +232,10 @@ class ZenFlowRuntime:
             "host_state": self.worker.snapshot(),
             "pending": self.pending,
             "steps_in_window": self._steps_in_window,
+            # Zen-auto progress: without these a restarted run would fall
+            # back to the configured S and forget absorbed stragglers
+            "s_eff": self._s_eff,
+            "window_extensions": self.window_extensions,
         }
 
     def load_state_dict(self, sd: dict):
@@ -239,6 +243,8 @@ class ZenFlowRuntime:
         self.dstate = sd["dstate"]
         self.pending = sd["pending"]
         self._steps_in_window = int(sd.get("steps_in_window", 0))
+        self._s_eff = int(sd.get("s_eff", self.zcfg.update_interval))
+        self.window_extensions = int(sd.get("window_extensions", 0))
         if self.worker is None:
             self.worker = _HostWorker(sd["host_state"])
         else:

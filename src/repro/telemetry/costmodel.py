@@ -22,6 +22,15 @@ from typing import Optional
 
 from repro.configs.base import ArchConfig, ShapeConfig
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize `compiled.cost_analysis()` across jax versions: older
+    releases return a per-device list of dicts, newer ones a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 # TPU v5e hardware constants (per chip), per the assignment:
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s

@@ -32,7 +32,7 @@ def _flops_of(model, cfg, B, S):
 
     params = model.init(jax.random.PRNGKey(0))
     compiled = jax.jit(fwd).lower(params, toks).compile()
-    return compiled.cost_analysis().get("flops", 0.0)
+    return cm.cost_analysis_dict(compiled).get("flops", 0.0)
 
 
 def test_forward_flops_match_cost_analysis_unrolled():

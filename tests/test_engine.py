@@ -1,0 +1,290 @@
+"""Unified Engine API: backend parity, checkpoint round-trip, callbacks,
+the zenflow() GradientTransformation, and runtime state-dict fixes."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced_config
+from repro.core.zen_optimizer import (ZenFlowConfig, zenflow_init,
+                                      zenflow_step)
+from repro.data import make_train_stream
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.engine import (BackendUnavailable, Engine, ExecutionBackend,
+                          StragglerWatchdog, register_backend)
+from repro.models import build_model
+from repro.optim import apply_updates, chain, clip, clip_by_global_norm, \
+    zenflow
+from repro.runtime import RuntimeConfig, ZenFlowRuntime
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced_config(get_config("llama2-7b"))
+
+
+@pytest.fixture(scope="module")
+def zcfg():
+    return ZenFlowConfig(topk_ratio=0.1, update_interval=2,
+                         refresh_interval=4, lr=1e-3, use_kernels="never")
+
+
+def _batches(cfg, n, seed=0):
+    loader = make_train_stream(cfg.vocab, 32, 8, seed=seed)
+    return [{k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Backend parity
+
+
+def test_sync_backend_bitmatches_zenflow_step_loop(cfg, zcfg):
+    """The sync backend must reproduce a direct `zenflow_step` loop
+    bit-for-bit: same init key, same batches, same jitted composition."""
+    model = build_model(cfg)
+    batches = _batches(cfg, 6)
+
+    @jax.jit
+    def ref_step(p, zs, batch):
+        (loss, met), g = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(p, batch)
+        new_p, new_s, zmet = zenflow_step(p, g, zs, zcfg)
+        return new_p, new_s, {"loss": loss, **met, **zmet}
+
+    params = model.init(jax.random.PRNGKey(0))
+    zstate = zenflow_init(params, zcfg)
+    for b in batches:
+        params, zstate, _ = ref_step(params, zstate, b)
+
+    eng = Engine.from_config(cfg, zcfg, backend="sync")
+    eng.init(jax.random.PRNGKey(0))
+    for b in batches:
+        eng.step(b)
+
+    ref = jax.tree.leaves(params)
+    got = jax.tree.leaves(eng.backend.params)
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    eng.close()
+
+
+def test_three_backends_train_same_model(cfg, zcfg):
+    """sync / async / baseline all train the quickstart model end-to-end
+    behind the same API; sync and async stay within the staleness bound."""
+    batches = _batches(cfg, 6)
+    finals = {}
+    for name in ("sync", "async", "baseline"):
+        eng = Engine.from_config(cfg, zcfg, backend=name)
+        eng.init(jax.random.PRNGKey(0))
+        losses = [eng.step(b)["loss"] for b in batches]
+        eng.flush()
+        finals[name] = jax.tree.leaves(eng.state_dict()["backend"]["params"])
+        assert np.all(np.isfinite(losses)), (name, losses)
+        assert eng.step_count == len(batches)
+        eng.close()
+    # sync vs async: same algorithm, one-window staleness apart
+    for a, b in zip(finals["sync"], finals["async"]):
+        dev = float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32)
+                                    - jnp.asarray(b, jnp.float32))))
+        assert dev < 1e-2, dev
+
+
+def test_fused_backend_lowering_checked(cfg, zcfg):
+    try:
+        eng = Engine.from_config(cfg, zcfg, backend="fused")
+    except BackendUnavailable as e:
+        pytest.skip(f"fused backend unavailable here: {e}")
+    eng.init(jax.random.PRNGKey(0))
+    m = eng.step(_batches(cfg, 1)[0])
+    assert "fused_compiled" in m and np.isfinite(m["loss"])
+    eng.close()
+
+
+def test_register_custom_backend(cfg, zcfg):
+    class NullBackend:
+        name = "null"
+
+        def __init__(self, model, zcfg, rules, rcfg=None):
+            self.n = 0
+
+        def init(self, key):
+            return self
+
+        def step(self, batch):
+            self.n += 1
+            return {"loss": 0.0}
+
+        def state_dict(self):
+            return {"n": self.n}
+
+        def load_state_dict(self, sd):
+            self.n = int(sd["n"])
+
+        def flush(self):
+            pass
+
+        def close(self):
+            pass
+
+    register_backend("null", NullBackend)
+    eng = Engine.from_config(cfg, zcfg, backend="null")
+    assert isinstance(eng.backend, ExecutionBackend)
+    eng.init(jax.random.PRNGKey(0))
+    assert eng.step({"tokens": jnp.zeros((1,), jnp.int32)})["loss"] == 0.0
+    assert eng.step_count == 1
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip through CheckpointManager
+
+
+@pytest.mark.parametrize("backend", ["sync", "async"])
+def test_engine_state_dict_roundtrip(cfg, zcfg, backend):
+    eng = Engine.from_config(cfg, zcfg, backend=backend)
+    eng.init(jax.random.PRNGKey(0))
+    loader = make_train_stream(cfg.vocab, 32, 8)
+    for _ in range(5):
+        batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        eng.step(batch)
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, async_save=False)
+        cm.save(eng.state_dict(), step=5, extra={"loader": loader.state()})
+        batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        before = eng.step(batch)["loss"]
+        eng.close()
+
+        eng2 = Engine.from_config(cfg, zcfg, backend=backend)
+        eng2.init(jax.random.PRNGKey(1))     # different key: must not matter
+        loader2 = make_train_stream(cfg.vocab, 32, 8)
+        assert eng2.restore_latest(cm, loader2) == 5
+        assert eng2.step_count == 5
+        batch2 = {k: jnp.asarray(v)
+                  for k, v in loader2.next_batch().items()}
+        after = eng2.step(batch2)["loss"]
+        assert abs(before - after) < 1e-5
+        eng2.close()
+
+
+def test_engine_restores_legacy_runtime_checkpoint(cfg, zcfg):
+    """Checkpoints written by a bare ZenFlowRuntime (pre-Engine layout,
+    backend state at the top level) must resume through the Engine."""
+    model = build_model(cfg)
+    rt = ZenFlowRuntime(model, zcfg, DEFAULT_RULES)
+    rt.init(jax.random.PRNGKey(0))
+    loader = make_train_stream(cfg.vocab, 32, 8)
+    for _ in range(3):
+        batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        rt.step(batch)
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, async_save=False)
+        legacy_sd = rt.state_dict()
+        legacy_sd.pop("s_eff")              # true pre-PR layout: these
+        legacy_sd.pop("window_extensions")  # fields did not exist yet
+        cm.save(legacy_sd, step=3, extra={"loader": loader.state()})
+        batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+        expect = rt.step(batch)["loss"]
+        rt.close()
+
+        eng = Engine.from_config(cfg, zcfg, backend="async")
+        eng.init(jax.random.PRNGKey(1))
+        loader2 = make_train_stream(cfg.vocab, 32, 8)
+        assert eng.restore_latest(cm, loader2) == 3
+        batch2 = {k: jnp.asarray(v)
+                  for k, v in loader2.next_batch().items()}
+        got = eng.step(batch2)["loss"]
+        assert abs(got - expect) < 1e-5
+        eng.close()
+
+
+def test_runtime_state_dict_carries_autotune_state(cfg, zcfg):
+    """Regression: `_s_eff` / `window_extensions` survive a checkpoint
+    round-trip (a restarted Zen-auto run keeps its adapted interval)."""
+    model = build_model(cfg)
+    rt = ZenFlowRuntime(model, zcfg, DEFAULT_RULES)
+    rt.init(jax.random.PRNGKey(0))
+    rt._s_eff = 7
+    rt.window_extensions = 3
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, async_save=False)
+        cm.save(rt.state_dict(), step=1)
+        rt2 = ZenFlowRuntime(model, zcfg, DEFAULT_RULES)
+        rt2.init(jax.random.PRNGKey(0))
+        sd, _ = cm.restore(rt2.state_dict())
+        rt2.load_state_dict(sd)
+        assert rt2._s_eff == 7
+        assert rt2.window_extensions == 3
+        rt2.close()
+    rt.close()
+
+
+def test_runtime_config_default_not_shared(cfg, zcfg):
+    """Regression: the default RuntimeConfig must be per-instance (the old
+    `rcfg: RuntimeConfig = RuntimeConfig()` default was one shared
+    object)."""
+    model = build_model(cfg)
+    rt1 = ZenFlowRuntime(model, zcfg, DEFAULT_RULES)
+    rt2 = ZenFlowRuntime(model, zcfg, DEFAULT_RULES)
+    assert rt1.rcfg is not rt2.rcfg
+    rt1.rcfg.donate = False
+    assert rt2.rcfg.donate
+    assert RuntimeConfig() is not RuntimeConfig()
+
+
+# ---------------------------------------------------------------------------
+# Callbacks
+
+
+def test_straggler_watchdog_enriches_metrics(cfg, zcfg):
+    eng = Engine.from_config(cfg, zcfg, backend="sync",
+                             callbacks=[StragglerWatchdog()])
+    eng.init(jax.random.PRNGKey(0))
+    m = eng.step(_batches(cfg, 1)[0])
+    assert "straggler_flag" in m and "step_time" in m
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# zenflow() as a GradientTransformation
+
+
+def test_zenflow_transform_composes_with_chain():
+    rng = np.random.default_rng(0)
+    params = {
+        "w": jnp.asarray(rng.normal(size=(64, 128)) * 0.1, jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(64,)) * 0.1, jnp.float32),
+    }
+    zcfg = ZenFlowConfig(topk_ratio=0.25, update_interval=2,
+                         refresh_interval=4, lr=1e-3, pipeline="sync",
+                         use_kernels="never")
+    opt = chain(clip(0.5), zenflow(zcfg))
+    state = opt.init(params)
+
+    p_ref, zs = params, zenflow_init(params, zcfg)
+    p = params
+    for i in range(6):
+        r = np.random.default_rng(100 + i)
+        g = jax.tree.map(
+            lambda x: jnp.asarray(r.normal(size=x.shape), jnp.float32),
+            params)
+        gc, _ = clip_by_global_norm(g, 0.5)
+        p_ref, zs, _ = zenflow_step(p_ref, gc, zs, zcfg)
+        upd, state = opt.update(g, state, p)
+        p = apply_updates(p, upd)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(p[k]), np.asarray(p_ref[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_zenflow_transform_requires_params():
+    zcfg = ZenFlowConfig(use_kernels="never")
+    opt = zenflow(zcfg)
+    params = {"w": jnp.zeros((64, 64), jnp.float32)}
+    state = opt.init(params)
+    with pytest.raises(ValueError):
+        opt.update(params, state)

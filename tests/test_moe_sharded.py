@@ -17,8 +17,8 @@ from repro.models import moe as moe_lib
 from repro.models import transformer as tfm
 
 cfg = reduced_config(get_config("arctic-480b"))
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 rules = rules_for_mesh(mesh)
 params = tfm.init_params(jax.random.PRNGKey(0), cfg)
 lp = jax.tree.map(lambda x: x[0], params["layers"])

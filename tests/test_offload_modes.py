@@ -14,17 +14,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
-from repro.distributed.offload import make_fused_accumulate_step, host_sharding
+from repro.distributed.offload import (make_fused_accumulate_step,
+                                       host_sharding, has_host_placement)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 step, (p_acc, p_g) = make_fused_accumulate_step(mesh)
 acc = jax.ShapeDtypeStruct((64, 128), jnp.float32, sharding=p_acc)
 g = jax.ShapeDtypeStruct((64, 128), jnp.bfloat16, sharding=p_g)
 lowered = jax.jit(step, out_shardings=p_acc).lower(acc, g)
 txt = lowered.as_text()
-assert "pinned_host" in txt or "S(5)" in txt, "host placement not in IR"
-assert "device_host" in txt or "annotate" in txt or True
+assert has_host_placement(txt), "host placement not in IR"
 print("LOWER_OK")
 # compile on CPU is expected to fail with the documented RET_CHECK;
 # on TPU this compiles (MaxText uses the same APIs)

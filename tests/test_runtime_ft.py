@@ -123,8 +123,8 @@ def test_elastic_restore_params_only():
         zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
                              refresh_interval=8, lr=1e-3,
                              use_kernels="never")
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
         sd, rules, segs, step, survived = elastic_restore(
             model, zcfg, mesh, cm)
         assert step == 4

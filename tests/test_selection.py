@@ -1,9 +1,27 @@
-"""Selection invariants (unit + hypothesis property tests)."""
+"""Selection invariants (unit + hypothesis property tests).
+
+`hypothesis` is optional: without it the property tests skip cleanly and
+the rest of the suite still collects and runs.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # property tests skip, rest runs
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _AnyStrategy()
+
+    def settings(*a, **kw):
+        return lambda f: f
+
+    def given(*a, **kw):
+        return pytest.mark.skip(reason="hypothesis not installed")
 
 from repro.core import selection as sel
 

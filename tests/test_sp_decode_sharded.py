@@ -30,8 +30,8 @@ lg_ref, cache, clen = model.prefill(params, toks, MAX)
 step_ref, _, _ = model.decode_step(params, toks[:, :1], cache, clen)
 
 # sharded: batch=1 -> rules_for_cell picks full sequence parallelism
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 shape = ShapeConfig("d", MAX, B, "decode")
 rules = rules_for_cell(mesh, shape, cfg)
 assert rules.axis("kv_seq"), "expected SP decode rules for batch=1"

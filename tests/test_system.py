@@ -146,8 +146,8 @@ from repro.launch import shardspecs
 
 cfg = reduced_config(get_config("llama2-7b"), d_model=128, n_heads=4,
                      d_ff=256, vocab=512)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 shape = ShapeConfig("t", 64, 8, "train")
 fn, specs, rules = shardspecs.build_train_cell(cfg, shape, mesh)
 with mesh:
@@ -184,8 +184,8 @@ cfg = reduced_config(get_config("llama2-7b"), d_model=128, n_heads=4,
 model = build_model(cfg)
 zcfg = ZenFlowConfig(topk_ratio=0.25, update_interval=2, refresh_interval=4,
                      lr=1e-3, use_kernels="never")
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 rules = rules_for_mesh(mesh)
 step_fn, segs, _ = zen_spmd.make_device_step(model, zcfg, rules)
 params = model.init(jax.random.PRNGKey(0))
