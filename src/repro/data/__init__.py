@@ -1,5 +1,7 @@
 from repro.data.pipeline import (
-    SyntheticInstructionStream, ShardedLoader, make_train_stream,
+    SyntheticInstructionStream, ShardedLoader, PrefetchLoader,
+    make_train_stream,
 )
 
-__all__ = ["SyntheticInstructionStream", "ShardedLoader", "make_train_stream"]
+__all__ = ["SyntheticInstructionStream", "ShardedLoader", "PrefetchLoader",
+           "make_train_stream"]

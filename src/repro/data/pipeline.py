@@ -14,6 +14,8 @@ a non-trivial loss to descend. Properties needed by the system:
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 from typing import Iterator, Optional
 
 import numpy as np
@@ -85,9 +87,126 @@ class ShardedLoader:
         self.step = int(state["step"])
 
 
+class PrefetchLoader:
+    """Background-thread prefetcher: overlaps batch construction (numpy
+    sampling + optional host->device transfer) with device compute, so a
+    zero-sync training step never waits on the loader.
+
+    Wraps any loader with `next_batch()`/`state()`/`restore()`. A daemon
+    thread keeps a bounded queue of `depth` ready batches; with
+    `to_device=True` (default) it also performs the `jnp.asarray`
+    conversion off the hot path, so the h2d copy for batch t+1 overlaps
+    step t (`Engine.run`'s own `jnp.asarray` then no-ops).
+
+    `state()` reports the CONSUMED cursor (not the producer's read-ahead
+    position), so checkpoint/restore replays no batch and skips none.
+    """
+
+    def __init__(self, loader, depth: int = 2, to_device: bool = True):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.loader = loader
+        self.depth = depth
+        self.to_device = to_device
+        self._consumed = int(loader.state()["step"]) \
+            if hasattr(loader, "state") else 0
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._start()
+
+    # ------------------------------------------------------------------
+    def _start(self) -> None:
+        self._stop.clear()
+        self._error = None
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _produce(self) -> None:
+        while not self._stop.is_set():
+            try:
+                b = self.loader.next_batch()
+                if self.to_device:
+                    import jax.numpy as jnp
+                    b = {k: jnp.asarray(v) for k, v in b.items()}
+            except BaseException as e:
+                # surface the error to the consumer instead of dying
+                # silently and deadlocking next_batch()
+                self._error = e
+                return
+            while not self._stop.is_set():
+                try:
+                    self._q.put(b, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def _halt(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            # the producer blocks at most 0.1 s on the queue, but the
+            # wrapped loader's next_batch() may be arbitrarily slow —
+            # keep waiting rather than abandon a live thread that would
+            # race a restarted producer on the shared cursor
+            while self._thread.is_alive():
+                self._thread.join(timeout=5)
+                if self._thread.is_alive():
+                    try:
+                        self._q.get_nowait()   # unblock a full-queue put
+                    except queue.Empty:
+                        pass
+            self._thread = None
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+
+    # ------------------------------------------------------------------
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next_batch()
+
+    def next_batch(self) -> dict:
+        while True:
+            try:
+                b = self._q.get(timeout=0.5)
+                break
+            except queue.Empty:
+                if self._error is not None:
+                    raise RuntimeError(
+                        "PrefetchLoader producer failed") from self._error
+                if self._thread is None or not self._thread.is_alive():
+                    raise RuntimeError(
+                        "PrefetchLoader is stopped (closed or never "
+                        "started); no batches available")
+        self._consumed += 1
+        return b
+
+    def state(self) -> dict:
+        return {"step": self._consumed}
+
+    def restore(self, state: dict) -> None:
+        self._halt()
+        if hasattr(self.loader, "restore"):
+            self.loader.restore(state)
+        self._consumed = int(state["step"])
+        self._start()
+
+    def close(self) -> None:
+        self._halt()
+
+
 def make_train_stream(vocab: int, seq_len: int, global_batch: int,
-                      n_shards: int = 1, shard: int = 0, seed: int = 0
-                      ) -> ShardedLoader:
-    return ShardedLoader(
+                      n_shards: int = 1, shard: int = 0, seed: int = 0,
+                      prefetch: int = 0):
+    """Build the synthetic training loader; `prefetch > 0` wraps it in a
+    `PrefetchLoader` with that queue depth (batch construction and h2d
+    overlap device compute)."""
+    loader = ShardedLoader(
         SyntheticInstructionStream(vocab=vocab, seq_len=seq_len, seed=seed),
         global_batch=global_batch, n_shards=n_shards, shard=shard)
+    if prefetch > 0:
+        return PrefetchLoader(loader, depth=prefetch)
+    return loader

@@ -51,6 +51,32 @@ def host_memory_kind(device=None) -> Optional[str]:
     return None
 
 
+def stage_to_host(tree, kind: Optional[str] = None):
+    """Explicit, asynchronous device->host staging of a host-bound pytree.
+
+    `jax.device_put` to the leaf's own sharding with the host memory kind
+    returns immediately with the transfer in flight, so the PCIe hop for
+    step t overlaps step t+1's device compute instead of the host worker
+    blocking on a lazy transfer when it first touches the arrays. The
+    runtime keeps only the staged tree and the worker queue holds the
+    previous one — two transfers in flight, i.e. double buffering by
+    construction. Leaves already resident in `kind` pass through (on
+    XLA:CPU the default memory IS unpinned_host, making this a no-op).
+    Returns the tree unchanged when no host memory kind is addressable.
+    """
+    kind = kind or host_memory_kind()
+    if kind is None:
+        return tree
+
+    def put(x):
+        sh = getattr(x, "sharding", None)
+        if sh is None or getattr(sh, "memory_kind", None) == kind:
+            return x
+        return jax.device_put(x, sh.with_memory_kind(kind))
+
+    return jax.tree.map(put, tree)
+
+
 def host_sharding(mesh: Mesh, *spec, kind: Optional[str] = None
                   ) -> NamedSharding:
     """NamedSharding pinned to host memory (auto-detected kind)."""

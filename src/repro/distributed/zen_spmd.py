@@ -13,7 +13,12 @@ O(m) proxy.
 
 `make_device_step()` fuses fwd + bwd + ZenFlow device_update (+ the scatter
 of host-returned rows) into ONE program whose host-bound outputs are
-exactly the PCIe bytes of the paper's I/O model.
+exactly the PCIe bytes of the paper's I/O model. It builds either of two
+variants consumed by the runtime's zero-sync hot path: the default
+boundary variant (takes and lands a pending-rows buffer) and a
+steady-state variant (`with_pending=False`) with no pending input and no
+scatter dead work; `make_land_pending()` is the landing scatter in
+isolation.
 """
 from __future__ import annotations
 
@@ -115,11 +120,23 @@ def segmented_specs(params_spec, segs: dict[str, SegmentInfo]):
 
 
 def segmented_sharding(p: str, seg: SegmentInfo, ndim: int, mesh: Mesh,
-                       extra_row_dims: int = 0) -> NamedSharding:
-    """NamedSharding for a segmented-state array: (..., RS, X, n)."""
+                       core: int = 3) -> NamedSharding:
+    """NamedSharding for a segmented-state array.
+
+    core=3: value arrays (m_sel / v_sel / pending rows) laid out
+    (lead..., RS, X, n); core=2: index arrays (sel_idx / pending idx)
+    laid out (lead..., RS, X). Leading dims (stacked layers, experts)
+    carry the param's `lead_spec` shardings — dropping them would
+    replicate per-layer/per-expert state on every device.
+    """
     spec = [None] * ndim
-    spec[-3] = seg.row_axis_spec
-    spec[-1] = seg.col_axis_spec
+    for i, ax in enumerate(seg.lead_spec[: max(ndim - core, 0)]):
+        spec[i] = ax
+    if core == 2:
+        spec[-2] = seg.row_axis_spec
+    else:
+        spec[-3] = seg.row_axis_spec
+        spec[-1] = seg.col_axis_spec
     return NamedSharding(mesh, P(*spec))
 
 
@@ -171,17 +188,28 @@ def zen_host_state_init(params_spec, zcfg: ZenFlowConfig,
 
 def make_device_step(model, zcfg: ZenFlowConfig, rules: MeshRules,
                      segs: Optional[dict] = None, microbatches: int = 1,
-                     accum_dtype=jnp.float32):
+                     accum_dtype=jnp.float32, with_pending: bool = True):
     """Build the (un-jitted) fused device step:
 
-        step(params, dstate, pending, batch)
-            -> (params', dstate', host_bound, metrics)
+        with_pending=True  (boundary variant, the default):
+            step(params, dstate, pending, batch)
+                -> (params', dstate', host_bound, metrics)
+        with_pending=False (steady-state variant):
+            step(params, dstate, batch)
+                -> (params', dstate', host_bound, metrics)
+
+    The runtime compiles BOTH: the steady-state variant omits the
+    pending-rows scatter and its `jnp.where(valid, ...)` select entirely
+    (host rows only ever land at window boundaries, so on S-1 of every S
+    steps that scatter is dead work), and takes no pending buffer — no
+    zero-pending allocation per step. The boundary variant keeps the
+    `valid` predicate so external callers may pass `zero_pending()`.
 
     `microbatches` > 1 scans fwd+bwd over batch slices with an f32
     gradient accumulator (bounds live activation memory; the per-step
     gradient fed to ZenFlow is the microbatch mean, semantics unchanged).
-    Jit with donate_argnums=(0, 1, 2) — params/state/pending update in
-    place.
+    Jit with donate_argnums=(0, 1, 2) (or (0, 1) for the steady-state
+    variant) — params/state/pending update in place.
     """
     if segs is None:
         segs = build_segments(model.param_specs(), zcfg, rules)
@@ -213,16 +241,21 @@ def make_device_step(model, zcfg: ZenFlowConfig, rules: MeshRules,
         met = jax.tree.map(lambda m: m[-1], mets)
         return loss_sum / microbatches, met, grads
 
-    def step(params, dstate, pending, batch):
+    def _core(params, dstate, pending, batch):
         with set_mesh_rules(rules):
             pd = tree_to_pathdict(params)
             pseg = to_segmented(pd, segs)
-            # (1) land host-updated complement rows from the previous window
-            for p in segs:
-                scattered = sel.scatter_rows(pseg[p], pending["idx"][p],
-                                             pending["rows"][p])
-                pseg[p] = jnp.where(pending["valid"], scattered, pseg[p])
-            params_in = pathdict_to_tree(from_segmented(pseg, segs), params)
+            if pending is not None:
+                # (1) land host-updated complement rows from the
+                # previous window (boundary variant only)
+                for p in segs:
+                    scattered = sel.scatter_rows(pseg[p], pending["idx"][p],
+                                                 pending["rows"][p])
+                    pseg[p] = jnp.where(pending["valid"], scattered, pseg[p])
+                params_in = pathdict_to_tree(from_segmented(pseg, segs),
+                                             params)
+            else:
+                params_in = params
 
             # (2) fwd + bwd (optionally microbatched)
             loss, met, grads = grads_of(params_in, batch)
@@ -237,7 +270,39 @@ def make_device_step(model, zcfg: ZenFlowConfig, rules: MeshRules,
             metrics = {"loss": loss, **met, **zmet}
             return new_params, new_dstate, host_bound, metrics
 
+    if with_pending:
+        def step(params, dstate, pending, batch):
+            return _core(params, dstate, pending, batch)
+    else:
+        def step(params, dstate, batch):
+            return _core(params, dstate, None, batch)
+
     return step, segs, partition
+
+
+def make_land_pending(segs: dict[str, SegmentInfo]):
+    """Build the (un-jitted) pending-landing program:
+
+        land(params, pending) -> params'
+
+    The boundary-path scatter in isolation. The runtime uses it when two
+    host applies queue up on the same pending slot (e.g. a collected
+    straggler apply immediately followed by a synchronous warmup landing,
+    or a restored checkpoint's pending plus a fresh apply): the OLDER
+    buffer is landed through this program before the newer one takes the
+    slot, so no host update is ever dropped. Jit with
+    donate_argnums=(0, 1).
+    """
+    def land(params, pending):
+        pd = tree_to_pathdict(params)
+        pseg = to_segmented(pd, segs)
+        for p in segs:
+            scattered = sel.scatter_rows(pseg[p], pending["idx"][p],
+                                         pending["rows"][p])
+            pseg[p] = jnp.where(pending["valid"], scattered, pseg[p])
+        return pathdict_to_tree(from_segmented(pseg, segs), params)
+
+    return land
 
 
 def make_host_programs(zcfg: ZenFlowConfig):

@@ -13,6 +13,7 @@ from repro.engine.backends import (
 from repro.engine.callbacks import (
     Callback,
     CheckpointCallback,
+    MetricsDrainCallback,
     StragglerWatchdog,
     TelemetryCallback,
 )
@@ -23,6 +24,6 @@ __all__ = [
     "ExecutionBackend", "SyncBackend", "AsyncBackend", "FusedBackend",
     "BaselineBackend", "BackendUnavailable",
     "register_backend", "make_backend", "available_backends",
-    "Callback", "CheckpointCallback", "TelemetryCallback",
-    "StragglerWatchdog",
+    "Callback", "CheckpointCallback", "MetricsDrainCallback",
+    "TelemetryCallback", "StragglerWatchdog",
 ]

@@ -23,6 +23,21 @@ protocol, so drivers never special-case a mode:
 
 New execution paths (another hardware offload route, elastic serving-time
 updates, ...) plug in via `register_backend` instead of a new driver.
+
+Metrics contract (zero-sync hot path)
+-------------------------------------
+`step()` returns device-computed metrics (loss/rho/...) as **device
+arrays**, NOT Python floats: a per-step `float()` is a blocking
+device-to-host sync that serializes the dispatch pipeline, which is
+exactly the stall the async backend exists to avoid. Python-side
+bookkeeping values (step_time, stall, boundary, window_extensions,
+fused_compiled) remain Python scalars. Consumers that need numbers off
+the hot path use `repro.telemetry.MetricsDrain` (ring buffer that
+materializes entries once their arrays have committed — wired up as
+`repro.engine.callbacks.MetricsDrainCallback`); consumers that don't
+care about stalls may simply call `float()` — every such forced read in
+repo code is routed through `repro.telemetry.syncwatch` so
+`benchmarks/bench_dispatch.py` can count them.
 """
 from __future__ import annotations
 
@@ -53,11 +68,6 @@ class ExecutionBackend(Protocol):
     def load_state_dict(self, sd: dict) -> None: ...
     def flush(self) -> None: ...
     def close(self) -> None: ...
-
-
-def _scalarize(metrics: dict) -> dict:
-    return {k: (float(v) if jnp.ndim(v) == 0 else v)
-            for k, v in metrics.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -122,7 +132,7 @@ class SyncBackend:
     def step(self, batch) -> dict:
         self.params, self.zstate, metrics = self._jstep(
             self.params, self.zstate, batch)
-        return _scalarize(metrics)
+        return dict(metrics)   # device arrays — see module metrics contract
 
     def state_dict(self) -> dict:
         return {"params": self.params, "zstate": self.zstate}
@@ -272,7 +282,7 @@ class BaselineBackend:
     def step(self, batch) -> dict:
         self.params, self.opt_state, metrics = self._jstep(
             self.params, self.opt_state, batch)
-        return _scalarize(metrics)
+        return dict(metrics)   # device arrays — see module metrics contract
 
     def state_dict(self) -> dict:
         return {"params": self.params, "opt_state": self.opt_state}

@@ -27,8 +27,42 @@ class Callback:
         pass
 
 
+class MetricsDrainCallback(Callback):
+    """Zero-sync metrics collection: pushes each step's metrics (device
+    arrays under the backends' metrics contract) into a
+    `telemetry.MetricsDrain` ring buffer, which materializes them to
+    Python scalars only once committed on-device — the dispatch loop
+    never blocks on a metric read. Drained `(step, {name: value})` pairs
+    land in `.history` (and the optional `on_metrics` sink) a few steps
+    behind the pipeline head; the tail is forced at run end.
+    """
+
+    def __init__(self, capacity: int = 64, on_metrics=None,
+                 keep_history: bool = True):
+        from repro.telemetry import MetricsDrain
+        self.drain = MetricsDrain(capacity=capacity, on_metrics=on_metrics,
+                                  keep_history=keep_history)
+
+    @property
+    def history(self) -> list:
+        return self.drain.history
+
+    def on_step_end(self, engine, step: int, metrics: dict) -> None:
+        self.drain.push(step, metrics)
+
+    def on_run_end(self, engine, result: dict) -> None:
+        self.drain.drain()
+
+    def on_close(self, engine) -> None:
+        self.drain.drain()
+
+
 class TelemetryCallback(Callback):
-    """Periodic progress line: loss / rho / stall / throughput."""
+    """Periodic progress line: loss / rho / stall / throughput.
+
+    Printing formats device-array metrics directly, which blocks on the
+    value — a deliberate sync every `every` steps. For fully zero-sync
+    collection use `MetricsDrainCallback` instead (or alongside)."""
 
     def __init__(self, every: int = 10, prefix: str = "train"):
         self.every = every

@@ -116,6 +116,9 @@ class Engine:
             if "loss" in m:
                 losses.append(m["loss"])
         self.flush()
+        # losses are device arrays (backends' zero-sync metrics contract);
+        # materialize once here, off the hot loop
+        losses = [float(l) for l in jax.block_until_ready(losses)]
         result = {"losses": losses,
                   "final_loss": losses[-1] if losses else None,
                   "steps": self._step}

@@ -153,17 +153,9 @@ def _state_sharding_for(path: str, leaf, segs, rules: MeshRules):
     nd = len(leaf.shape)
     if param_path in segs and kind in ("sel_idx", "m_sel", "v_sel",
                                        "rows", "idx"):
-        s = segs[param_path]
-        spec = [None] * nd
         core = 2 if kind in ("sel_idx", "idx") else 3
-        for i, ax in enumerate(s.lead_spec[: max(nd - core, 0)]):
-            spec[i] = ax
-        if core == 2:
-            spec[-2] = s.row_axis_spec
-        else:
-            spec[-3] = s.row_axis_spec
-            spec[-1] = s.col_axis_spec
-        return NamedSharding(mesh, P(*spec))
+        return zen_spmd.segmented_sharding(param_path, segs[param_path],
+                                           nd, mesh, core=core)
     return NamedSharding(mesh, P())
 
 

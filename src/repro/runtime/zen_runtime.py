@@ -11,10 +11,44 @@ JAX realization of the paper's Fig 7 zero-stall pipeline:
   host:        acc_t | acc_t+1 | ... | UP(window W) ...
   upload:                               rows(W) land at boundary of W+1
 
+Zero-sync hot path
+------------------
+A steady-state step performs **no blocking host syncs and no fresh
+allocations**:
+
+  * the step counter and window boundary live in Python (`_t`,
+    `_steps_in_window`) — no device read of ``dstate["step"]``;
+  * TWO compiled device-program variants: the *steady-state* variant
+    (S-1 of every S steps) has no pending-rows scatter, no
+    ``jnp.where(valid, ...)`` select, and takes no pending buffer — the
+    per-step `zero_pending` rebuild is gone; the *boundary* variant
+    lands the host rows and double-buffers the pending slot through
+    donation (`donate_argnums=(0, 1, 2)`);
+  * metrics are returned as **device arrays** (zero-sync contract; see
+    `repro.telemetry.metrics_drain` for the consumer side). Only
+    `step_time` / `stall` / `boundary` / `window_extensions` — values the
+    runtime tracks in Python anyway — are Python scalars. Set
+    `RuntimeConfig.blocking_metrics=True` to restore the legacy
+    per-step scalarization (kept for before/after benchmarking; every
+    forced read is counted by `telemetry.syncwatch`);
+  * `host_bound` is staged to host memory explicitly
+    (`offload.stage_to_host`, async `jax.device_put` onto the leaf
+    sharding with `offload.host_memory_kind()`), so the PCIe hop
+    overlaps the next step's compute instead of the worker blocking on
+    a lazy transfer.
+
+Deliberate blocking syncs remain only OFF the steady-state path —
+straggler collects at a forced boundary, warmup landings, `flush()` —
+and all of them are routed through `telemetry.syncwatch` so
+`benchmarks/bench_dispatch.py` can assert the steady-state count is 0.
+
 Fault-tolerance hooks:
   * checkpoint/restore of the full (params, device, host, loader) state;
   * straggler absorption — a host apply that misses its boundary extends
-    the window (bounded by s_max) instead of stalling the device.
+    the window (bounded by s_max) instead of stalling the device;
+  * no pending update is ever dropped: when two host applies queue on
+    the single pending slot, the older one is landed eagerly through the
+    boundary-path scatter (`zen_spmd.make_land_pending`).
 
 Wall-time EMA straggler *telemetry* lives in
 `repro.engine.callbacks.StragglerWatchdog`; prefer driving this runtime
@@ -35,6 +69,7 @@ import numpy as np
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.distributed.sharding import MeshRules
 from repro.distributed import zen_spmd
+from repro.telemetry import syncwatch
 
 
 # state-dict fields added after the first release: restores of older
@@ -46,6 +81,8 @@ OPTIONAL_CKPT_KEYS = ("s_eff", "window_extensions")
 class RuntimeConfig:
     donate: bool = True
     straggler_window_extension: bool = True   # extend S instead of stalling
+    stage_host_bound: bool = True    # explicit async d2h staging of host_bound
+    blocking_metrics: bool = False   # legacy per-step scalarization (bench)
 
 
 class _Future:
@@ -118,15 +155,35 @@ class ZenFlowRuntime:
         step_fn, segs, partition = zen_spmd.make_device_step(model, zcfg, rules)
         self.segs = segs
         self.partition = partition
-        donate = (0, 1, 2) if rcfg.donate else ()
-        self.device_step = jax.jit(step_fn, donate_argnums=donate)
+        steady_fn, _, _ = zen_spmd.make_device_step(
+            model, zcfg, rules, segs=segs, with_pending=False)
+        donate = rcfg.donate
+        # boundary variant: lands the pending host rows (donated)
+        self.device_step = jax.jit(
+            step_fn, donate_argnums=(0, 1, 2) if donate else ())
+        # steady-state variant: no pending input, no scatter dead work
+        self.device_step_steady = jax.jit(
+            steady_fn, donate_argnums=(0, 1) if donate else ())
+        # boundary-path landing in isolation (pending-slot overflow);
+        # only params are donated — the pending buffers cannot alias the
+        # params-shaped output
+        self._land = jax.jit(zen_spmd.make_land_pending(segs),
+                             donate_argnums=(0,) if donate else ())
         self.host_accumulate, self.host_apply = \
             zen_spmd.make_host_programs(zcfg)
+        self._stage: Optional[Callable] = None
+        if rcfg.stage_host_bound:
+            from repro.distributed.offload import host_memory_kind, \
+                stage_to_host
+            kind = host_memory_kind()
+            if kind is not None:
+                self._stage = lambda hb, _k=kind: stage_to_host(hb, kind=_k)
         self.worker: Optional[_HostWorker] = None
         self.params = None
         self.dstate = None
-        self.pending = None
+        self.pending = None               # None = steady state (no landing)
         self._apply_future: Optional[_Future] = None
+        self._t = 0                       # Python-side step counter
         self._steps_in_window = 0
         self._s_eff = zcfg.update_interval
         self.stall_log: list[float] = []
@@ -140,28 +197,57 @@ class ZenFlowRuntime:
         host_state = zen_spmd.zen_host_state_init(
             spec, self.zcfg, self.segs, params=self.params)
         self.worker = _HostWorker(host_state)
-        self.pending = zen_spmd.zero_pending(self.segs, spec)
+        self.pending = None
+        self._t = 0
         return self
 
     # ------------------------------------------------------------------
+    def _push_pending(self, rows, idx):
+        """Queue host-apply output rows for landing at the next step.
+
+        The pending slot is single (double-buffered against the device
+        program through donation). If it is already occupied — a
+        collected straggler apply immediately followed by a warmup
+        landing, or a restored checkpoint's pending plus a fresh apply —
+        the OLDER buffer is landed into params right now through the
+        boundary-path scatter, preserving apply order; nothing is ever
+        overwritten (the pre-rewrite "never leak one" bug).
+        """
+        if self.pending is not None:
+            self.params = self._land(self.params, self.pending)
+        self.pending = {"rows": rows, "idx": idx,
+                        "valid": jnp.ones((), jnp.bool_)}
+
     def step(self, batch) -> dict:
         """One pipelined training step (device never waits on host apply
-        unless straggler extension is disabled)."""
-        t0 = time.perf_counter()
-        step_no = int(self.dstate["step"])
+        unless straggler extension is disabled).
 
-        self.params, self.dstate, host_bound, metrics = self.device_step(
-            self.params, self.dstate, self.pending, batch)
-        # pending was donated; rebuild as empty until an apply lands
-        self.pending = zen_spmd.zero_pending(self.segs,
-                                             self.model.param_specs())
+        Returns metrics as DEVICE ARRAYS (loss/rho/refresh) plus Python
+        scalars the runtime tracks anyway (step_time/stall/boundary/
+        window_extensions) — see the module docstring's zero-sync
+        contract."""
+        t0 = time.perf_counter()
+
+        if self.pending is not None:
+            pending, self.pending = self.pending, None   # donated below
+            self.params, self.dstate, host_bound, metrics = self.device_step(
+                self.params, self.dstate, pending, batch)
+        else:
+            self.params, self.dstate, host_bound, metrics = \
+                self.device_step_steady(self.params, self.dstate, batch)
+        self._t += 1
         self._steps_in_window += 1
+
+        # explicit async d2h staging: the PCIe hop overlaps the next
+        # step's compute; the worker consumes already-host-resident bytes
+        if self._stage is not None:
+            host_bound = self._stage(host_bound)
 
         # async host accumulate (ordered behind any in-flight apply)
         self.worker.submit(
             lambda st, hb=host_bound: (self.host_accumulate(st, hb), None))
 
-        t = step_no + 1
+        t = self._t
         warm = t <= self.zcfg.warmup_steps
         boundary = warm or (self._steps_in_window >= self._s_eff)
         stall = 0.0
@@ -175,10 +261,10 @@ class ZenFlowRuntime:
                 boundary = False
             else:
                 ts = time.perf_counter()
-                rows, idx = self._apply_future.get()   # may block (stall)
+                rows, idx = syncwatch.wait(self._apply_future,
+                                           tag="boundary_collect")
                 stall = time.perf_counter() - ts
-                self.pending = {"rows": rows, "idx": idx,
-                                "valid": jnp.ones((), jnp.bool_)}
+                self._push_pending(rows, idx)
                 self._apply_future = None
 
         if boundary:
@@ -189,25 +275,25 @@ class ZenFlowRuntime:
                 st2, rows = self.host_apply(st, ci, lr)
                 return st2, (rows, ci)
 
-            prev = self._apply_future
             self._apply_future = self.worker.submit(do_apply)
-            if prev is not None:
-                # shouldn't happen (collected above), but never leak one
-                rows, idx = prev.get()
-                self.pending = {"rows": rows, "idx": idx,
-                                "valid": jnp.ones((), jnp.bool_)}
             self._steps_in_window = 0
             if warm:
                 # warmup: land synchronously (paper's tau warm-up, no
                 # staleness while gradients are large)
-                rows, idx = self._apply_future.get()
-                self.pending = {"rows": rows, "idx": idx,
-                                "valid": jnp.ones((), jnp.bool_)}
+                rows, idx = syncwatch.wait(self._apply_future,
+                                           tag="warmup_land")
+                self._push_pending(rows, idx)
                 self._apply_future = None
 
+        out = dict(metrics)
+        if self.rcfg.blocking_metrics:
+            # legacy contract: device step-counter read + full per-step
+            # scalarization — every forced read is a counted host sync
+            syncwatch.scalar(self.dstate["step"], tag="legacy_step_read")
+            out = {k: (syncwatch.scalar(v, tag="legacy_scalarize")
+                       if jnp.ndim(v) == 0 else v)
+                   for k, v in out.items()}
         dt = time.perf_counter() - t0
-        out = {k: (float(v) if jnp.ndim(v) == 0 else v)
-               for k, v in metrics.items()}
         out.update({
             "step_time": dt, "stall": stall, "boundary": bool(boundary),
             "window_extensions": self.window_extensions,
@@ -219,18 +305,23 @@ class ZenFlowRuntime:
     def flush(self):
         """Land any in-flight host apply (end of run / checkpoint)."""
         if self._apply_future is not None:
-            rows, idx = self._apply_future.get()
-            self.pending = {"rows": rows, "idx": idx,
-                            "valid": jnp.ones((), jnp.bool_)}
+            rows, idx = syncwatch.wait(self._apply_future, tag="flush")
+            self._push_pending(rows, idx)
             self._apply_future = None
 
     def state_dict(self) -> dict:
         self.flush()
+        pending = self.pending
+        if pending is None:
+            # checkpoint layout is stable: an empty slot serializes as an
+            # invalid zero-pending buffer (same shapes every time)
+            pending = zen_spmd.zero_pending(self.segs,
+                                            self.model.param_specs())
         return {
             "params": self.params,
             "dstate": self.dstate,
             "host_state": self.worker.snapshot(),
-            "pending": self.pending,
+            "pending": pending,
             "steps_in_window": self._steps_in_window,
             # Zen-auto progress: without these a restarted run would fall
             # back to the configured S and forget absorbed stragglers
@@ -241,7 +332,11 @@ class ZenFlowRuntime:
     def load_state_dict(self, sd: dict):
         self.params = sd["params"]
         self.dstate = sd["dstate"]
-        self.pending = sd["pending"]
+        pending = sd["pending"]
+        # one-time host reads at restore (not the hot path): step counter
+        # and pending validity move back into Python
+        self.pending = pending if bool(np.asarray(pending["valid"])) else None
+        self._t = int(np.asarray(self.dstate["step"]))
         self._steps_in_window = int(sd.get("steps_in_window", 0))
         self._s_eff = int(sd.get("s_eff", self.zcfg.update_interval))
         self.window_extensions = int(sd.get("window_extensions", 0))
@@ -249,6 +344,11 @@ class ZenFlowRuntime:
             self.worker = _HostWorker(sd["host_state"])
         else:
             self.worker.set_state(sd["host_state"])
+        # drop any in-flight apply from the pre-restore run: its rows were
+        # computed from the replaced host state and must not land in the
+        # restored params (set_state above is queued behind it, so the
+        # worker is already past it when we get here)
+        self._apply_future = None
         return self
 
     def close(self):

@@ -1,3 +1,6 @@
-from repro.telemetry import costmodel, hlo_stats, roofline, simulator
+from repro.telemetry import (costmodel, hlo_stats, metrics_drain, roofline,
+                             simulator, syncwatch)
+from repro.telemetry.metrics_drain import MetricsDrain
 
-__all__ = ["costmodel", "hlo_stats", "roofline", "simulator"]
+__all__ = ["costmodel", "hlo_stats", "metrics_drain", "roofline",
+           "simulator", "syncwatch", "MetricsDrain"]

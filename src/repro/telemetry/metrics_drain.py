@@ -1,0 +1,108 @@
+"""Asynchronous metrics drain: the consumer side of the zero-sync step
+contract.
+
+Backends return per-step metrics as **device arrays** (no per-step
+`float()` d2h syncs — see `repro.engine.backends`). Something still has
+to turn those into Python numbers for logging/JSON, without stalling the
+dispatch loop. `MetricsDrain` is that something: a bounded ring buffer of
+in-flight `(step, metrics)` entries that are materialized to floats only
+once their arrays have committed on-device (checked with the
+non-blocking `Array.is_ready()`), i.e. a few steps behind the head of
+the pipeline.
+
+The only time the drain blocks is when the ring overflows while the
+oldest entry is still uncommitted — the device is > `capacity` steps
+behind the driver, which is itself a stall signal; that forced
+materialization is counted via `telemetry.syncwatch` (tag
+``metrics_drain``).
+
+Wire-up: `repro.engine.callbacks.MetricsDrainCallback` pushes every
+step's metrics and drains the tail at run end.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Optional
+
+from repro.telemetry import syncwatch
+
+
+def _materialize(metrics: dict) -> dict:
+    """Device/np scalars -> Python scalars; non-scalars pass through."""
+    out = {}
+    for k, v in metrics.items():
+        if hasattr(v, "item") and getattr(v, "ndim", None) == 0:
+            out[k] = v.item()
+        else:
+            out[k] = v
+    return out
+
+
+def _entry_ready(metrics: dict) -> bool:
+    for v in metrics.values():
+        is_ready = getattr(v, "is_ready", None)
+        if is_ready is not None and not is_ready():
+            return False
+    return True
+
+
+class MetricsDrain:
+    """Ring buffer draining device-array metrics to floats off the hot
+    path. `push()` is non-blocking in steady state; `drain()` forces the
+    remainder (end of run)."""
+
+    def __init__(self, capacity: int = 64,
+                 on_metrics: Optional[Callable[[int, dict], None]] = None,
+                 keep_history: bool = True):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.on_metrics = on_metrics
+        self.keep_history = keep_history
+        self._ring: deque = deque()
+        self.history: list[tuple[int, dict]] = []
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    # ------------------------------------------------------------------
+    def push(self, step: int, metrics: dict) -> None:
+        """Enqueue one step's metrics; opportunistically drain every
+        entry whose arrays have already committed."""
+        self._ring.append((step, metrics))
+        self.drain_ready()
+        while len(self._ring) > self.capacity:
+            self._pop(forced=True)
+
+    def drain_ready(self) -> int:
+        """Materialize all leading entries that are ready; returns how
+        many were drained. Never blocks."""
+        n = 0
+        while self._ring and _entry_ready(self._ring[0][1]):
+            self._pop(forced=False)
+            n += 1
+        return n
+
+    def drain(self) -> list[tuple[int, dict]]:
+        """Force-materialize everything still in flight (end of run) and
+        return the full drained history."""
+        while self._ring:
+            self._pop(forced=True)
+        return self.history
+
+    def latest(self) -> Optional[tuple[int, dict]]:
+        """Most recently drained (step, metrics), or None."""
+        return self.history[-1] if self.history else None
+
+    # ------------------------------------------------------------------
+    def _pop(self, forced: bool) -> None:
+        step, metrics = self._ring.popleft()
+        if forced and not _entry_ready(metrics):
+            # ring overflow on an uncommitted entry: the one place the
+            # drain blocks, and it is accounted as a host sync
+            syncwatch.record("metrics_drain", blocked=True)
+        out = _materialize(metrics)
+        if self.keep_history:
+            self.history.append((step, out))
+        if self.on_metrics is not None:
+            self.on_metrics(step, out)

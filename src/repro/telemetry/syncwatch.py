@@ -1,0 +1,80 @@
+"""Blocking host-sync accounting for the zero-sync hot path.
+
+A *blocking host sync* is any point where the Python driver thread reads a
+device value (scalar d2h copy) or waits on an in-flight host program
+instead of dispatching the next step. The paper's stall-free pipeline
+(Fig 7) requires the steady-state step to contain NONE of these; this
+module is the seam every deliberate sync in the runtime goes through so
+`benchmarks/bench_dispatch.py` can count them.
+
+Accounting is deterministic: `scalar()` / `wait()` record one event per
+*forced read*, tagged by call site, regardless of whether the value
+happened to be ready (a d2h scalar read serializes the dispatch queue
+either way).  Events where the host genuinely blocked on an uncommitted
+value are additionally counted under ``blocked`` — the hard-stall subset.
+
+Thread-safety: counters are guarded by a lock (the host worker thread and
+driver thread may both record).
+"""
+from __future__ import annotations
+
+import threading
+from collections import Counter
+from typing import Any
+
+_lock = threading.Lock()
+_events: Counter = Counter()
+_blocked: Counter = Counter()
+
+
+def reset() -> None:
+    """Zero all counters (benchmarks call this after warmup/compile)."""
+    with _lock:
+        _events.clear()
+        _blocked.clear()
+
+
+def record(tag: str, n: int = 1, blocked: bool = False) -> None:
+    """Record `n` forced host syncs under `tag`."""
+    with _lock:
+        _events[tag] += n
+        if blocked:
+            _blocked[tag] += n
+
+
+def total() -> int:
+    """Total forced host syncs since the last reset()."""
+    with _lock:
+        return sum(_events.values())
+
+
+def counts() -> dict:
+    """Snapshot: {"total", "blocked_total", "by_tag", "blocked_by_tag"}."""
+    with _lock:
+        return {
+            "total": sum(_events.values()),
+            "blocked_total": sum(_blocked.values()),
+            "by_tag": dict(_events),
+            "blocked_by_tag": dict(_blocked),
+        }
+
+
+def _is_ready(x: Any) -> bool:
+    try:
+        return bool(x.is_ready())
+    except Exception:
+        return True  # numpy / python scalars: nothing to wait for
+
+
+def scalar(x: Any, tag: str = "scalar") -> float:
+    """Forced d2h scalar read — counts one sync, returns float(x)."""
+    record(tag, blocked=not _is_ready(x))
+    return float(x)
+
+
+def wait(fut: Any, tag: str = "future"):
+    """Block on a host-worker future; counts one sync iff it was not
+    already complete (a ready future costs nothing)."""
+    if not fut.ready():
+        record(tag, blocked=True)
+    return fut.get()

@@ -94,6 +94,60 @@ def test_three_backends_train_same_model(cfg, zcfg):
         assert dev < 1e-2, dev
 
 
+def test_async_sync_parity_three_windows_with_warmup(cfg):
+    """Parity across >= 3 full windows (S=2, 10 steps) including the
+    synchronous warmup prefix: the two-variant async pipeline must track
+    the functional spec within the one-window staleness bound."""
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=2,
+                         refresh_interval=4, warmup_steps=2, lr=1e-3,
+                         use_kernels="never")
+    batches = _batches(cfg, 10)
+    finals, boundaries = {}, {}
+    for name in ("sync", "async"):
+        eng = Engine.from_config(cfg, zcfg, backend=name)
+        eng.init(jax.random.PRNGKey(0))
+        ms = [eng.step(b) for b in batches]
+        eng.flush()
+        finals[name] = jax.tree.leaves(eng.state_dict()["backend"]["params"])
+        boundaries[name] = sum(bool(m["boundary"]) for m in ms)
+        eng.close()
+    assert boundaries["async"] >= 4          # warmup x2 + >=3 windows seen
+    for a, b in zip(finals["sync"], finals["async"]):
+        dev = float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32)
+                                    - jnp.asarray(b, jnp.float32))))
+        assert dev < 1e-2, dev
+
+
+def test_async_checkpoint_restore_mid_window_continues_identically(cfg):
+    """Checkpoint/restore in the MIDDLE of a window (S=4, saved at step
+    6): the restored engine must continue loss-for-loss with the
+    original, pending slot and host state included."""
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                         refresh_interval=8, lr=1e-3, use_kernels="never")
+    eng = Engine.from_config(cfg, zcfg, backend="async")
+    eng.init(jax.random.PRNGKey(0))
+    loader = make_train_stream(cfg.vocab, 32, 8)
+    for _ in range(6):
+        eng.step({k: jnp.asarray(v) for k, v in loader.next_batch().items()})
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, async_save=False)
+        cm.save(eng.state_dict(), step=6, extra={"loader": loader.state()})
+        cont = [float(eng.step({k: jnp.asarray(v) for k, v
+                                in loader.next_batch().items()})["loss"])
+                for _ in range(6)]
+        eng.close()
+
+        eng2 = Engine.from_config(cfg, zcfg, backend="async")
+        eng2.init(jax.random.PRNGKey(7))
+        loader2 = make_train_stream(cfg.vocab, 32, 8)
+        assert eng2.restore_latest(cm, loader2) == 6
+        resumed = [float(eng2.step({k: jnp.asarray(v) for k, v
+                                    in loader2.next_batch().items()})["loss"])
+                   for _ in range(6)]
+        eng2.close()
+    np.testing.assert_allclose(resumed, cont, atol=1e-5)
+
+
 def test_fused_backend_lowering_checked(cfg, zcfg):
     try:
         eng = Engine.from_config(cfg, zcfg, backend="fused")
