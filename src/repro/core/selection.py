@@ -22,9 +22,18 @@ Array = jax.Array
 
 
 def quota_for(m: int, topk_ratio: float, n_shards: int = 1) -> int:
-    """Selected channels per shard: ceil(k * m_local), at least 1."""
-    m_local = m // n_shards
-    return max(1, int(math.ceil(topk_ratio * m_local)))
+    """Selected channels per shard: ceil(k * m_local), at least 1.
+
+    `m_local` is ceil-based so uneven shardings (m % n_shards != 0) are
+    well-defined: every row belongs to some shard of at most
+    ceil(m / n_shards) rows, and the aggregate quota across shards never
+    undershoots the unsharded quota (floor-based m_local silently dropped
+    the remainder rows from the quota basis).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    m_local = -(-m // n_shards)               # ceil(m / n_shards)
+    return max(1, min(m_local, int(math.ceil(topk_ratio * m_local))))
 
 
 def channel_sq_norms(g: Array, psum_axes=None) -> Array:

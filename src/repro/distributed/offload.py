@@ -63,6 +63,16 @@ def stage_to_host(tree, kind: Optional[str] = None):
     construction. Leaves already resident in `kind` pass through (on
     XLA:CPU the default memory IS unpinned_host, making this a no-op).
     Returns the tree unchanged when no host memory kind is addressable.
+
+    Mesh-parallel note (the `spmd` backend): staging targets *the leaf's
+    own NamedSharding* with only the memory kind swapped, so a
+    row-sharded host-bound buffer becomes RS independent per-shard
+    device-to-host streams — each shard's complement gradients land in
+    the host memory attached to that shard's device, mirroring
+    MLP-Offload's independent offload channels rather than funneling
+    every shard through one host path. The sharded host state
+    (`zen_spmd.zen_placements().host`) is laid out identically, so the
+    worker's accumulate consumes each shard's bytes where they landed.
     """
     kind = kind or host_memory_kind()
     if kind is None:
@@ -85,9 +95,14 @@ def host_sharding(mesh: Mesh, *spec, kind: Optional[str] = None
 
 
 def host_state_shardings(host_state_spec, segs, rules, kind=None):
-    """Host-memory shardings for the ZenFlow host state (fused mode)."""
-    from repro.launch.shardspecs import dstate_shardings
-    dev = dstate_shardings(host_state_spec, segs, rules)
+    """Host-memory shardings for the ZenFlow host state (fused mode).
+
+    Segment-sharded like the device state (acc/m_host/v_host/master
+    follow `zen_spmd.state_sharding_for`), then pinned to the host
+    memory kind — the fused-mode counterpart of the two-program
+    runtime's `zen_placements().host`."""
+    from repro.distributed.zen_spmd import state_shardings
+    dev = state_shardings(host_state_spec, segs, rules)
     kind = kind or host_memory_kind(rules.mesh.devices.flat[0]) \
         or "pinned_host"
     return jax.tree.map(lambda s: s.with_memory_kind(kind), dev)

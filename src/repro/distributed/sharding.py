@@ -71,6 +71,12 @@ _SINGLE_POD = {
     "kv_seq": None,              # decode KV cache sequence dim (SP if set)
     "ssm_state": None,
     "conv": None,
+    # ZenFlow selection-state segmentation for REPLICATED params (paper
+    # §5 DDP setting): when a split param's own row axis is unsharded,
+    # its selection/optimizer/host state still segments over this axis
+    # (see zen_spmd.build_segments). None = segmentation follows param
+    # sharding only.
+    "zen_rows": None,
 }
 
 _MULTI_POD = dict(_SINGLE_POD)

@@ -19,11 +19,35 @@ boundary variant (takes and lands a pending-rows buffer) and a
 steady-state variant (`with_pending=False`) with no pending input and no
 scatter dead work; `make_land_pending()` is the landing scatter in
 isolation.
+
+Local-quota selection contract (mesh-parallel `spmd` backend, paper §5)
+-----------------------------------------------------------------------
+Under a device mesh, each of the RS channel shards of a split parameter
+selects its OWN top-⌈k·m_local⌉ channels from the psum-completed channel
+norms — there is never a global top-k, so no cross-shard sort, no
+variable shapes, and no synchronization beyond the O(m) norm all-reduce
+(`channel_sq_norms(psum_axes=...)` inside `shard_map`, or inserted by
+GSPMD). The trade-off is bounded retention loss vs exact global top-k:
+a shard whose hot channels cluster may locally demote a channel that a
+global sort would keep (and promote a colder one elsewhere); measured
+<2% selected-energy difference in `benchmarks/bench_locality.py`, and
+the complement rows still reach the host stream of their own shard, so
+no gradient is ever dropped — misranked channels are simply applied on
+the asynchronous host path instead of the synchronous device path.
+Segmentation follows the parameter's row-axis sharding; for replicated
+parameters (pure data-parallel replicas, the paper's multi-GPU DDP
+setting) the `zen_rows` logical rule segments selection state anyway, so
+optimizer shards and per-shard host streams stay distributed while
+fwd/bwd math is untouched.
+
+`zen_placements()` returns the NamedSharding pytrees for every buffer
+class of the pipeline (params / device state / pending slot / host
+state), so the runtime can commit sharded residency at init instead of
+relying on first-step GSPMD resharding.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -37,7 +61,8 @@ from repro.core.zen_optimizer import (ZenFlowConfig, device_update,
                                       zenflow_init)
 from repro.core import selection as sel
 from repro.distributed.sharding import (MeshRules, param_shardings,
-                                        set_mesh_rules, _axis_size)
+                                        set_mesh_rules, shard_map,
+                                        _axis_size)
 
 Array = jax.Array
 
@@ -78,13 +103,29 @@ def build_segments(params_spec, zcfg: ZenFlowConfig, rules: MeshRules
             lead = tuple(full[: nd - 2])
         else:
             row_ax = col_ax = None
+        if rules.mesh is not None and (_axis_size(rules.mesh, row_ax) or 1) <= 1:
+            # decoupled segmentation (module docstring): a param whose own
+            # row axis is effectively unsharded (replicated DDP replicas,
+            # or a row rule mapping to a size-1 mesh axis) still shards
+            # its selection state and host streams over `zen_rows` — but
+            # never over an axis its column/leading dims already consume
+            # (a duplicate mesh axis in one PartitionSpec is invalid)
+            zr = rules.rules.get("zen_rows")
+            zr_axes = set(zr) if isinstance(zr, tuple) else {zr}
+            used = {a for ax in (col_ax, *lead)
+                    for a in (ax if isinstance(ax, tuple) else (ax,)) if a}
+            if zr is not None and _axis_size(rules.mesh, zr) > 1 \
+                    and not (zr_axes & used):
+                row_ax = zr
         rs = _axis_size(rules.mesh, row_ax) or 1
         if info.m % rs or rs <= 0:
             rs = 1
         if info.m // rs < zcfg.min_dim:
             rs = 1  # keep segments >= min_dim rows (partition consistency)
+        if rs == 1 and row_ax is not None:
+            row_ax = None            # segmentation fell back: state unsharded
         m_local = info.m // rs
-        quota = max(1, int(math.ceil(zcfg.topk_ratio * m_local)))
+        quota = sel.quota_for(info.m, zcfg.topk_ratio, rs)
         segs[p] = SegmentInfo(p, rs, m_local, quota, row_ax, col_ax, lead)
     return segs
 
@@ -138,6 +179,92 @@ def segmented_sharding(p: str, seg: SegmentInfo, ndim: int, mesh: Mesh,
         spec[-3] = seg.row_axis_spec
         spec[-1] = seg.col_axis_spec
     return NamedSharding(mesh, P(*spec))
+
+
+# Buffer kinds of the segmented ZenFlow state, by leading path component.
+# core=3: (lead..., RS, X, n) value arrays; core=2: (lead..., RS, X) index
+# arrays. Device state, the pending slot AND the host state all follow the
+# same segment layout, so one map places every buffer class of the
+# pipeline (each host shard thereby owns the host-side mirror of exactly
+# its device shard — the per-shard offload streams of the spmd backend).
+_STATE_VALUE_KINDS = ("m_sel", "v_sel", "rows", "pending_rows",
+                      "acc", "m_host", "v_host", "master")
+_STATE_INDEX_KINDS = ("sel_idx", "idx", "pending_idx")
+
+
+def state_sharding_for(path: str, leaf, segs: dict[str, SegmentInfo],
+                       rules: MeshRules) -> NamedSharding:
+    """NamedSharding for one ZenFlow state leaf, by its tree path.
+
+    Covers device state (`sel_idx`/`m_sel`/`v_sel`), the pending slot
+    (`rows`/`idx`), and host state (`acc`/`m_host`/`v_host`/`master`/
+    `pending_rows`/`pending_idx`). Scalars, dense-optimizer state and
+    anything not keyed by a segmented param replicate."""
+    parts = path.split("/")
+    kind = parts[0]
+    param_path = "/".join(parts[1:])
+    if param_path in segs:
+        if kind in _STATE_VALUE_KINDS:
+            return segmented_sharding(param_path, segs[param_path],
+                                      len(leaf.shape), rules.mesh, core=3)
+        if kind in _STATE_INDEX_KINDS:
+            return segmented_sharding(param_path, segs[param_path],
+                                      len(leaf.shape), rules.mesh, core=2)
+    return NamedSharding(rules.mesh, P())
+
+
+def state_shardings(state_spec, segs: dict[str, SegmentInfo],
+                    rules: MeshRules):
+    """Map `state_sharding_for` over a state pytree (preserves structure)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_spec)
+    out = [state_sharding_for(path_str(p), leaf, segs, rules)
+           for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZenPlacements:
+    """NamedSharding pytrees for every buffer class of the mesh-parallel
+    ZenFlow pipeline. Built once at runtime construction; applied with
+    `jax.device_put` at init/restore so steady-state steps never reshard."""
+    params: Any
+    dstate: Any
+    pending: Any
+    host: Any
+
+
+def zen_placements(params_spec, zcfg: ZenFlowConfig, rules: MeshRules,
+                   segs: dict[str, SegmentInfo]) -> ZenPlacements:
+    """Compute the sharded residency of the full pipeline state."""
+    if rules.mesh is None:
+        raise ValueError("zen_placements requires MeshRules with a mesh")
+    dspec = jax.eval_shape(
+        lambda: zen_device_state_init(params_spec, zcfg, segs))
+    hspec = jax.eval_shape(
+        lambda: zen_host_state_init(params_spec, zcfg, segs))
+    return ZenPlacements(
+        params=param_shardings(params_spec, rules),
+        dstate=state_shardings(dspec, segs, rules),
+        pending=state_shardings(pending_specs(segs, params_spec), segs,
+                                rules),
+        host=state_shardings(hspec, segs, rules),
+    )
+
+
+def sharded_channel_norms(g: Array, mesh: Mesh, col_axis,
+                          row_axis=None) -> Array:
+    """Explicit `shard_map` realization of the paper's O(m) selection
+    proxy: per-shard partial channel norms completed by a `psum` over the
+    mesh axis sharding the out (last) dim. The GSPMD path reaches the
+    same collective implicitly; this form pins it for tests/benchmarks
+    that must observe the communication pattern."""
+    nd = g.ndim
+    in_spec = P(*([None] * (nd - 2) + [row_axis, col_axis]))
+    out_spec = P(*([None] * (nd - 2) + [row_axis]))
+    fn = shard_map(
+        lambda gl: sel.channel_sq_norms(gl, psum_axes=col_axis),
+        mesh=mesh, in_specs=(in_spec,), out_specs=out_spec)
+    return fn(g)
 
 
 # ---------------------------------------------------------------------------

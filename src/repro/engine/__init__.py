@@ -5,6 +5,7 @@ from repro.engine.backends import (
     BaselineBackend,
     ExecutionBackend,
     FusedBackend,
+    SpmdBackend,
     SyncBackend,
     available_backends,
     make_backend,
@@ -21,8 +22,8 @@ from repro.engine.engine import Engine, default_rules
 
 __all__ = [
     "Engine", "default_rules",
-    "ExecutionBackend", "SyncBackend", "AsyncBackend", "FusedBackend",
-    "BaselineBackend", "BackendUnavailable",
+    "ExecutionBackend", "SyncBackend", "AsyncBackend", "SpmdBackend",
+    "FusedBackend", "BaselineBackend", "BackendUnavailable",
     "register_backend", "make_backend", "available_backends",
     "Callback", "CheckpointCallback", "MetricsDrainCallback",
     "TelemetryCallback", "StragglerWatchdog",

@@ -12,9 +12,14 @@ or, with the shared loop (checkpointing/telemetry via callbacks):
 
     eng.run(loader, steps)
 
-One facade, four stock backends (sync / async / fused / baseline — see
-engine/backends.py), uniform checkpointing via
-`state_dict()`/`load_state_dict()` through `CheckpointManager`.
+One facade, five stock backends (sync / async / spmd / fused / baseline
+— see engine/backends.py), uniform checkpointing via
+`state_dict()`/`load_state_dict()` through `CheckpointManager`. On a
+multi-device host `backend="spmd"` runs the whole async pipeline across
+a (data, model) mesh (built over every visible device unless `rules`
+carries one) with sharded state residency and per-shard host offload
+streams; `XLA_FLAGS=--xla_force_host_platform_device_count=N` exercises
+it without accelerators.
 """
 from __future__ import annotations
 
@@ -65,9 +70,11 @@ class Engine:
                     rcfg=None, **backend_kw) -> "Engine":
         """Build an engine from an ArchConfig (or registered config name).
 
-        `backend` is a registry name ("sync" | "async" | "fused" |
-        "baseline" | anything passed to `register_backend`) or an already
-        constructed ExecutionBackend.
+        `backend` is a registry name ("sync" | "async" | "spmd" |
+        "fused" | "baseline" | anything passed to `register_backend`) or
+        an already constructed ExecutionBackend. Extra keyword arguments
+        reach the backend factory (e.g. `segs=...` pins a custom channel
+        segmentation on the async/spmd runtimes).
         """
         if isinstance(cfg, str):
             cfg = get_config(cfg)

@@ -13,7 +13,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
 from repro.core.zen_optimizer import ZenFlowConfig
-from repro.core.partition import tree_to_pathdict, pathdict_to_tree
 from repro.distributed import zen_spmd
 from repro.distributed.sharding import (MeshRules, rules_for_mesh,
                                         param_shardings, _axis_size)
@@ -139,36 +138,15 @@ def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, rules: MeshRules):
     }
 
 
-def _state_sharding_for(path: str, leaf, segs, rules: MeshRules):
-    """Sharding for a ZenFlow device-state / pending leaf by path.
-
-    Segmented-state layout: (lead..., RS, X, n) for 3-D cores (m_sel,
-    v_sel, rows) and (lead..., RS, X) for index arrays; `lead` carries the
-    param's leading-dim shardings (layers, experts — critical for MoE
-    tables, which otherwise replicate hundreds of GiB per device)."""
-    mesh = rules.mesh
-    parts = path.split("/")
-    kind = parts[0]
-    param_path = "/".join(parts[1:])
-    nd = len(leaf.shape)
-    if param_path in segs and kind in ("sel_idx", "m_sel", "v_sel",
-                                       "rows", "idx"):
-        core = 2 if kind in ("sel_idx", "idx") else 3
-        return zen_spmd.segmented_sharding(param_path, segs[param_path],
-                                           nd, mesh, core=core)
-    return NamedSharding(mesh, P())
-
-
 def dstate_shardings(dstate_spec, segs, rules: MeshRules):
-    pd = tree_to_pathdict(dstate_spec)
-    # note: pathdict flattening loses the nested tree; map over the tree
-    flat, treedef = jax.tree_util.tree_flatten_with_path(dstate_spec)
-    out = []
-    from repro.core.partition import path_str
-    for path, leaf in flat:
-        p = path_str(path)
-        out.append(_state_sharding_for(p, leaf, segs, rules))
-    return jax.tree_util.tree_unflatten(treedef, out)
+    """Shardings for a ZenFlow state pytree (device state, pending slot
+    or host state) — the canonical buffer-kind map lives in
+    `zen_spmd.state_sharding_for`. Segmented-state layout: (lead..., RS,
+    X, n) for 3-D cores and (lead..., RS, X) for index arrays; `lead`
+    carries the param's leading-dim shardings (layers, experts — critical
+    for MoE tables, which otherwise replicate hundreds of GiB per
+    device)."""
+    return zen_spmd.state_shardings(dstate_spec, segs, rules)
 
 
 def attach(spec_tree, sharding_tree):

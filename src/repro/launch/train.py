@@ -76,7 +76,7 @@ def main() -> None:
     ap.add_argument("--warmup", type=int, default=0)
     ap.add_argument("--auto-tune", action="store_true")
     ap.add_argument("--backend", default="async",
-                    choices=["sync", "async", "fused", "baseline"])
+                    choices=["sync", "async", "spmd", "fused", "baseline"])
     ap.add_argument("--baseline", default="", choices=["", "adamw"],
                     help="deprecated alias for --backend baseline")
     ap.add_argument("--ckpt-dir", default="")

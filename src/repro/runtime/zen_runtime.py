@@ -42,6 +42,22 @@ straggler collects at a forced boundary, warmup landings, `flush()` —
 and all of them are routed through `telemetry.syncwatch` so
 `benchmarks/bench_dispatch.py` can assert the steady-state count is 0.
 
+Mesh-parallel execution (the `spmd` engine backend)
+---------------------------------------------------
+The same runtime runs the whole pipeline across a `jax` device mesh:
+when the rules carry a mesh spanning >1 device (or `place_sharded=True`),
+`zen_spmd.zen_placements` is computed once and every buffer class —
+params, device state, the pending slot, and the host state — is
+committed to its NamedSharding at `init()`/restore via `device_put`, so
+GSPMD never falls back to first-touch resharding on the hot path.
+Selection stays per-shard local-quota (no global top-k; see
+`zen_spmd`'s module docstring for the contract), the host worker owns a
+host state sharded exactly like its device counterpart (each shard keeps
+its own host-bound stream, staged per-leaf by `offload.stage_to_host`),
+and host-apply rows are uploaded back onto the pending slot's sharding
+asynchronously. The zero-sync steady-state contract above holds
+unchanged on the mesh.
+
 Fault-tolerance hooks:
   * checkpoint/restore of the full (params, device, host, loader) state;
   * straggler absorption — a host apply that misses its boundary extends
@@ -147,14 +163,25 @@ class ZenFlowRuntime:
     """Orchestrates the device/host ZenFlow pipeline for a model."""
 
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
-                 rcfg: Optional[RuntimeConfig] = None):
+                 rcfg: Optional[RuntimeConfig] = None,
+                 segs: Optional[dict] = None,
+                 place_sharded: Optional[bool] = None):
         self.model = model
         self.zcfg = zcfg
         self.rules = rules
         self.rcfg = rcfg = RuntimeConfig() if rcfg is None else rcfg
-        step_fn, segs, partition = zen_spmd.make_device_step(model, zcfg, rules)
+        step_fn, segs, partition = zen_spmd.make_device_step(model, zcfg,
+                                                            rules, segs=segs)
         self.segs = segs
         self.partition = partition
+        # mesh-parallel residency: default on whenever the rules carry a
+        # real (multi-device) mesh; `segs` may be passed to pin a custom
+        # segmentation (e.g. matching a sharded run on a single device)
+        if place_sharded is None:
+            place_sharded = rules.mesh is not None \
+                and rules.mesh.devices.size > 1
+        self.placements = zen_spmd.zen_placements(
+            model.param_specs(), zcfg, rules, segs) if place_sharded else None
         steady_fn, _, _ = zen_spmd.make_device_step(
             model, zcfg, rules, segs=segs, with_pending=False)
         donate = rcfg.donate
@@ -196,6 +223,12 @@ class ZenFlowRuntime:
         self.dstate = zen_spmd.zen_device_state_init(spec, self.zcfg, self.segs)
         host_state = zen_spmd.zen_host_state_init(
             spec, self.zcfg, self.segs, params=self.params)
+        if self.placements is not None:
+            # commit sharded residency once, off the hot path: every
+            # subsequent program consumes already-placed operands
+            self.params = jax.device_put(self.params, self.placements.params)
+            self.dstate = jax.device_put(self.dstate, self.placements.dstate)
+            host_state = jax.device_put(host_state, self.placements.host)
         self.worker = _HostWorker(host_state)
         self.pending = None
         self._t = 0
@@ -215,6 +248,12 @@ class ZenFlowRuntime:
         """
         if self.pending is not None:
             self.params = self._land(self.params, self.pending)
+        if self.placements is not None:
+            # asynchronous host->device upload of the window's rows onto
+            # the pending slot's sharding (each shard receives only its
+            # own rows; a no-op when they already live there)
+            rows = jax.device_put(rows, self.placements.pending["rows"])
+            idx = jax.device_put(idx, self.placements.pending["idx"])
         self.pending = {"rows": rows, "idx": idx,
                         "valid": jnp.ones((), jnp.bool_)}
 
@@ -333,6 +372,15 @@ class ZenFlowRuntime:
         self.params = sd["params"]
         self.dstate = sd["dstate"]
         pending = sd["pending"]
+        host_state = sd["host_state"]
+        if self.placements is not None:
+            # restores are mesh-agnostic (checkpoints hold global arrays):
+            # re-commit everything onto this runtime's shardings so the
+            # first post-restore step is already steady-state
+            self.params = jax.device_put(self.params, self.placements.params)
+            self.dstate = jax.device_put(self.dstate, self.placements.dstate)
+            pending = jax.device_put(pending, self.placements.pending)
+            host_state = jax.device_put(host_state, self.placements.host)
         # one-time host reads at restore (not the hot path): step counter
         # and pending validity move back into Python
         self.pending = pending if bool(np.asarray(pending["valid"])) else None
@@ -341,9 +389,9 @@ class ZenFlowRuntime:
         self._s_eff = int(sd.get("s_eff", self.zcfg.update_interval))
         self.window_extensions = int(sd.get("window_extensions", 0))
         if self.worker is None:
-            self.worker = _HostWorker(sd["host_state"])
+            self.worker = _HostWorker(host_state)
         else:
-            self.worker.set_state(sd["host_state"])
+            self.worker.set_state(host_state)
         # drop any in-flight apply from the pre-restore run: its rows were
         # computed from the replaced host state and must not land in the
         # restored params (set_state above is queued behind it, so the

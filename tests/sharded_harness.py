@@ -1,0 +1,64 @@
+"""Subprocess harness for multi-device tests on a CPU-only host.
+
+Real-mesh tests need `XLA_FLAGS=--xla_force_host_platform_device_count=N`
+set BEFORE jax initializes, which the already-imported test process can't
+do — so each test runs its snippet in a fresh interpreter. This module is
+the one place that gets the subtle parts right:
+
+  * the flag is prepended inside the child (the parent's XLA_FLAGS and
+    JAX_PLATFORMS are stripped so an outer CI environment can't silently
+    change the child's device count);
+  * success is judged by explicit ``markers`` printed from the snippet
+    PLUS a final sentinel emitted after the last assertion — a snippet
+    that dies halfway cannot pass by accident, and a marker-grep can't
+    mask a crash;
+  * the child's exit code is NOT trusted on its own: this container's
+    jax aborts in threading teardown at interpreter exit (exit 134 after
+    a fully successful run), so a nonzero exit with all markers present
+    is accepted and a zero exit with missing markers is still a failure;
+  * failures raise with the TAILS OF BOTH STREAMS (stderr-only slices
+    used to hide assertion output printed to stdout).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# Printed by run_sharded after the snippet's own code: reaching it proves
+# every statement (and therefore every assertion) in the snippet ran.
+SENTINEL = "SHARDED_SNIPPET_COMPLETE"
+
+_PRELUDE = """\
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys
+sys.path.insert(0, "src")
+"""
+
+
+def run_sharded(snippet: str, markers=(), devices: int = 8,
+                timeout: int = 420) -> str:
+    """Run `snippet` in a fresh interpreter with `devices` host devices.
+
+    Returns the child's stdout. Raises AssertionError with both stream
+    tails when the snippet crashes before completing or any marker is
+    missing.
+    """
+    code = _PRELUDE.format(devices=devices) + snippet \
+        + f"\nprint({SENTINEL!r})\n"
+    env = {k: v for k, v in os.environ.items()
+           if k not in ("XLA_FLAGS", "JAX_PLATFORMS")}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, cwd=REPO_ROOT, env=env)
+    missing = [m for m in (*markers, SENTINEL) if m not in r.stdout]
+    if missing:
+        raise AssertionError(
+            f"sharded snippet failed (exit {r.returncode}; "
+            f"missing markers {missing}):\n"
+            f"--- stdout tail ---\n{r.stdout[-2500:]}\n"
+            f"--- stderr tail ---\n{r.stderr[-2500:]}")
+    return r.stdout

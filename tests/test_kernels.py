@@ -11,9 +11,14 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.column_norm import column_norm_pallas
 from repro.kernels.grad_accum import grad_accum_pallas
-from repro.kernels.selective_adam import selective_adam_pallas
+from repro.kernels.selective_adam import DEFAULT_BLOCK_N, selective_adam_pallas
 
-SHAPES = [(8, 128), (64, 256), (33, 384), (128, 512)]
+# Edge coverage alongside the happy-path tiles: a 1-row matrix (the
+# single-block degenerate case), odd row counts, and n both below and
+# above DEFAULT_BLOCK_N without dividing it (forces the one-lane-block
+# fallback selective_adam.py documents, and multi-block grids at 1024).
+SHAPES = [(1, 128), (8, 128), (64, 256), (33, 384), (7, 640), (128, 512),
+          (8, 1024)]
 DTYPES = [jnp.float32, jnp.bfloat16]
 
 
@@ -83,6 +88,36 @@ def test_kernel_ops_batched(rng):
                                    rtol=2e-2, atol=2e-2)
     cn = ops.column_norm(g)
     assert cn.shape == (L, M)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_selective_adam_boundary_rows_ragged_n(rng, dtype):
+    """The 1-row block boundary cases the kernel docstring documents:
+    selection includes the first AND last row, with n > DEFAULT_BLOCK_N
+    but not a multiple of it (single lane-block fallback path)."""
+    M, N = 9, DEFAULT_BLOCK_N + 128
+    assert N % DEFAULT_BLOCK_N != 0
+    p = _mk(rng, (M, N), dtype)
+    g = _mk(rng, (M, N), dtype)
+    idx = jnp.asarray([0, M // 2, M - 1], jnp.int32)
+    C = idx.shape[0]
+    m = jnp.asarray(rng.normal(size=(C, N)), jnp.float32)
+    v = jnp.asarray(np.abs(rng.normal(size=(C, N))), jnp.float32)
+    t = jnp.asarray(3, jnp.int32)
+    lr = jnp.asarray(1e-3, jnp.float32)
+    pk, mk_, vk = selective_adam_pallas(p, g, idx, m, v, t, lr,
+                                        interpret=True)
+    pr, mr, vr = ref.selective_adam_ref(p, g, idx, m, v, t, lr,
+                                        0.9, 0.999, 1e-8, 0.0)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(pk, np.float32),
+                               np.asarray(pr, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(mk_, mr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(vk, vr, rtol=1e-5, atol=1e-6)
+    # untouched interior rows are bit-identical (in-place semantics)
+    mask = np.ones(M, bool)
+    mask[np.asarray(idx)] = False
+    np.testing.assert_array_equal(np.asarray(pk)[mask], np.asarray(p)[mask])
 
 
 def test_selective_adam_untouched_rows(rng):

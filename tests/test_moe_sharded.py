@@ -1,15 +1,9 @@
 """Expert-parallel MoE execution on a real multi-device mesh (subprocess
 with placeholder devices): the shard_map psum-EP path must match the
 dense-dispatch oracle, and the full MoE train step must run sharded."""
-import os
-import subprocess
-import sys
+from sharded_harness import run_sharded
 
 _SNIPPET = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys
-sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config, reduced_config
 from repro.distributed.sharding import rules_for_mesh, set_mesh_rules
@@ -67,8 +61,4 @@ print("MOE_TRAIN_OK", [round(l, 3) for l in losses])
 
 
 def test_moe_ep_sharded_matches_dense_oracle():
-    r = subprocess.run([sys.executable, "-c", _SNIPPET],
-                       capture_output=True, text=True, timeout=420,
-                       cwd=os.path.join(os.path.dirname(__file__), ".."))
-    assert "MOE_EP_OK" in r.stdout, r.stderr[-2500:]
-    assert "MOE_TRAIN_OK" in r.stdout, r.stderr[-2500:]
+    run_sharded(_SNIPPET, markers=("MOE_EP_OK", "MOE_TRAIN_OK"))

@@ -100,6 +100,117 @@ def test_batched_leading_dims():
     assert comp.shape == (3, 2, 12)
 
 
+# ---------------------------------------------------------------------------
+# quota_for: uneven shards (ceil-based m_local) + invariant checkers shared
+# by the deterministic sweeps (always run) and the hypothesis wrappers
+# (fuzzing, CI)
+
+
+def test_quota_for_uneven_shards_regression():
+    """m % n_shards != 0 used to floor m_local and silently drop the
+    remainder rows from the quota basis; ceil-based m_local keeps every
+    row covered by some shard's quota."""
+    # old: m_local = 10 // 4 = 2 -> quota ceil(0.5*2) = 1
+    # new: m_local = ceil(10/4) = 3 -> quota ceil(0.5*3) = 2
+    assert sel.quota_for(10, 0.5, 4) == 2
+    assert sel.quota_for(7, 0.3, 3) == 1
+    # even shards and the unsharded path are unchanged
+    assert sel.quota_for(64, 0.25, 1) == 16
+    assert sel.quota_for(64, 0.25, 4) == 4
+    # ratio 1.0 never overshoots the (ceil) shard size
+    assert sel.quota_for(8, 1.0, 3) == 3
+    with pytest.raises(ValueError):
+        sel.quota_for(8, 0.5, 0)
+
+
+def _check_quota_invariants(m, k, s):
+    q = sel.quota_for(m, k, s)
+    m_local = -(-m // s)
+    assert 1 <= q <= m_local, (m, k, s, q)
+    # sharding never under-selects vs the unsharded quota
+    assert q * s >= sel.quota_for(m, k, 1), (m, k, s)
+    # monotone nonincreasing in n_shards (shard size shrinks)
+    if s > 1:
+        assert q <= sel.quota_for(m, k, s - 1), (m, k, s)
+
+
+def _check_quota_monotone_in_k(m, k_lo, k_hi, s):
+    k_lo, k_hi = sorted((k_lo, k_hi))
+    assert sel.quota_for(m, k_lo, s) <= sel.quota_for(m, k_hi, s)
+
+
+def _check_permutation_invariance(m, q, seed):
+    """The selected channel SET is invariant under channel permutation
+    (norms made distinct so top-k is well-defined)."""
+    rng = np.random.default_rng(seed)
+    norms = np.arange(1, m + 1, dtype=np.float64)
+    norms = rng.permutation(norms) * (1.0 + 1e-3 * rng.random(m))
+    idx = np.asarray(sel.local_quota_topk(jnp.asarray(norms, jnp.float32), q))
+    perm = rng.permutation(m)
+    idx_p = np.asarray(sel.local_quota_topk(
+        jnp.asarray(norms[perm], jnp.float32), q))
+    assert set(perm[idx_p].tolist()) == set(idx.tolist())
+
+
+def _check_norms_shard_completeness(m, n, n_shards, seed):
+    """Summing per-shard partial channel norms over column shards must
+    reproduce the unsharded norms — the identity behind the paper's O(m)
+    psum (the shard_map/psum realization is exercised on a real mesh in
+    tests/test_spmd_backend.py)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    full = np.asarray(sel.channel_sq_norms(g))
+    bounds = np.linspace(0, n, n_shards + 1).astype(int)
+    partial = sum(np.asarray(sel.channel_sq_norms(g[:, lo:hi]))
+                  for lo, hi in zip(bounds[:-1], bounds[1:]))
+    np.testing.assert_allclose(partial, full, rtol=1e-5, atol=1e-5)
+
+
+def test_sweep_quota_invariants():
+    for m in (1, 2, 7, 10, 32, 63, 64, 257):
+        for k in (0.01, 0.1, 0.25, 0.5, 0.99, 1.0):
+            for s in (1, 2, 3, 4, 8, 16):
+                _check_quota_invariants(m, k, s)
+                _check_quota_monotone_in_k(m, k, min(1.0, k + 0.3), s)
+
+
+def test_sweep_permutation_invariance():
+    for m, q, seed in [(8, 2, 0), (24, 7, 1), (64, 16, 2), (33, 5, 3)]:
+        _check_permutation_invariance(m, q, seed)
+
+
+def test_sweep_norms_shard_completeness():
+    for m, n, s, seed in [(16, 32, 2, 0), (8, 33, 3, 1), (64, 128, 8, 2)]:
+        _check_norms_shard_completeness(m, n, s, seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 256), k=st.floats(0.01, 1.0), s=st.integers(1, 16))
+def test_property_quota_invariants(m, k, s):
+    _check_quota_invariants(m, k, s)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 128), k1=st.floats(0.01, 1.0),
+       k2=st.floats(0.01, 1.0), s=st.integers(1, 8))
+def test_property_quota_monotone_in_k(m, k1, k2, s):
+    _check_quota_monotone_in_k(m, k1, k2, s)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(4, 96), frac=st.floats(0.05, 0.9),
+       seed=st.integers(0, 999))
+def test_property_permutation_invariance(m, frac, seed):
+    _check_permutation_invariance(m, max(1, int(frac * m)), seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(1, 48), n=st.integers(2, 96),
+       n_shards=st.integers(1, 8), seed=st.integers(0, 99))
+def test_property_norms_shard_completeness(m, n, n_shards, seed):
+    _check_norms_shard_completeness(m, n, min(n_shards, n), seed)
+
+
 def test_spatial_locality_retention():
     """Synthetic gradients with concentrated channels: a fixed selection
     tracked across steps retains the top-k mass (paper Fig 6b shape)."""

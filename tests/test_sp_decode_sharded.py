@@ -1,15 +1,9 @@
 """Sequence-parallel flash decode on a real multi-device mesh: the
 shard_map partial-softmax combine must produce the same logits as the
 unsharded decode path."""
-import os
-import subprocess
-import sys
+from sharded_harness import run_sharded
 
 _SNIPPET = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys
-sys.path.insert(0, "src")
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import get_config, reduced_config
 from repro.configs.base import ShapeConfig
@@ -49,7 +43,4 @@ print("SP_DECODE_OK")
 
 
 def test_sp_decode_matches_unsharded():
-    r = subprocess.run([sys.executable, "-c", _SNIPPET],
-                       capture_output=True, text=True, timeout=420,
-                       cwd=os.path.join(os.path.dirname(__file__), ".."))
-    assert "SP_DECODE_OK" in r.stdout, r.stderr[-2500:]
+    run_sharded(_SNIPPET, markers=("SP_DECODE_OK",))
