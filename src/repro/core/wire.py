@@ -1,0 +1,113 @@
+"""Compressed device->host wire formats for the offloaded complement
+gradients (ISSUE 4).
+
+ZenFlow's host link carries the non-critical (complement) gradient rows
+every step — the dominant PCIe-down traffic of the paper's I/O model
+(§3.2). This module defines the *wire encoding* of those rows, selected
+by ``ZenFlowConfig.wire_dtype``:
+
+  "fp32"  lossless 4 B/element — the accounting baseline
+  "bf16"  2 B/element round-to-nearest (the default; matches the paper's
+          bf16 gradient transfer, no extra state)
+  "int8"  1 B/element + 4 B/row per-row symmetric scale
+          (kernels/quantize.py on TPU, ref.py math elsewhere)
+
+The quantized wire is paired with **error feedback** (Karimireddy et
+al., 2019 style): the encoder's residual ``eff - decode(encode(eff))``
+is kept in device state (``dstate["wire_residual"]``) and added to the
+next step's complement rows before encoding, so quantization error
+accumulates into later windows instead of being dropped — the host-side
+accumulated mean gradient telescopes to the true sum up to ONE step's
+rounding error, preserving the paper's accuracy story
+(tests/test_wire.py). The bf16 wire deliberately carries NO residual:
+its rounding error is already at the paper's own transfer precision, and
+an f32 residual over the complement rows would cost ~0.9x a full fp32
+gradient copy of device memory — the resource offloading exists to
+save.
+
+Encoded payloads are pytrees (a plain array for fp32/bf16, a
+``{"q", "scale"}`` dict for int8), so the runtime stages and ships them
+through the existing ``offload.stage_to_host`` path unchanged and
+``telemetry.trafficwatch`` measures their true byte footprint.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+WIRE_DTYPES = ("fp32", "bf16", "int8")
+
+
+def needs_error_feedback(wire_dtype: str) -> bool:
+    """Only the quantized (int8) wire keeps a residual — see the module
+    docstring for why bf16 does not."""
+    return wire_dtype == "int8"
+
+
+def encode_rows(rows: Array, wire_dtype: str, use_kernels: str = "never"):
+    """Encode (..., m, n) gradient rows for the host link.
+
+    Returns the wire payload: an array (fp32/bf16) or {"q", "scale"}
+    (int8). ``use_kernels="auto"`` routes int8 through the Pallas
+    quantizer when available (kernels/quantize.py)."""
+    if wire_dtype == "fp32":
+        return rows.astype(jnp.float32)
+    if wire_dtype == "bf16":
+        return rows.astype(jnp.bfloat16)
+    if wire_dtype == "int8":
+        from repro.kernels import ops as kops, ref
+        if use_kernels == "auto" and kops.pallas_available():
+            q, scale = kops.quantize_rows(rows)
+        else:
+            q, scale = ref.quantize_rows_ref(rows)
+        return {"q": q, "scale": scale}
+    raise ValueError(f"unknown wire_dtype {wire_dtype!r}; "
+                     f"expected one of {WIRE_DTYPES}")
+
+
+def decode_rows(payload, use_kernels: str = "never") -> Array:
+    """Decode a wire payload back to f32 rows (host accumulate side, and
+    the device-side residual computation). Dispatches exactly like
+    encode_rows: the Pallas dequantizer under ``use_kernels="auto"``
+    when available, otherwise the ref.py oracle (elementwise jnp that
+    XLA:CPU vectorizes on the host worker in production)."""
+    if isinstance(payload, dict):
+        from repro.kernels import ops as kops, ref
+        if use_kernels == "auto" and kops.pallas_available():
+            return kops.dequantize_rows(payload["q"], payload["scale"])
+        return ref.dequantize_rows_ref(payload["q"], payload["scale"])
+    return payload.astype(jnp.float32)
+
+
+def reconcile_residual(dstate: dict, init_fn) -> dict:
+    """Return `dstate` with a ``wire_residual`` matching THIS config's
+    layout (``init_fn`` builds a reference state; traced under
+    ``jax.eval_shape`` so nothing but the residual is ever allocated).
+
+    The error-feedback residual is deliberately NOT checkpointed — it is
+    transient encoder state bounded by one step's rounding error, and
+    keeping it out makes checkpoint layout identical across wire_dtype
+    settings and code versions. Every restore path therefore passes
+    through here to (re)install a zero residual of the right structure;
+    a dstate that already matches (e.g. an in-memory rollback) keeps its
+    live residual."""
+    want = jax.eval_shape(init_fn)["wire_residual"]
+    have = dstate.get("wire_residual", None)
+    # the KEY must exist even when empty — downstream pytrees (jitted
+    # program signatures, sharded placements) include it structurally
+    if have is not None and set(have) == set(want):
+        return dstate
+    out = dict(dstate)
+    out["wire_residual"] = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), want)
+    return out
+
+
+def wire_nbytes(payload_tree) -> int:
+    """Exact byte footprint of an encoded payload pytree (static — never
+    reads device values). Delegates to the one byte-accounting
+    definition in `telemetry.trafficwatch`."""
+    from repro.telemetry import trafficwatch
+    return trafficwatch.tree_bytes(payload_tree)

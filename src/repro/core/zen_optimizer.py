@@ -21,6 +21,13 @@ double-buffered overlap (DESIGN.md §2).
 Staleness semantics: pipeline="sync" applies the window's update at its own
 boundary; pipeline="async" delays it one window (double-buffering of Fig 7),
 matching the real pipeline bit-for-bit.
+
+Wire format: the complement gradients cross to the host in the encoding
+selected by ``ZenFlowConfig.wire_dtype`` (core/wire.py — fp32 / bf16 /
+int8-with-per-row-scale). The int8 wire keeps an error-feedback residual
+in device state (``wire_residual``) that is re-injected into the next
+step's complement rows before encoding, so the host accumulator tracks
+the true gradient sum up to one step's rounding error.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import selection as sel
+from repro.core import wire
 from repro.core.partition import (ParamInfo, build_partition, path_str,
                                   tree_to_pathdict, pathdict_to_tree)
 from repro.optim.adam import adam_row_update, _make_adam
@@ -56,16 +64,22 @@ class ZenFlowConfig:
     min_dim: int = 32                 # smaller params stay dense-on-device
     pipeline: str = "async"           # "async" | "sync"
     use_kernels: str = "auto"         # "auto" | "never" (Pallas selective-Adam)
-    # BEYOND-PAPER (§Perf): per-channel int8 quantization of the
-    # complement gradients on the host link (paper §6 notes compression is
-    # orthogonal; we integrate it) — halves PCIe-down traffic vs bf16.
-    compress_host_grads: str = "none"  # "none" | "int8"
+    # Wire encoding of the complement gradients on the host link
+    # (core/wire.py; paper §6 notes compression is orthogonal — we
+    # integrate it): "fp32" lossless baseline, "bf16" default, "int8"
+    # per-row-scale quantization. The int8 wire carries an error-feedback
+    # residual in device state so quantization error is re-injected into
+    # the next step's accumulation instead of dropped.
+    wire_dtype: str = "bf16"          # "fp32" | "bf16" | "int8"
 
     def __post_init__(self):
         if self.refresh_interval % self.update_interval:
             raise ValueError("refresh_interval must be a multiple of "
                              "update_interval (refresh happens at window "
                              "boundaries, after apply)")
+        if self.wire_dtype not in wire.WIRE_DTYPES:
+            raise ValueError(f"wire_dtype must be one of {wire.WIRE_DTYPES}, "
+                             f"got {self.wire_dtype!r}")
 
     def lr_at(self, step: Array) -> Array:
         if callable(self.lr):
@@ -91,6 +105,8 @@ def zenflow_init(params, zcfg: ZenFlowConfig, row_shards: int = 1) -> ZenState:
     sel_idx, m_sel, v_sel = {}, {}, {}
     acc, m_host, v_host, master = {}, {}, {}, {}
     pending_rows, pending_idx = {}, {}
+    wire_residual = {}
+    wire_ef = wire.needs_error_feedback(zcfg.wire_dtype)
     like = lambda x, shape, dt: jnp.zeros(shape, dt)
     for p, info in part.items():
         if not info.split:
@@ -101,6 +117,10 @@ def zenflow_init(params, zcfg: ZenFlowConfig, row_shards: int = 1) -> ZenState:
         sel_idx[p] = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), B + (C,))
         m_sel[p] = jnp.zeros(B + (C, n), jnp.float32)
         v_sel[p] = jnp.zeros(B + (C, n), jnp.float32)
+        if wire_ef:
+            # error-feedback residual of the wire encoder, shaped like the
+            # complement rows it re-injects (zeroed at selection refresh)
+            wire_residual[p] = jnp.zeros(B + (m - C, n), jnp.float32)
         acc[p] = jnp.zeros(B + (m, n), jnp.float32)
         m_host[p] = jnp.zeros(B + (m, n), jnp.float32)
         v_host[p] = jnp.zeros(B + (m, n), jnp.float32)
@@ -123,6 +143,7 @@ def zenflow_init(params, zcfg: ZenFlowConfig, row_shards: int = 1) -> ZenState:
         "sel_idx": sel_idx, "m_sel": m_sel, "v_sel": v_sel,
         "dense": dense_state,
         "imp_ema": {p: jnp.zeros((), jnp.float32) for p in sel_idx},
+        "wire_residual": wire_residual,
         "host": {
             "acc": acc, "count": jnp.zeros((), jnp.int32),
             "m_host": m_host, "v_host": v_host, "master": master,
@@ -140,21 +161,6 @@ def zenflow_partition(params, zcfg: ZenFlowConfig, row_shards: int = 1):
 
 # ---------------------------------------------------------------------------
 # Device side
-
-
-def _quantize_rows_int8(rows):
-    """Per-channel symmetric int8: (..., m, n) -> dict{q int8, scale f32}.
-    The host link then carries 1 byte/element + 4 bytes/channel."""
-    r32 = rows.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(r32), axis=-1, keepdims=True) / 127.0
-    q = jnp.clip(jnp.round(r32 / jnp.maximum(scale, 1e-12)), -127, 127)
-    return {"q": q.astype(jnp.int8), "scale": scale}
-
-
-def _dequantize_rows(g):
-    if isinstance(g, dict):
-        return g["q"].astype(jnp.float32) * g["scale"]
-    return g.astype(jnp.float32)
 
 
 def _moment_handoff(old_idx, new_idx, m_sel, v_sel):
@@ -202,6 +208,8 @@ def device_update(params: PathDict, grads: PathDict, state: ZenState,
     new_params = dict(params)
     new_sel, new_m, new_v, new_ema = {}, {}, {}, {}
     g_comp, comp_idx_out, old_rows, old_idx_out = {}, {}, {}, {}
+    new_residual = {}
+    wire_ef = wire.needs_error_feedback(zcfg.wire_dtype)
     rho_num = jnp.zeros((), jnp.float32)
     rho_den = jnp.zeros((), jnp.float32)
     imp_means = {}
@@ -235,10 +243,19 @@ def device_update(params: PathDict, grads: PathDict, state: ZenState,
         cidx = sel.complement_indices(idx, m)
         comp_idx_out[p] = cidx
         rows_out = sel.gather_rows(g, cidx)
-        if zcfg.compress_host_grads == "int8":
-            g_comp[p] = _quantize_rows_int8(rows_out)
+        if wire_ef:
+            # error feedback: re-inject last step's encoder residual, then
+            # keep this step's. The residual rows are indexed by the
+            # complement set, which only changes at refresh — there the
+            # stale residual is dropped (one step in R, and refresh also
+            # resyncs the master rows).
+            resid = jnp.where(refresh, 0.0, state["wire_residual"][p])
+            eff = rows_out.astype(jnp.float32) + resid
+            enc = wire.encode_rows(eff, zcfg.wire_dtype, zcfg.use_kernels)
+            new_residual[p] = eff - wire.decode_rows(enc, zcfg.use_kernels)
+            g_comp[p] = enc
         else:
-            g_comp[p] = rows_out.astype(jnp.bfloat16)
+            g_comp[p] = wire.encode_rows(rows_out, zcfg.wire_dtype)
 
         # metrics: rho (complement energy fraction), important-norm EMA
         total_e = jnp.sum(norms)
@@ -282,6 +299,7 @@ def device_update(params: PathDict, grads: PathDict, state: ZenState,
         "sel_idx": new_sel, "m_sel": new_m, "v_sel": new_v,
         "dense": dense_state,
         "imp_ema": new_ema,
+        "wire_residual": new_residual,
     }
     metrics = {"rho": rho, "refresh": refresh}
     return new_params, dev_state, host_bound, metrics
@@ -299,7 +317,7 @@ def host_accumulate(host: dict, host_bound: dict, zcfg: ZenFlowConfig) -> dict:
     sync = host_bound.get("sync_master", host_bound["refresh"])
     for p, g in host_bound["g_comp"].items():
         acc[p] = sel.scatter_add_rows(acc[p], host_bound["comp_idx"][p],
-                                      _dequantize_rows(g))
+                                      wire.decode_rows(g, zcfg.use_kernels))
         synced = sel.scatter_rows(master[p], host_bound["old_idx"][p],
                                   host_bound["old_rows"][p].astype(jnp.float32))
         master[p] = jnp.where(sync, synced, master[p])

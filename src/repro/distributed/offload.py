@@ -51,7 +51,8 @@ def host_memory_kind(device=None) -> Optional[str]:
     return None
 
 
-def stage_to_host(tree, kind: Optional[str] = None):
+def stage_to_host(tree, kind: Optional[str] = None,
+                  tag: str = "stage_to_host"):
     """Explicit, asynchronous device->host staging of a host-bound pytree.
 
     `jax.device_put` to the leaf's own sharding with the host memory kind
@@ -64,6 +65,13 @@ def stage_to_host(tree, kind: Optional[str] = None):
     XLA:CPU the default memory IS unpinned_host, making this a no-op).
     Returns the tree unchanged when no host memory kind is addressable.
 
+    Every staged payload is accounted by `telemetry.trafficwatch` under
+    `tag` (exact static byte footprint — the accounting never forces a
+    device read), so `benchmarks/bench_traffic.py` can attribute all
+    device->host wire bytes. The payload counts even where the staging
+    `device_put` is a residency no-op (XLA:CPU): the bytes still cross
+    the logical device/host boundary when the host worker consumes them.
+
     Mesh-parallel note (the `spmd` backend): staging targets *the leaf's
     own NamedSharding* with only the memory kind swapped, so a
     row-sharded host-bound buffer becomes RS independent per-shard
@@ -74,6 +82,8 @@ def stage_to_host(tree, kind: Optional[str] = None):
     (`zen_spmd.zen_placements().host`) is laid out identically, so the
     worker's accumulate consumes each shard's bytes where they landed.
     """
+    from repro.telemetry import trafficwatch
+    trafficwatch.tree(tag, tree)
     kind = kind or host_memory_kind()
     if kind is None:
         return tree

@@ -188,7 +188,7 @@ def segmented_sharding(p: str, seg: SegmentInfo, ndim: int, mesh: Mesh,
 # pipeline (each host shard thereby owns the host-side mirror of exactly
 # its device shard — the per-shard offload streams of the spmd backend).
 _STATE_VALUE_KINDS = ("m_sel", "v_sel", "rows", "pending_rows",
-                      "acc", "m_host", "v_host", "master")
+                      "acc", "m_host", "v_host", "master", "wire_residual")
 _STATE_INDEX_KINDS = ("sel_idx", "idx", "pending_idx")
 
 
@@ -298,7 +298,8 @@ def zen_device_state_init(params_spec, zcfg: ZenFlowConfig,
     seg_specs = segmented_specs(params_spec, segs)
     full = zenflow_init(seg_specs, zcfg)
     return {k: full[k] for k in
-            ("step", "sel_idx", "m_sel", "v_sel", "dense", "imp_ema")}
+            ("step", "sel_idx", "m_sel", "v_sel", "dense", "imp_ema",
+             "wire_residual")}
 
 
 def zen_host_state_init(params_spec, zcfg: ZenFlowConfig,

@@ -27,6 +27,12 @@ protocol, so drivers never special-case a mode:
               committed to their NamedShardings at init, per-shard
               host-bound offload streams, zero-sync steady state.
 
+All ZenFlow backends honor `ZenFlowConfig.wire_dtype` (core/wire.py):
+the complement gradients cross to the host fp32/bf16/int8-quantized,
+with the error-feedback residual segment-sharded alongside the rest of
+the device state — on the spmd backend each mesh shard therefore ships
+its own compressed stream, byte-accounted by `telemetry.trafficwatch`.
+
 New execution paths (another hardware offload route, elastic serving-time
 updates, ...) plug in via `register_backend` instead of a new driver.
 
@@ -143,11 +149,18 @@ class SyncBackend:
         return dict(metrics)   # device arrays — see module metrics contract
 
     def state_dict(self) -> dict:
-        return {"params": self.params, "zstate": self.zstate}
+        # wire_residual stays out of checkpoints (core/wire.py:
+        # reconcile_residual) so layout is wire_dtype-agnostic
+        return {"params": self.params,
+                "zstate": {k: v for k, v in self.zstate.items()
+                           if k != "wire_residual"}}
 
     def load_state_dict(self, sd: dict) -> None:
+        from repro.core import wire
         self.params = sd["params"]
-        self.zstate = sd["zstate"]
+        self.zstate = wire.reconcile_residual(
+            dict(sd["zstate"]),
+            lambda: zenflow_init(self.params, self.zcfg))
 
     def flush(self) -> None:
         pass

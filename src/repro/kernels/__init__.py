@@ -1,7 +1,7 @@
 """Pallas TPU kernels for the paper's compute hot spots (selective
-GPU-side optimizer and the gradient-selection proxy), with jnp oracles in
-ref.py and jitted dispatch in ops.py. Validated in interpret mode on CPU;
-real Mosaic lowering on TPU."""
+GPU-side optimizer, the gradient-selection proxy, and the int8 offload
+wire codec), with jnp oracles in ref.py and jitted dispatch in ops.py.
+Validated in interpret mode on CPU; real Mosaic lowering on TPU."""
 from repro.kernels import ops, ref
 
 __all__ = ["ops", "ref"]

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.column_norm import column_norm_pallas
 from repro.kernels.grad_accum import grad_accum_pallas
+from repro.kernels.quantize import (dequantize_rows_pallas,
+                                    quantize_rows_pallas)
 from repro.kernels.selective_adam import selective_adam_pallas
 
 Array = jax.Array
@@ -74,3 +76,22 @@ def grad_accum(acc: Array, g: Array) -> Array:
     else:
         fn = ref.grad_accum_ref
     return _batched(fn, 2)(acc, g)
+
+
+def quantize_rows(x: Array):
+    """Per-row symmetric int8 wire encode: (..., M, N) ->
+    (q (..., M, N) int8, scale (..., M, 1) f32)."""
+    if pallas_available():
+        fn = partial(quantize_rows_pallas, interpret=_force_interpret())
+    else:
+        fn = ref.quantize_rows_ref
+    return _batched(fn, 1)(x)
+
+
+def dequantize_rows(q: Array, scale: Array) -> Array:
+    """Int8 wire decode: (q, scale) -> f32 rows (..., M, N)."""
+    if pallas_available():
+        fn = partial(dequantize_rows_pallas, interpret=_force_interpret())
+    else:
+        fn = ref.dequantize_rows_ref
+    return _batched(fn, 2)(q, scale)

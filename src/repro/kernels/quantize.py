@@ -1,0 +1,95 @@
+"""Int8 wire quantize/dequantize Pallas kernels — the compressed
+device->host offload encoding (ISSUE 4; MLP-Offload-style narrow wire).
+
+Contract (must match ``ref.quantize_rows_ref`` / ``ref.dequantize_rows_ref``
+bit-for-bit under interpret mode — tests/test_wire.py):
+
+  quantize:   x (M, N) any float -> (q (M, N) int8, scale (M, 1) f32)
+              with per-row symmetric scaling scale = rowmax(|x|) / 127 and
+              q = clip(round(x / max(scale, 1e-12)), -127, 127).  The wire
+              then carries 1 byte/element + 4 bytes/row instead of 4
+              (fp32) or 2 (bf16) bytes/element.
+  dequantize: (q, scale) -> x' (M, N) f32 = q * scale, with
+              |x - x'| <= scale/2 elementwise (round-to-nearest) — the
+              bound the error-feedback residual in
+              ``core.zen_optimizer.device_update`` re-injects.
+
+Kernel shape notes: the quantizer needs the full row resident to take the
+row absmax before emitting any element of that row, so its grid blocks
+over rows only ((block_m, N) tiles, one HBM round trip per tile); the
+dequantizer is elementwise-per-row and blocks both axes, revisiting the
+(block_m, 1) scale block across the column steps. int8 tiles on real TPU
+want (32, 128) multiples; interpret mode (CPU tests) has no such
+constraint, and the ragged fallbacks below widen blocks exactly like
+column_norm.py does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 512
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref):
+    x = x_ref[...].astype(jnp.float32)
+    # explicit reciprocal multiplies (not divisions): XLA rewrites a
+    # divide-by-constant into a reciprocal multiply in some lowerings but
+    # not others, which would break bitwise parity with ref.py
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) * jnp.float32(1 / 127)
+    q = jnp.clip(jnp.round(x * (1.0 / jnp.maximum(scale, 1e-12))),
+                 -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    scale_ref[...] = scale
+
+
+def quantize_rows_pallas(x: Array, block_m: int = DEFAULT_BLOCK_M,
+                         interpret: bool = False):
+    """x (M, N) -> (q (M, N) int8, scale (M, 1) f32), per-row symmetric."""
+    M, N = x.shape
+    block_m = min(block_m, M)
+    if M % block_m:
+        block_m = M
+    grid = (M // block_m,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, N), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_m, N), lambda i: (i, 0)),
+                   pl.BlockSpec((block_m, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((M, N), jnp.int8),
+                   jax.ShapeDtypeStruct((M, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def _dequant_kernel(q_ref, scale_ref, out_ref):
+    out_ref[...] = q_ref[...].astype(jnp.float32) * scale_ref[...]
+
+
+def dequantize_rows_pallas(q: Array, scale: Array,
+                           block_m: int = DEFAULT_BLOCK_M,
+                           block_n: int = DEFAULT_BLOCK_N,
+                           interpret: bool = False) -> Array:
+    """(q (M, N) int8, scale (M, 1) f32) -> x' (M, N) f32."""
+    M, N = q.shape
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    if M % block_m:
+        block_m = M
+    if N % block_n:
+        block_n = N
+    grid = (M // block_m, N // block_n)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+                  pl.BlockSpec((block_m, 1), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

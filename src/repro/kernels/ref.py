@@ -35,3 +35,21 @@ def column_norm_ref(g: Array) -> Array:
 def grad_accum_ref(acc: Array, g: Array) -> Array:
     """acc (M, N) f32 += g (M, N) (any float dtype)."""
     return acc + g.astype(jnp.float32)
+
+
+def quantize_rows_ref(x: Array):
+    """Per-row symmetric int8: x (..., M, N) -> (q int8, scale (..., M, 1)
+    f32) with scale = rowmax(|x|)/127, q = clip(round(x/scale), -127, 127).
+    The int8 wire encoding of the compressed offload path. Scaling uses
+    explicit reciprocal multiplies so the math is bitwise-identical to the
+    Pallas kernel (quantize.py) in every lowering."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) * jnp.float32(1 / 127)
+    q = jnp.clip(jnp.round(x32 * (1.0 / jnp.maximum(scale, 1e-12))),
+                 -127.0, 127.0)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rows_ref(q: Array, scale: Array) -> Array:
+    """(q (..., M, N) int8, scale (..., M, 1) f32) -> f32 rows."""
+    return q.astype(jnp.float32) * scale

@@ -39,7 +39,7 @@ def train(args) -> dict:
         warmup_steps=args.warmup,
         lr=cosine_with_warmup(args.lr, args.steps) if args.cosine else args.lr,
         weight_decay=args.weight_decay, use_kernels="never",
-        auto_tune=args.auto_tune)
+        auto_tune=args.auto_tune, wire_dtype=args.wire_dtype)
 
     loader = make_train_stream(cfg.vocab, args.seq, args.batch,
                                seed=args.seed)
@@ -75,6 +75,11 @@ def main() -> None:
     ap.add_argument("--interval", type=int, default=4)
     ap.add_argument("--warmup", type=int, default=0)
     ap.add_argument("--auto-tune", action="store_true")
+    ap.add_argument("--wire-dtype", default="bf16",
+                    choices=["fp32", "bf16", "int8"],
+                    help="device->host wire encoding of the complement "
+                         "gradients (int8 = per-row-scale quantization "
+                         "with error feedback)")
     ap.add_argument("--backend", default="async",
                     choices=["sync", "async", "spmd", "fused", "baseline"])
     ap.add_argument("--baseline", default="", choices=["", "adamw"],

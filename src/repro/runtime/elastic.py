@@ -46,7 +46,11 @@ def elastic_restore(model, zcfg: ZenFlowConfig, new_mesh, ckpt: CheckpointManage
 
     full_like = {
         "params": spec,
-        "dstate": zen_spmd.zen_device_state_init(spec, zcfg, new_segs),
+        # wire_residual is never checkpointed (core/wire.py:
+        # reconcile_residual): keep it out of the template so restores
+        # stay layout-compatible across wire_dtype settings
+        "dstate": {k: v for k, v in zen_spmd.zen_device_state_init(
+            spec, zcfg, new_segs).items() if k != "wire_residual"},
         "host_state": zen_spmd.zen_host_state_init(spec, zcfg, new_segs),
         "pending": zen_spmd.pending_specs(new_segs, spec),
         "steps_in_window": np.zeros((), np.int32),

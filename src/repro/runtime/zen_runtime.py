@@ -42,6 +42,18 @@ straggler collects at a forced boundary, warmup landings, `flush()` —
 and all of them are routed through `telemetry.syncwatch` so
 `benchmarks/bench_dispatch.py` can assert the steady-state count is 0.
 
+Compressed wire + traffic accounting
+------------------------------------
+The host-bound complement gradients cross in the encoding selected by
+`ZenFlowConfig.wire_dtype` (fp32 / bf16 / int8-per-row-scale,
+core/wire.py): the device program encodes and tracks the error-feedback
+residual in device state, the host worker's accumulate decodes. Every
+device->host payload (`stage_to_host`, tag "host_bound") and host->device
+pending-row upload (tag "pending_upload") is byte-accounted by
+`telemetry.trafficwatch` — zero extra syncs, static metadata only — so
+`benchmarks/bench_traffic.py` can measure bytes/step and the compression
+ratio against the fp32 wire.
+
 Mesh-parallel execution (the `spmd` engine backend)
 ---------------------------------------------------
 The same runtime runs the whole pipeline across a `jax` device mesh:
@@ -85,7 +97,7 @@ import numpy as np
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.distributed.sharding import MeshRules
 from repro.distributed import zen_spmd
-from repro.telemetry import syncwatch
+from repro.telemetry import syncwatch, trafficwatch
 
 
 # state-dict fields added after the first release: restores of older
@@ -204,7 +216,8 @@ class ZenFlowRuntime:
                 stage_to_host
             kind = host_memory_kind()
             if kind is not None:
-                self._stage = lambda hb, _k=kind: stage_to_host(hb, kind=_k)
+                self._stage = lambda hb, _k=kind: stage_to_host(
+                    hb, kind=_k, tag="host_bound")
         self.worker: Optional[_HostWorker] = None
         self.params = None
         self.dstate = None
@@ -248,6 +261,10 @@ class ZenFlowRuntime:
         """
         if self.pending is not None:
             self.params = self._land(self.params, self.pending)
+        # host->device upload leg of the wire (bf16 rows + int32 idx),
+        # attributed for bench_traffic's bytes/step accounting
+        trafficwatch.record("pending_upload", trafficwatch.tree_bytes(rows)
+                            + trafficwatch.tree_bytes(idx))
         if self.placements is not None:
             # asynchronous host->device upload of the window's rows onto
             # the pending slot's sharding (each shard receives only its
@@ -281,6 +298,10 @@ class ZenFlowRuntime:
         # step's compute; the worker consumes already-host-resident bytes
         if self._stage is not None:
             host_bound = self._stage(host_bound)
+        else:
+            # no explicit staging on this platform/config: the same bytes
+            # still cross lazily when the worker touches them — account
+            trafficwatch.tree("host_bound", host_bound)
 
         # async host accumulate (ordered behind any in-flight apply)
         self.worker.submit(
@@ -358,7 +379,12 @@ class ZenFlowRuntime:
                                             self.model.param_specs())
         return {
             "params": self.params,
-            "dstate": self.dstate,
+            # the wire's error-feedback residual stays OUT of checkpoints
+            # (transient, bounded by one step's rounding): layout is then
+            # identical across wire_dtype settings and code versions;
+            # load_state_dict reinstalls a zero residual
+            "dstate": {k: v for k, v in self.dstate.items()
+                       if k != "wire_residual"},
             "host_state": self.worker.snapshot(),
             "pending": pending,
             "steps_in_window": self._steps_in_window,
@@ -369,8 +395,15 @@ class ZenFlowRuntime:
         }
 
     def load_state_dict(self, sd: dict):
+        from repro.core import wire
         self.params = sd["params"]
-        self.dstate = sd["dstate"]
+        # reinstall the (un-checkpointed) error-feedback residual for
+        # this config's wire_dtype — zeros, same bounded impact as a
+        # scheduled refresh
+        self.dstate = wire.reconcile_residual(
+            dict(sd["dstate"]),
+            lambda: zen_spmd.zen_device_state_init(
+                self.model.param_specs(), self.zcfg, self.segs))
         pending = sd["pending"]
         host_state = sd["host_state"]
         if self.placements is not None:

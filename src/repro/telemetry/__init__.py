@@ -1,6 +1,6 @@
 from repro.telemetry import (costmodel, hlo_stats, metrics_drain, roofline,
-                             simulator, syncwatch)
+                             simulator, syncwatch, trafficwatch)
 from repro.telemetry.metrics_drain import MetricsDrain
 
 __all__ = ["costmodel", "hlo_stats", "metrics_drain", "roofline",
-           "simulator", "syncwatch", "MetricsDrain"]
+           "simulator", "syncwatch", "trafficwatch", "MetricsDrain"]

@@ -1,0 +1,82 @@
+"""Device<->host transfer byte accounting for the offload wire
+(the traffic-side mirror of `telemetry.syncwatch`).
+
+The paper's I/O model (§3.2) bounds PCIe traffic; this module is the seam
+every deliberate device->host / host->device transfer in repo code goes
+through, so `benchmarks/bench_traffic.py` can measure bytes/step and the
+compression ratio of the wire formats (`ZenFlowConfig.wire_dtype`)
+instead of trusting closed forms.
+
+Contract:
+
+  * `record(tag, nbytes)` accounts one transfer of `nbytes` under `tag`;
+    `tree(tag, pytree)` records a whole payload pytree (exact static byte
+    footprint — `tree_bytes` never reads device values, so accounting
+    itself adds zero host syncs to the hot path).
+  * Producers: `offload.stage_to_host` records every staged payload
+    (tag defaults to "stage_to_host"; the runtime tags the per-step
+    complement stream "host_bound"), and the runtime's pending-row upload
+    records under "pending_upload". New transfer paths must route through
+    this module to stay visible to the benchmark.
+  * Bytes are *logical wire bytes* of the global payload: what crosses
+    the device/host boundary summed over shards in a mesh run (each
+    shard's slice crosses its own link exactly once).
+  * Counters are process-global and lock-guarded (driver + host worker
+    threads both record); `reset()` zeroes them (benchmarks call it after
+    warmup/compile).
+"""
+from __future__ import annotations
+
+import threading
+from collections import Counter
+from typing import Any
+
+import jax
+
+_lock = threading.Lock()
+_bytes: Counter = Counter()
+_transfers: Counter = Counter()
+
+
+def reset() -> None:
+    """Zero all counters (benchmarks call this after warmup/compile)."""
+    with _lock:
+        _bytes.clear()
+        _transfers.clear()
+
+
+def record(tag: str, nbytes: int, transfers: int = 1) -> None:
+    """Record one (or `transfers`) transfer(s) totalling `nbytes`."""
+    with _lock:
+        _bytes[tag] += int(nbytes)
+        _transfers[tag] += transfers
+
+
+def tree_bytes(tree: Any) -> int:
+    """Exact byte footprint of a payload pytree. Static metadata only
+    (size * itemsize per leaf) — works on arrays and ShapeDtypeStructs,
+    never forces a device read."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+def tree(tag: str, payload: Any) -> None:
+    """Record a whole payload pytree as one transfer under `tag`."""
+    record(tag, tree_bytes(payload))
+
+
+def total() -> int:
+    """Total transferred bytes since the last reset()."""
+    with _lock:
+        return sum(_bytes.values())
+
+
+def counts() -> dict:
+    """Snapshot: {"total_bytes", "transfers", "by_tag", "transfers_by_tag"}."""
+    with _lock:
+        return {
+            "total_bytes": sum(_bytes.values()),
+            "transfers": sum(_transfers.values()),
+            "by_tag": dict(_bytes),
+            "transfers_by_tag": dict(_transfers),
+        }

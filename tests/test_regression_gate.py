@@ -1,0 +1,127 @@
+"""Unit tests for the perf-regression CI gate's diffing logic
+(benchmarks/check_regression.py) — pure JSON in, failure list out."""
+import json
+import os
+import sys
+
+import pytest
+
+# benchmarks/ is import-clean of tests/ (CI asserts it); the reverse
+# import is fine — the gate logic is plain stdlib code
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import BASELINE_DIR, check_report
+
+
+def _dispatch(syncs=0.0, speedup=1.14):
+    return {"headline": {"async_steady_syncs_per_step": syncs,
+                         "step_time_speedup_vs_blocking": speedup}}
+
+
+def _traffic(ratio=2.5, loss_diff=0.001, syncs=0.0, rtol=0.05):
+    return {"config": {"loss_rtol": rtol},
+            "headline": {"compression_ratio_int8_vs_fp32": ratio,
+                         "int8_loss_rel_diff_vs_fp32": loss_diff,
+                         "int8_steady_syncs_per_step": syncs}}
+
+
+def test_gate_passes_on_equal_numbers():
+    assert check_report("dispatch", _dispatch(), _dispatch(), 0.10) == []
+    assert check_report("traffic", _traffic(), _traffic(), 0.10) == []
+
+
+def test_gate_allows_regression_within_tolerance():
+    cur = _dispatch(speedup=1.14 * 0.91)          # -9% < 10% tolerance
+    assert check_report("dispatch", cur, _dispatch(), 0.10) == []
+    cur = _traffic(ratio=2.5 * 0.91)
+    assert check_report("traffic", cur, _traffic(), 0.10) == []
+
+
+def test_gate_timing_metric_gets_noise_floor():
+    """Wall-clock speedup swings +-15% between identical quick runs, so
+    it is gated at TIMING_NOISE_TOLERANCE (25%), not the byte-ratio 10%:
+    a -15% swing passes, a genuine collapse (-30%) still fails."""
+    cur = _dispatch(speedup=1.14 * 0.85)          # -15%: noise, passes
+    assert check_report("dispatch", cur, _dispatch(), 0.10) == []
+    cur = _dispatch(speedup=1.14 * 0.70)          # -30%: real, fails
+    errs = check_report("dispatch", cur, _dispatch(), 0.10)
+    assert len(errs) == 1 and "step_time_speedup_vs_blocking" in errs[0]
+
+
+def test_gate_fails_on_ratio_regression_beyond_tolerance():
+    cur = _traffic(ratio=2.5 * 0.85)              # deterministic ratio:
+    errs = check_report("traffic", cur, _traffic(), 0.10)   # tight gate
+    assert len(errs) == 1 and "compression_ratio_int8_vs_fp32" in errs[0]
+
+
+def test_gate_hard_fails_on_any_steady_state_sync():
+    """Syncs/step is an invariant, not baseline-relative: even a baseline
+    that (wrongly) recorded syncs would not excuse them."""
+    errs = check_report("dispatch", _dispatch(syncs=0.5),
+                        _dispatch(syncs=0.5), 0.10)
+    assert any("must be 0" in e for e in errs)
+    errs = check_report("traffic", _traffic(syncs=2.0),
+                        _traffic(syncs=2.0), 0.10)
+    assert any("must be 0" in e for e in errs)
+
+
+def test_gate_fails_on_loss_drift():
+    errs = check_report("traffic", _traffic(loss_diff=0.2), _traffic(), 0.10)
+    assert any("loss" in e for e in errs)
+
+
+def test_gate_fails_on_nan_metrics():
+    """A diverged run propagates NaN into the headline ratios; NaN
+    compares False against any bound, so the gate must use NaN-safe
+    comparisons instead of silently passing."""
+    nan = float("nan")
+    errs = check_report("traffic", _traffic(loss_diff=nan), _traffic(), 0.10)
+    assert any("loss" in e for e in errs)
+    errs = check_report("traffic", _traffic(ratio=nan), _traffic(), 0.10)
+    assert any("compression_ratio_int8_vs_fp32" in e for e in errs)
+    errs = check_report("dispatch", _dispatch(speedup=nan), _dispatch(), 0.10)
+    assert any("step_time_speedup_vs_blocking" in e for e in errs)
+
+
+def test_gate_fails_on_missing_headline_keys():
+    errs = check_report("dispatch", {"headline": {}}, _dispatch(), 0.10)
+    assert errs                                     # missing syncs + ratio
+    errs = check_report("dispatch", _dispatch(), {"headline": {}}, 0.10)
+    assert any("baseline" in e for e in errs)
+
+
+def test_gate_refuses_cross_mode_comparison():
+    """Quick- and full-mode reports are different workloads: diffing one
+    against the other must fail loudly instead of gating on noise."""
+    cur = _traffic()
+    cur["config"]["quick"] = False
+    base = _traffic()
+    base["config"]["quick"] = True
+    errs = check_report("traffic", cur, base, 0.10)
+    assert len(errs) == 1 and "quick" in errs[0]
+    # same mode on both sides: no complaint
+    cur["config"]["quick"] = True
+    assert check_report("traffic", cur, base, 0.10) == []
+    # reports without the flag (synthetic/old) skip the mode guard
+    assert check_report("dispatch", _dispatch(), _dispatch(), 0.10) == []
+
+
+def test_gate_improvements_always_pass():
+    cur = _dispatch(speedup=2.0)
+    assert check_report("dispatch", cur, _dispatch(), 0.10) == []
+    cur = _traffic(ratio=4.0, loss_diff=0.0)
+    assert check_report("traffic", cur, _traffic(), 0.10) == []
+
+
+def test_committed_baselines_exist_and_pass_their_own_gate():
+    """The baselines shipped in benchmarks/baselines/ must themselves
+    satisfy the hard invariants — otherwise the CI gate is dead on
+    arrival."""
+    for kind in ("dispatch", "traffic"):
+        path = os.path.join(BASELINE_DIR, f"BENCH_{kind}.json")
+        assert os.path.exists(path), f"missing committed baseline {path}"
+        with open(path) as f:
+            rep = json.load(f)
+        assert rep["config"]["quick"] is True, \
+            f"{kind} baseline must be a quick-mode run (what CI measures)"
+        assert check_report(kind, rep, rep, 0.10) == [], kind

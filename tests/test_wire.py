@@ -1,0 +1,366 @@
+"""Compressed offload wire format (ISSUE 4): quant/dequant kernel parity
+vs ref.py, error-feedback correctness and convergence parity, and
+trafficwatch byte accounting."""
+import os
+
+os.environ["REPRO_PALLAS_INTERPRET"] = "1"   # force interpret-mode Pallas
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.kernels import ops, ref
+from repro.kernels.quantize import dequantize_rows_pallas, quantize_rows_pallas
+from repro.telemetry import trafficwatch
+
+# the shape sweep of test_kernels.py, ragged-n edge cases included
+from test_kernels import DTYPES, SHAPES
+
+
+def _mk(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: Pallas (interpret) vs the jnp oracle, bitwise
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quantize_rows_matches_ref_bitwise(rng, shape, dtype):
+    x = _mk(rng, shape, dtype)
+    qk, sk = quantize_rows_pallas(x, interpret=True)
+    qr, sr = ref.quantize_rows_ref(x)
+    assert qk.dtype == jnp.int8 and sk.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dequantize_rows_matches_ref_bitwise(rng, shape, dtype):
+    x = _mk(rng, shape, dtype)
+    q, s = ref.quantize_rows_ref(x)
+    dk = dequantize_rows_pallas(q, s, interpret=True)
+    np.testing.assert_array_equal(np.asarray(dk),
+                                  np.asarray(ref.dequantize_rows_ref(q, s)))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_quantize_round_trip_error_bound(rng, shape):
+    """Round-to-nearest contract: |x - deq(quant(x))| <= scale/2."""
+    x = _mk(rng, shape, jnp.float32)
+    q, s = ref.quantize_rows_ref(x)
+    xr = ref.dequantize_rows_ref(q, s)
+    err = np.abs(np.asarray(x) - np.asarray(xr))
+    bound = np.asarray(s) / 2 + 1e-7
+    assert (err <= bound).all()
+    # scale is tight: the row absmax is representable exactly (q = ±127)
+    assert (np.abs(np.asarray(q)).max(axis=-1) == 127).all()
+
+
+def test_quantize_ops_batched(rng):
+    """ops.* wrappers lift over stacked leading dims (layer stacks)."""
+    x = _mk(rng, (3, 2, 16, 128), jnp.bfloat16)
+    q, s = ops.quantize_rows(x)
+    assert q.shape == (3, 2, 16, 128) and s.shape == (3, 2, 16, 1)
+    d = ops.dequantize_rows(q, s)
+    np.testing.assert_array_equal(np.asarray(d),
+                                  np.asarray(ref.dequantize_rows_ref(q, s)))
+
+
+def test_quantize_zero_rows_safe():
+    """An all-zero row has scale 0 — the 1e-12 clamp must keep q finite
+    and the round trip exact (0 -> 0)."""
+    x = jnp.zeros((4, 128), jnp.float32)
+    q, s = ref.quantize_rows_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), 0)
+    np.testing.assert_array_equal(
+        np.asarray(ref.dequantize_rows_ref(q, s)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Wire encode/decode contract
+
+
+@pytest.mark.parametrize("wd", wire.WIRE_DTYPES)
+def test_encode_decode_round_trip(rng, wd):
+    x = _mk(rng, (16, 128), jnp.float32)
+    enc = wire.encode_rows(x, wd)
+    dec = wire.decode_rows(enc)
+    assert dec.dtype == jnp.float32
+    if wd == "fp32":
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(x))
+    else:
+        assert np.abs(np.asarray(dec) - np.asarray(x)).max() < 0.05
+
+
+def test_wire_nbytes_by_format(rng):
+    """The whole point: int8 ~4x fewer wire bytes than fp32, ~2x vs
+    bf16, with the exact per-row scale overhead accounted."""
+    m, n = 64, 512
+    x = _mk(rng, (m, n), jnp.float32)
+    nb = {wd: wire.wire_nbytes(wire.encode_rows(x, wd))
+          for wd in wire.WIRE_DTYPES}
+    assert nb["fp32"] == m * n * 4
+    assert nb["bf16"] == m * n * 2
+    assert nb["int8"] == m * n * 1 + m * 4      # q + per-row f32 scale
+    assert nb["fp32"] / nb["int8"] > 3.9
+
+
+def test_wire_rejects_unknown_dtype():
+    with pytest.raises(ValueError):
+        wire.encode_rows(jnp.zeros((4, 8)), "fp8")
+    with pytest.raises(ValueError):
+        from repro.core.zen_optimizer import ZenFlowConfig
+        ZenFlowConfig(wire_dtype="fp64")
+
+
+# ---------------------------------------------------------------------------
+# Error feedback: the residual telescopes
+
+
+def test_error_feedback_telescopes_to_true_sum():
+    """With a constant gradient, the sum of decoded int8 payloads over a
+    window equals the true gradient sum up to ONE step's rounding error
+    (the EF residual carries everything else forward)."""
+    from repro.core.partition import build_partition
+    from repro.core.zen_optimizer import (ZenFlowConfig, device_update,
+                                          zenflow_init)
+
+    rng = np.random.default_rng(3)
+    params = {"w": jnp.asarray(rng.normal(size=(64, 128)) * 0.1, jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(64, 128)) * 0.01, jnp.float32)}
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                         refresh_interval=16, lr=0.0, use_kernels="never",
+                         wire_dtype="int8")
+    state = zenflow_init(params, zcfg)
+    part = build_partition(params, zcfg.topk_ratio, zcfg.min_dim)
+
+    W = 6
+    p, decoded_sum = dict(params), None
+    for _ in range(W):
+        p, state, hb, _ = device_update(p, g, state, zcfg, part)
+        d = wire.decode_rows(hb["g_comp"]["w"])
+        decoded_sum = d if decoded_sum is None else decoded_sum + d
+        cidx = hb["comp_idx"]["w"]
+    # lr=0, no refresh in-window: the complement set is static, so the
+    # true sum is W * g on the complement rows
+    from repro.core import selection as sel
+    true = W * np.asarray(sel.gather_rows(g["w"], cidx))
+    resid = np.asarray(state["wire_residual"]["w"])
+    np.testing.assert_allclose(np.asarray(decoded_sum) + resid, true,
+                               rtol=1e-5, atol=1e-6)
+    # ...and the residual is bounded by one step's rounding error
+    _, scale = ref.quantize_rows_ref(sel.gather_rows(g["w"], cidx))
+    assert (np.abs(resid) <= np.asarray(scale) * 1.5 + 1e-7).all()
+
+
+def test_error_feedback_beats_no_feedback():
+    """Cumulative decode error with EF stays at one-step level; without
+    it (encode each step independently, drop the residual) the error is
+    a random walk — EF must be strictly more accurate over a window."""
+    rng = np.random.default_rng(4)
+    g = jnp.asarray(rng.normal(size=(32, 128)) * 0.01, jnp.float32)
+    W = 16
+    ef_sum, plain_sum, resid = None, None, jnp.zeros_like(g)
+    for _ in range(W):
+        eff = g + resid
+        enc = wire.encode_rows(eff, "int8")
+        dec = wire.decode_rows(enc)
+        resid = eff - dec
+        ef_sum = dec if ef_sum is None else ef_sum + dec
+        p = wire.decode_rows(wire.encode_rows(g, "int8"))
+        plain_sum = p if plain_sum is None else plain_sum + p
+    true = W * np.asarray(g)
+    ef_err = np.abs(np.asarray(ef_sum) - true).max()
+    plain_err = np.abs(np.asarray(plain_sum) - true).max()
+    assert ef_err < plain_err
+
+
+def test_only_int8_wire_keeps_a_residual():
+    """fp32 is lossless and bf16 deliberately skips EF (device-memory
+    trade-off, wire.py docstring) — only int8 allocates the residual."""
+    from repro.core.zen_optimizer import ZenFlowConfig, zenflow_init
+    params = {"w": jnp.zeros((64, 128), jnp.float32)}
+    for wd in ("fp32", "bf16"):
+        z = zenflow_init(params, ZenFlowConfig(wire_dtype=wd,
+                                               use_kernels="never"))
+        assert z["wire_residual"] == {}, wd
+    z8 = zenflow_init(params, ZenFlowConfig(wire_dtype="int8",
+                                            use_kernels="never"))
+    assert z8["wire_residual"]["w"].shape == z8["host"]["pending_rows"]["w"].shape
+    assert z8["wire_residual"]["w"].dtype == jnp.float32
+
+
+def test_restore_reconciles_missing_wire_residual():
+    """Checkpoints are wire_dtype-agnostic: the EF residual is never
+    saved (state_dict strips it) and every restore path reinstalls zeros
+    — cross-wire restores must neither KeyError nor change layout."""
+    from repro.configs import get_config, reduced_config
+    from repro.core.zen_optimizer import ZenFlowConfig
+    from repro.data import make_train_stream
+    from repro.engine import Engine
+
+    import dataclasses
+    cfg = reduced_config(get_config("llama2-7b"))
+    base = ZenFlowConfig(topk_ratio=0.1, update_interval=2,
+                         refresh_interval=4, lr=1e-3, use_kernels="never")
+    loader = make_train_stream(cfg.vocab, 32, 4, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+    for src_wd, dst_wd, backend in (("fp32", "int8", "async"),
+                                    ("int8", "bf16", "sync")):
+        src = Engine.from_config(cfg, dataclasses.replace(base,
+                                                          wire_dtype=src_wd),
+                                 backend=backend)
+        src.init(jax.random.PRNGKey(0))
+        src.step(dict(batch))
+        sd = jax.tree.map(jnp.array, src.state_dict())
+        src.close()
+        # the residual never reaches the checkpoint payload
+        state_key = "dstate" if backend == "async" else "zstate"
+        assert "wire_residual" not in sd["backend"][state_key]
+        dst = Engine.from_config(cfg, dataclasses.replace(base,
+                                                          wire_dtype=dst_wd),
+                                 backend=backend)
+        dst.init(jax.random.PRNGKey(1))
+        dst.load_state_dict(sd)
+        m = dst.step(dict(batch))          # must not KeyError
+        assert bool(np.isfinite(np.asarray(jax.device_get(m["loss"]))))
+        dst.close()
+
+
+def test_restore_latest_across_wire_dtypes_via_checkpoint_manager():
+    """The full CheckpointManager round trip (the path that previously
+    KeyError-ed inside ckpt.restore before any reconciliation could
+    run): save under the default bf16 wire, resume under int8."""
+    import dataclasses
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config, reduced_config
+    from repro.core.zen_optimizer import ZenFlowConfig
+    from repro.data import make_train_stream
+    from repro.engine import Engine
+
+    cfg = reduced_config(get_config("llama2-7b"))
+    base = ZenFlowConfig(topk_ratio=0.1, update_interval=2,
+                         refresh_interval=4, lr=1e-3, use_kernels="never")
+    loader = make_train_stream(cfg.vocab, 32, 4, seed=0)
+    eng = Engine.from_config(cfg, base, backend="async")
+    eng.init(jax.random.PRNGKey(0))
+    for _ in range(3):
+        eng.step({k: jnp.asarray(v) for k, v in loader.next_batch().items()})
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, async_save=False)
+        cm.save(eng.state_dict(), step=3, extra={"loader": loader.state()})
+        eng.close()
+
+        eng2 = Engine.from_config(cfg, dataclasses.replace(
+            base, wire_dtype="int8"), backend="async")
+        eng2.init(jax.random.PRNGKey(1))
+        loader2 = make_train_stream(cfg.vocab, 32, 4, seed=0)
+        assert eng2.restore_latest(cm, loader2) == 3
+        m = eng2.step({k: jnp.asarray(v)
+                       for k, v in loader2.next_batch().items()})
+        assert bool(np.isfinite(np.asarray(jax.device_get(m["loss"]))))
+        eng2.close()
+
+
+# ---------------------------------------------------------------------------
+# Convergence parity: compressed async == fp32 async within tolerance
+
+
+def test_compressed_async_matches_fp32_async_over_windows():
+    """3 full async windows on a real reduced model: the int8 wire with
+    error feedback must land within tolerance of the fp32 wire's final
+    loss (the paper's accuracy story survives compression)."""
+    from repro.configs import get_config, reduced_config
+    from repro.core.zen_optimizer import ZenFlowConfig
+    from repro.data import make_train_stream
+    from repro.engine import Engine
+
+    import dataclasses
+    cfg = reduced_config(get_config("llama2-7b"))
+    base = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                         refresh_interval=8, lr=2e-3, use_kernels="never")
+    losses = {}
+    for wd in ("fp32", "int8"):
+        zcfg = dataclasses.replace(base, wire_dtype=wd)
+        eng = Engine.from_config(cfg, zcfg, backend="async")
+        eng.init(jax.random.PRNGKey(0))
+        loader = make_train_stream(cfg.vocab, 32, 8, seed=0)
+        for _ in range(12):                  # 3 windows of S=4
+            m = eng.step({k: jnp.asarray(v)
+                          for k, v in loader.next_batch().items()})
+        eng.flush()
+        losses[wd] = float(m["loss"])
+        eng.close()
+    assert np.isfinite(losses["int8"])
+    assert abs(losses["int8"] - losses["fp32"]) \
+        <= 0.05 * abs(losses["fp32"]), losses
+
+
+# ---------------------------------------------------------------------------
+# trafficwatch
+
+
+def test_trafficwatch_exact_bytes_for_known_pytree():
+    tree = {"a": jnp.zeros((3, 5), jnp.float32),        # 60 B
+            "b": jnp.zeros((7,), jnp.bfloat16),         # 14 B
+            "q": {"v": jnp.zeros((4, 4), jnp.int8),     # 16 B
+                  "s": jnp.zeros((4, 1), jnp.float32)},  # 16 B
+            "flag": jnp.zeros((), jnp.bool_),           # 1 B
+            "note": "not-an-array"}                     # ignored
+    assert trafficwatch.tree_bytes(tree) == 60 + 14 + 16 + 16 + 1
+    trafficwatch.reset()
+    trafficwatch.tree("host_bound", tree)
+    trafficwatch.record("pending_upload", 128)
+    c = trafficwatch.counts()
+    assert c["total_bytes"] == 107 + 128
+    assert c["by_tag"] == {"host_bound": 107, "pending_upload": 128}
+    assert c["transfers_by_tag"] == {"host_bound": 1, "pending_upload": 1}
+    trafficwatch.reset()
+    assert trafficwatch.total() == 0
+
+
+def test_stage_to_host_records_traffic():
+    from repro.distributed.offload import stage_to_host
+    trafficwatch.reset()
+    tree = {"g": jnp.zeros((16, 32), jnp.bfloat16)}
+    stage_to_host(tree, tag="host_bound")
+    c = trafficwatch.counts()
+    assert c["by_tag"]["host_bound"] == 16 * 32 * 2
+    trafficwatch.reset()
+
+
+def test_runtime_traffic_scales_with_wire_dtype():
+    """One async window per wire: int8 host-bound bytes must be well
+    under half of fp32's (the measured, not closed-form, contract)."""
+    from repro.configs import get_config, reduced_config
+    from repro.core.zen_optimizer import ZenFlowConfig
+    from repro.data import make_train_stream
+    from repro.engine import Engine
+
+    import dataclasses
+    cfg = reduced_config(get_config("llama2-7b"))
+    base = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
+                         refresh_interval=8, lr=1e-3, use_kernels="never")
+    seen = {}
+    for wd in ("fp32", "int8"):
+        zcfg = dataclasses.replace(base, wire_dtype=wd)
+        eng = Engine.from_config(cfg, zcfg, backend="async")
+        eng.init(jax.random.PRNGKey(0))
+        loader = make_train_stream(cfg.vocab, 32, 4, seed=0)
+        eng.step({k: jnp.asarray(v)
+                  for k, v in loader.next_batch().items()})   # compile
+        trafficwatch.reset()
+        for _ in range(4):
+            eng.step({k: jnp.asarray(v)
+                      for k, v in loader.next_batch().items()})
+        seen[wd] = trafficwatch.counts()["by_tag"].get("host_bound", 0)
+        eng.close()
+    trafficwatch.reset()
+    assert seen["int8"] < 0.5 * seen["fp32"], seen
