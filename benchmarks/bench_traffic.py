@@ -5,7 +5,11 @@ async run (every transfer in repo code is byte-accounted by
 `repro.telemetry.trafficwatch` — `stage_to_host` payloads under
 "host_bound", pending-row uploads under "pending_upload"):
 
-  * bytes/step crossing the device<->host boundary, split by tag;
+  * bytes/step crossing the device<->host boundary, split by tag AND
+    attributed by transport channel / storage tier (`repro.transport`;
+    --transport runs the whole measurement over the "spill" or
+    "striped" tier instead of "host") — 100% of staged bytes must name
+    their channel/tier;
   * the compression ratio of each wire vs the fp32 baseline wire —
     the headline must show >= 1.9x for int8 at equal final loss
     (within tolerance), the repo's second quantitative CI contract
@@ -39,15 +43,16 @@ MIN_INT8_RATIO = 1.9
 
 
 def run_wire(wire_dtype: str, cfg, zcfg_base, steps: int, seq: int,
-             batch: int, seed: int = 0) -> dict:
-    """Train `steps` async steps under `wire_dtype`; return byte/timing
-    statistics from trafficwatch/syncwatch."""
+             batch: int, seed: int = 0, transport: str = "host") -> dict:
+    """Train `steps` async steps under `wire_dtype` over `transport`;
+    return byte/timing statistics from trafficwatch/syncwatch."""
     from repro.data import make_train_stream
     from repro.engine import Engine
     from repro.telemetry import syncwatch, trafficwatch
 
     zcfg = dataclasses.replace(zcfg_base, wire_dtype=wire_dtype)
-    eng = Engine.from_config(cfg, zcfg, backend="async")
+    eng = Engine.from_config(cfg, zcfg, backend="async",
+                             transport=transport)
     eng.init(jax.random.PRNGKey(seed))
     loader = make_train_stream(cfg.vocab, seq, batch, seed=seed, prefetch=2)
 
@@ -90,14 +95,24 @@ def run_wire(wire_dtype: str, cfg, zcfg_base, steps: int, seq: int,
     eng.close()
     if hasattr(loader, "close"):
         loader.close()
+    # the compression contract is about the device<->host LINK: file-tier
+    # (nvme) spill round-trips are extra capacity-tier traffic, reported
+    # separately so a spill run's headline stays comparable to host's
+    nvme_bytes = tc["by_tier"].get("nvme", 0)
     return {
         "steps": steps,
-        "bytes_per_step": tc["total_bytes"] / steps,
+        "bytes_per_step": (tc["total_bytes"] - nvme_bytes) / steps,
+        "nvme_bytes_per_step": nvme_bytes / steps,
         "host_bound_bytes_per_step":
             tc["by_tag"].get("host_bound", 0) / steps,
         "pending_upload_bytes_per_step":
             tc["by_tag"].get("pending_upload", 0) / steps,
         "bytes_by_tag": tc["by_tag"],
+        # transport attribution: which OffloadChannel moved the bytes,
+        # and which storage tier they landed in (host DRAM / nvme)
+        "bytes_by_channel": tc["by_channel"],
+        "bytes_by_tier": tc["by_tier"],
+        "unattributed_bytes": tc["unattributed_bytes"],
         "transfers_per_step": tc["transfers"] / steps,
         "steady_syncs_per_step": (float(np.mean(steady_syncs))
                                   if steady_syncs else 0.0),
@@ -107,7 +122,8 @@ def run_wire(wire_dtype: str, cfg, zcfg_base, steps: int, seq: int,
 
 
 def run(steps: int = 60, arch: str = "opt-350m", seq: int = 64,
-        batch: int = 8, quick: bool = False) -> dict:
+        batch: int = 8, quick: bool = False,
+        transport: str = "host") -> dict:
     from repro.configs import get_config, reduced_config
     from repro.core.zen_optimizer import ZenFlowConfig
 
@@ -117,7 +133,8 @@ def run(steps: int = 60, arch: str = "opt-350m", seq: int = 64,
     zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
                          refresh_interval=16, lr=1e-3, use_kernels="never")
 
-    wires = {w: run_wire(w, cfg, zcfg, steps, seq, batch) for w in WIRES}
+    wires = {w: run_wire(w, cfg, zcfg, steps, seq, batch,
+                         transport=transport) for w in WIRES}
 
     fp32, int8 = wires["fp32"], wires["int8"]
 
@@ -134,7 +151,7 @@ def run(steps: int = 60, arch: str = "opt-350m", seq: int = 64,
         "platform": jax.devices()[0].platform,
         "config": {"steps": steps, "seq": seq, "batch": batch,
                    "topk": 0.1, "S": 4, "quick": quick,
-                   "loss_rtol": LOSS_RTOL},
+                   "loss_rtol": LOSS_RTOL, "transport": transport},
         "wires": wires,
         "headline": {
             # the acceptance criteria: >= 1.9x measured traffic reduction
@@ -147,6 +164,10 @@ def run(steps: int = 60, arch: str = "opt-350m", seq: int = 64,
             "int8_loss_rel_diff_vs_fp32": loss_rel("int8"),
             "bf16_loss_rel_diff_vs_fp32": loss_rel("bf16"),
             "int8_steady_syncs_per_step": int8["steady_syncs_per_step"],
+            # transport attribution contract: every staged byte names
+            # its channel and tier (repro.transport)
+            "unattributed_bytes": max(w["unattributed_bytes"]
+                                      for w in wires.values()),
         },
     }
     return report
@@ -168,6 +189,9 @@ def check(report: dict) -> list[str]:
                     f"(> {LOSS_RTOL:.0%})")
     if h["int8_steady_syncs_per_step"] != 0.0:
         errs.append("compression broke the zero-sync steady state")
+    if h.get("unattributed_bytes", 0) != 0:
+        errs.append(f"{h['unattributed_bytes']} staged bytes carry no "
+                    f"channel/tier attribution (repro.transport contract)")
     return errs
 
 
@@ -201,20 +225,26 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: <=16 steps, smaller shapes")
+    ap.add_argument("--transport", default="host",
+                    choices=["host", "spill", "striped"],
+                    help="offload channel tier to measure over "
+                         "(repro.transport)")
     ap.add_argument("--out", default="BENCH_traffic.json")
     args = ap.parse_args()
 
     rep = run(steps=args.steps, arch=args.arch, seq=args.seq,
-              batch=args.batch, quick=args.quick)
+              batch=args.batch, quick=args.quick, transport=args.transport)
     with open(args.out, "w") as f:
         json.dump(rep, f, indent=2, sort_keys=True)
     h = rep["headline"]
     print(f"wrote {args.out}")
     for w in WIRES:
         d = rep["wires"][w]
+        by_ch = ", ".join(f"{c} {b / 1e6:.3f} MB"
+                          for c, b in sorted(d["bytes_by_channel"].items()))
         print(f"{w:>5}: {d['bytes_per_step'] / 1e6:8.3f} MB/step   "
               f"loss {d['final_loss']:.4f}   "
-              f"{d['mean_step_ms']:6.1f} ms/step")
+              f"{d['mean_step_ms']:6.1f} ms/step   [{by_ch}]")
     print(f"int8 vs fp32 wire: {h['compression_ratio_int8_vs_fp32']:.2f}x "
           f"fewer bytes/step "
           f"(loss diff {h['int8_loss_rel_diff_vs_fp32']:.3%})")

@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="/tmp/zenflow_ckpt")
     ap.add_argument("--baseline", action="store_true")
+    ap.add_argument("--transport", default="host",
+                    choices=["host", "spill", "striped"],
+                    help="offload channel for every device<->host byte "
+                         "(repro/transport/)")
     args = ap.parse_args()
 
     cfg = build_100m()
@@ -47,7 +51,8 @@ def main():
         ckpt = CheckpointManager(args.ckpt_dir, keep=2)
         callbacks.append(CheckpointCallback(ckpt, every=50, loader=loader))
 
-    eng = Engine.from_config(cfg, zcfg, backend=backend, callbacks=callbacks)
+    eng = Engine.from_config(cfg, zcfg, backend=backend, callbacks=callbacks,
+                             transport=args.transport)
     n = sum(np.prod(x.shape) for x in jax.tree.leaves(eng.model.param_specs()))
     print(f"[finetune] {cfg.name}: {n/1e6:.1f}M params ({backend} backend)")
     eng.init(jax.random.PRNGKey(0))

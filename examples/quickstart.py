@@ -1,7 +1,12 @@
 """Quickstart: ZenFlow fine-tuning through the unified Engine in ~25 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [host|spill|striped]
+
+The optional argument picks the offload transport (repro/transport/):
+the channel every device<->host byte moves through.
 """
+import sys
+
 import jax
 import jax.numpy as jnp
 
@@ -11,7 +16,7 @@ from repro.data import make_train_stream
 from repro.engine import Engine
 
 
-def main():
+def main(transport: str = "host"):
     # a tiny llama-family model (CPU-runnable); swap for any of the 13
     # registered configs on real hardware
     cfg = reduced_config(get_config("llama2-7b"))
@@ -23,8 +28,11 @@ def main():
         lr=2e-3,
     )
     # backend="async" is the paper's zero-stall two-program pipeline;
-    # "sync" / "fused" / "baseline" run behind the same API
-    eng = Engine.from_config(cfg, zcfg, backend="async")
+    # "sync" / "fused" / "baseline" run behind the same API. transport=
+    # picks the offload channel tier ("host" DRAM, "spill" bounded DRAM
+    # + simulated-NVMe, "striped" multi-path) — same training math
+    eng = Engine.from_config(cfg, zcfg, backend="async",
+                             transport=transport)
     eng.init(jax.random.PRNGKey(0))
 
     # prefetch=2: batch construction + h2d overlap device compute
@@ -44,4 +52,4 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    main(*sys.argv[1:2])

@@ -32,6 +32,8 @@ through the existing ``offload.stage_to_host`` path unchanged and
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
@@ -79,6 +81,40 @@ def decode_rows(payload, use_kernels: str = "never") -> Array:
             return kops.dequantize_rows(payload["q"], payload["scale"])
         return ref.dequantize_rows_ref(payload["q"], payload["scale"])
     return payload.astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """The encode/decode pair of one wire configuration, as an object.
+
+    This is the *codec hook* of the `repro.transport.OffloadChannel`
+    protocol: `device_update` encodes the complement rows with
+    `codec.encode` inside the jitted device program, and the host
+    worker's accumulate decodes with `codec.decode` — both must be pure,
+    traceable functions. The stock codec delegates to
+    `encode_rows`/`decode_rows` above; a custom transport substitutes
+    its own object (same duck type: `encode`, `decode`,
+    `error_feedback`) to change the wire without touching the runtime.
+    """
+    wire_dtype: str = "bf16"
+    use_kernels: str = "never"
+
+    @property
+    def error_feedback(self) -> bool:
+        return needs_error_feedback(self.wire_dtype)
+
+    def encode(self, rows: Array):
+        return encode_rows(rows, self.wire_dtype, self.use_kernels)
+
+    def decode(self, payload) -> Array:
+        return decode_rows(payload, self.use_kernels)
+
+
+def codec_for(zcfg) -> WireCodec:
+    """The codec a ZenFlowConfig selects (the default everywhere a
+    `codec=` argument is omitted — behavior-identical to the pre-channel
+    inline encode/decode calls)."""
+    return WireCodec(zcfg.wire_dtype, zcfg.use_kernels)
 
 
 def reconcile_residual(dstate: dict, init_fn) -> dict:

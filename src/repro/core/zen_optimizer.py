@@ -27,7 +27,10 @@ selected by ``ZenFlowConfig.wire_dtype`` (core/wire.py — fp32 / bf16 /
 int8-with-per-row-scale). The int8 wire keeps an error-feedback residual
 in device state (``wire_residual``) that is re-injected into the next
 step's complement rows before encoding, so the host accumulator tracks
-the true gradient sum up to one step's rounding error.
+the true gradient sum up to one step's rounding error. Encode/decode go
+through the transport's codec hook (`device_update(..., codec=...)` /
+`host_accumulate(..., codec=...)` — see `repro.transport`); omitted,
+the stock `wire.codec_for(zcfg)` codec keeps the historical behavior.
 """
 from __future__ import annotations
 
@@ -194,11 +197,17 @@ def _selective_adam(p, g, idx, m_sel, v_sel, t, lr, zcfg: ZenFlowConfig):
 
 def device_update(params: PathDict, grads: PathDict, state: ZenState,
                   zcfg: ZenFlowConfig, partition: dict[str, ParamInfo],
-                  psum_axes: Optional[dict[str, Any]] = None):
+                  psum_axes: Optional[dict[str, Any]] = None,
+                  codec=None):
     """One device-side ZenFlow step over pathdicts.
 
     Returns (new_params, new_state_device_part, host_bound, metrics).
     host_bound contains exactly the bytes that cross to the host.
+
+    `codec` is the transport's wire hook (`repro.transport` — any object
+    with pure `encode`/`decode` and an `error_feedback` flag); omitted,
+    it defaults to the stock `wire.codec_for(zcfg)` so direct callers
+    keep the pre-channel behavior bit-for-bit.
     """
     step = state["step"]
     t = step + 1
@@ -209,7 +218,8 @@ def device_update(params: PathDict, grads: PathDict, state: ZenState,
     new_sel, new_m, new_v, new_ema = {}, {}, {}, {}
     g_comp, comp_idx_out, old_rows, old_idx_out = {}, {}, {}, {}
     new_residual = {}
-    wire_ef = wire.needs_error_feedback(zcfg.wire_dtype)
+    codec = wire.codec_for(zcfg) if codec is None else codec
+    wire_ef = codec.error_feedback
     rho_num = jnp.zeros((), jnp.float32)
     rho_den = jnp.zeros((), jnp.float32)
     imp_means = {}
@@ -251,11 +261,11 @@ def device_update(params: PathDict, grads: PathDict, state: ZenState,
             # resyncs the master rows).
             resid = jnp.where(refresh, 0.0, state["wire_residual"][p])
             eff = rows_out.astype(jnp.float32) + resid
-            enc = wire.encode_rows(eff, zcfg.wire_dtype, zcfg.use_kernels)
-            new_residual[p] = eff - wire.decode_rows(enc, zcfg.use_kernels)
+            enc = codec.encode(eff)
+            new_residual[p] = eff - codec.decode(enc)
             g_comp[p] = enc
         else:
-            g_comp[p] = wire.encode_rows(rows_out, zcfg.wire_dtype)
+            g_comp[p] = codec.encode(rows_out)
 
         # metrics: rho (complement energy fraction), important-norm EMA
         total_e = jnp.sum(norms)
@@ -309,15 +319,20 @@ def device_update(params: PathDict, grads: PathDict, state: ZenState,
 # Host side
 
 
-def host_accumulate(host: dict, host_bound: dict, zcfg: ZenFlowConfig) -> dict:
-    """acc += complement grads; sync master rows at selection refresh."""
+def host_accumulate(host: dict, host_bound: dict, zcfg: ZenFlowConfig,
+                    codec=None) -> dict:
+    """acc += complement grads; sync master rows at selection refresh.
+
+    `codec` decodes the wire payloads — the transport's decode hook
+    (`repro.transport`); defaults to `wire.codec_for(zcfg)`."""
+    codec = wire.codec_for(zcfg) if codec is None else codec
     new = dict(host)
     acc = dict(host["acc"])
     master = dict(host["master"])
     sync = host_bound.get("sync_master", host_bound["refresh"])
     for p, g in host_bound["g_comp"].items():
         acc[p] = sel.scatter_add_rows(acc[p], host_bound["comp_idx"][p],
-                                      wire.decode_rows(g, zcfg.use_kernels))
+                                      codec.decode(g))
         synced = sel.scatter_rows(master[p], host_bound["old_idx"][p],
                                   host_bound["old_rows"][p].astype(jnp.float32))
         master[p] = jnp.where(sync, synced, master[p])
@@ -385,7 +400,7 @@ def _window_boundary(state: ZenState, zcfg: ZenFlowConfig,
 
 
 def zenflow_step(params, grads, state: ZenState, zcfg: ZenFlowConfig,
-                 partition=None, psum_axes=None):
+                 partition=None, psum_axes=None, codec=None):
     """Full functional ZenFlow step on pytrees (params and grads share
     structure). Returns (new_params, new_state, metrics)."""
     pd = tree_to_pathdict(params)
@@ -394,9 +409,9 @@ def zenflow_step(params, grads, state: ZenState, zcfg: ZenFlowConfig,
         partition = build_partition(params, zcfg.topk_ratio, zcfg.min_dim)
 
     new_pd, dev_state, host_bound, metrics = device_update(
-        pd, gd, state, zcfg, partition, psum_axes)
+        pd, gd, state, zcfg, partition, psum_axes, codec=codec)
 
-    host = host_accumulate(state["host"], host_bound, zcfg)
+    host = host_accumulate(state["host"], host_bound, zcfg, codec=codec)
 
     # Zen-auto monitor: accumulated complement channel energy vs important
     if zcfg.auto_tune:

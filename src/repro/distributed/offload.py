@@ -1,6 +1,15 @@
-"""Fused single-program host-offload mode (TPU path).
+"""Host-tier offload primitives: the implementation substrate of
+`repro.transport.HostChannel`, plus the fused single-program mode.
 
-On TPU, ZenFlow's host state can live INSIDE the device program via
+Everything the host tier of the transport layer needs lives here —
+`host_memory_kind()` detection, the asynchronous `stage_to_host()`
+device->host hop (with trafficwatch channel/tier attribution), and the
+host-memory sharding helpers. `repro.transport.HostChannel` is a thin
+`OffloadChannel` adapter over these primitives; other tiers
+(`SpillChannel`, `StripedChannel`) compose them.
+
+Fused single-program host-offload mode (TPU path): on TPU, ZenFlow's
+host state can live INSIDE the device program via
 `NamedSharding.with_memory_kind("pinned_host")` for residency and
 `jax.experimental.compute_on("device_host")` for the accumulate/apply
 compute — one XLA program, XLA schedules the host work asynchronously.
@@ -52,7 +61,8 @@ def host_memory_kind(device=None) -> Optional[str]:
 
 
 def stage_to_host(tree, kind: Optional[str] = None,
-                  tag: str = "stage_to_host"):
+                  tag: str = "stage_to_host",
+                  channel: str = "host", tier: str = "host"):
     """Explicit, asynchronous device->host staging of a host-bound pytree.
 
     `jax.device_put` to the leaf's own sharding with the host memory kind
@@ -66,11 +76,15 @@ def stage_to_host(tree, kind: Optional[str] = None,
     Returns the tree unchanged when no host memory kind is addressable.
 
     Every staged payload is accounted by `telemetry.trafficwatch` under
-    `tag` (exact static byte footprint — the accounting never forces a
-    device read), so `benchmarks/bench_traffic.py` can attribute all
-    device->host wire bytes. The payload counts even where the staging
-    `device_put` is a residency no-op (XLA:CPU): the bytes still cross
-    the logical device/host boundary when the host worker consumes them.
+    `tag`, attributed to `channel`/`tier` (exact static byte footprint —
+    the accounting never forces a device read), so
+    `benchmarks/bench_traffic.py` can attribute all device->host wire
+    bytes by transport channel and storage tier. The payload counts even
+    where the staging `device_put` is a residency no-op (XLA:CPU): the
+    bytes still cross the logical device/host boundary when the host
+    worker consumes them. `repro.transport` channels pass their own
+    name; direct callers default to the "host" channel (the bytes do
+    land in host DRAM).
 
     Mesh-parallel note (the `spmd` backend): staging targets *the leaf's
     own NamedSharding* with only the memory kind swapped, so a
@@ -83,7 +97,7 @@ def stage_to_host(tree, kind: Optional[str] = None,
     worker's accumulate consumes each shard's bytes where they landed.
     """
     from repro.telemetry import trafficwatch
-    trafficwatch.tree(tag, tree)
+    trafficwatch.tree(tag, tree, channel=channel, tier=tier)
     kind = kind or host_memory_kind()
     if kind is None:
         return tree

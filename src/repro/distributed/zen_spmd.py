@@ -44,6 +44,17 @@ fwd/bwd math is untouched.
 class of the pipeline (params / device state / pending slot / host
 state), so the runtime can commit sharded residency at init instead of
 relying on first-step GSPMD resharding.
+
+Per-shard transport channels: the runtime moves every host-bound /
+pending payload through a `repro.transport.OffloadChannel`, whose
+staging targets each leaf's OWN NamedSharding with only the memory kind
+swapped — on a mesh, one logical `stage()` therefore fans out into RS
+independent per-shard device->host streams, and `upload()` scatters the
+window's rows back onto the pending slot's sharding so each shard
+receives only its own rows. The wire codec hooks (`make_device_step`'s
+and `make_host_programs`' `codec=` parameter) are traced into the
+sharded programs, so compressed wires ship per-shard compressed
+streams.
 """
 from __future__ import annotations
 
@@ -316,7 +327,8 @@ def zen_host_state_init(params_spec, zcfg: ZenFlowConfig,
 
 def make_device_step(model, zcfg: ZenFlowConfig, rules: MeshRules,
                      segs: Optional[dict] = None, microbatches: int = 1,
-                     accum_dtype=jnp.float32, with_pending: bool = True):
+                     accum_dtype=jnp.float32, with_pending: bool = True,
+                     codec=None):
     """Build the (un-jitted) fused device step:
 
         with_pending=True  (boundary variant, the default):
@@ -338,6 +350,9 @@ def make_device_step(model, zcfg: ZenFlowConfig, rules: MeshRules,
     gradient fed to ZenFlow is the microbatch mean, semantics unchanged).
     Jit with donate_argnums=(0, 1, 2) (or (0, 1) for the steady-state
     variant) — params/state/pending update in place.
+
+    `codec` is the transport's wire encode hook (`repro.transport`),
+    traced into the program; None keeps the stock `wire.codec_for(zcfg)`.
     """
     if segs is None:
         segs = build_segments(model.param_specs(), zcfg, rules)
@@ -392,7 +407,7 @@ def make_device_step(model, zcfg: ZenFlowConfig, rules: MeshRules,
             gseg = to_segmented(tree_to_pathdict(grads), segs)
             state = dict(dstate)
             new_pseg, new_dstate, host_bound, zmet = device_update(
-                pseg, gseg, state, zcfg, partition)
+                pseg, gseg, state, zcfg, partition, codec=codec)
             new_params = pathdict_to_tree(from_segmented(new_pseg, segs),
                                           params)
             metrics = {"loss": loss, **met, **zmet}
@@ -433,13 +448,15 @@ def make_land_pending(segs: dict[str, SegmentInfo]):
     return land
 
 
-def make_host_programs(zcfg: ZenFlowConfig):
+def make_host_programs(zcfg: ZenFlowConfig, codec=None):
     """Separately-jittable host programs (run on the host's XLA:CPU client
-    in production; same client in this container)."""
+    in production; same client in this container). `codec` is the
+    transport's wire decode hook for the accumulate side
+    (`repro.transport`); None keeps the stock `wire.codec_for(zcfg)`."""
     from repro.core.zen_optimizer import host_accumulate, host_apply
 
     def accumulate(host_state, host_bound):
-        return host_accumulate(host_state, host_bound, zcfg)
+        return host_accumulate(host_state, host_bound, zcfg, codec=codec)
 
     def apply(host_state, comp_idx, lr_t):
         return host_apply(host_state, comp_idx, zcfg, lr_t)

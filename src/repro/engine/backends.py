@@ -33,8 +33,18 @@ with the error-feedback residual segment-sharded alongside the rest of
 the device state — on the spmd backend each mesh shard therefore ships
 its own compressed stream, byte-accounted by `telemetry.trafficwatch`.
 
+Transport channels (`repro.transport`) are the backends' sibling
+registry for the *byte-moving* side: every factory accepts
+`transport=...` (a registry name — "host" | "spill" | "striped" — or an
+`OffloadChannel` instance). On the async/spmd pipelines the channel
+carries every device<->host payload (staging, uploads, wire codec); on
+the single-program backends only the codec hook applies. Default is the
+behavior-identical "host" tier.
+
 New execution paths (another hardware offload route, elastic serving-time
-updates, ...) plug in via `register_backend` instead of a new driver.
+updates, ...) plug in via `register_backend` instead of a new driver;
+new transfer paths (GDS, NVMe tiers, multi-path striping) via
+`repro.transport.register_transport` instead of a runtime rewrite.
 
 Metrics contract (zero-sync hot path)
 -------------------------------------
@@ -92,7 +102,8 @@ _REGISTRY: dict[str, Callable[..., Any]] = {}
 
 
 def register_backend(name: str, factory: Callable[..., Any]) -> None:
-    """Register `factory(model, zcfg, rules, rcfg=None) -> backend`."""
+    """Register `factory(model, zcfg, rules, rcfg=None, transport=None)
+    -> backend` (extra keywords from `Engine.from_config` pass through)."""
     _REGISTRY[name] = factory
 
 
@@ -122,17 +133,25 @@ class SyncBackend:
     name = "sync"
 
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
-                 rcfg: Optional[RuntimeConfig] = None):
+                 rcfg: Optional[RuntimeConfig] = None, transport=None):
         self.model = model
         self.zcfg = zcfg
         self.rules = rules
         self.params = None
         self.zstate = None
+        # single-program mode has no separate transfer legs; the
+        # transport contributes only its wire-codec hook (None keeps the
+        # stock wire.codec_for(zcfg) — bit-identical)
+        if isinstance(transport, str):
+            from repro.transport import make_transport
+            transport = make_transport(transport, zcfg)
+        codec = transport
 
         def _step(params, zstate, batch):
             (loss, met), grads = jax.value_and_grad(
                 model.loss_fn, has_aux=True)(params, batch)
-            new_p, new_s, zmet = zenflow_step(params, grads, zstate, zcfg)
+            new_p, new_s, zmet = zenflow_step(params, grads, zstate, zcfg,
+                                              codec=codec)
             return new_p, new_s, {"loss": loss, **met, **zmet}
 
         donate = (0, 1) if rcfg is None or rcfg.donate else ()
@@ -179,8 +198,10 @@ class AsyncBackend:
     name = "async"
 
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
-                 rcfg: Optional[RuntimeConfig] = None, segs: Optional[dict] = None):
-        self.rt = ZenFlowRuntime(model, zcfg, rules, rcfg, segs=segs)
+                 rcfg: Optional[RuntimeConfig] = None,
+                 segs: Optional[dict] = None, transport=None):
+        self.rt = ZenFlowRuntime(model, zcfg, rules, rcfg, segs=segs,
+                                 transport=transport)
 
     def init(self, key):
         self.rt.init(key)
@@ -235,7 +256,7 @@ class SpmdBackend(AsyncBackend):
 
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
                  rcfg: Optional[RuntimeConfig] = None,
-                 segs: Optional[dict] = None):
+                 segs: Optional[dict] = None, transport=None):
         if rules.mesh is None:
             import dataclasses
             from repro.launch.mesh import make_mesh_for
@@ -246,7 +267,7 @@ class SpmdBackend(AsyncBackend):
         self.rules = rules
         self.mesh = rules.mesh
         self.rt = ZenFlowRuntime(model, zcfg, rules, rcfg, segs=segs,
-                                 place_sharded=True)
+                                 place_sharded=True, transport=transport)
         self._batch_ax = rules.axis("batch")
         self._batch_n = _axis_size(self.mesh, self._batch_ax)
         self._batch_shardings: dict = {}      # (key, ndim, dim0) -> sharding
@@ -289,8 +310,8 @@ class FusedBackend(SyncBackend):
     name = "fused"
 
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
-                 rcfg: Optional[RuntimeConfig] = None):
-        super().__init__(model, zcfg, rules, rcfg)
+                 rcfg: Optional[RuntimeConfig] = None, transport=None):
+        super().__init__(model, zcfg, rules, rcfg, transport=transport)
         from repro.distributed.offload import host_memory_kind
         self.host_memory_kind = host_memory_kind()
         if self.host_memory_kind is None:
@@ -347,7 +368,10 @@ class BaselineBackend:
     name = "baseline"
 
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
-                 rcfg: Optional[RuntimeConfig] = None):
+                 rcfg: Optional[RuntimeConfig] = None, transport=None):
+        # dense synchronous AdamW moves no offload bytes: `transport` is
+        # accepted for driver uniformity (--transport with any backend)
+        # and unused
         self.model = model
         self.zcfg = zcfg
         self.opt = adamw(lr=zcfg.lr, b1=zcfg.b1, b2=zcfg.b2, eps=zcfg.eps,

@@ -13,8 +13,10 @@ or, with the shared loop (checkpointing/telemetry via callbacks):
     eng.run(loader, steps)
 
 One facade, five stock backends (sync / async / spmd / fused / baseline
-— see engine/backends.py), uniform checkpointing via
-`state_dict()`/`load_state_dict()` through `CheckpointManager`. On a
+— see engine/backends.py), pluggable offload transports
+(`transport="host" | "spill" | "striped"` — see repro/transport/), and
+uniform checkpointing via `state_dict()`/`load_state_dict()` through
+`CheckpointManager`. On a
 multi-device host `backend="spmd"` runs the whole async pipeline across
 a (data, model) mesh (built over every visible device unless `rules`
 carries one) with sharded state residency and per-shard host offload
@@ -67,20 +69,26 @@ class Engine:
                     backend: Union[str, ExecutionBackend] = "async",
                     rules: Optional[MeshRules] = None,
                     callbacks: Sequence[Callback] = (),
-                    rcfg=None, **backend_kw) -> "Engine":
+                    rcfg=None, transport=None, **backend_kw) -> "Engine":
         """Build an engine from an ArchConfig (or registered config name).
 
         `backend` is a registry name ("sync" | "async" | "spmd" |
         "fused" | "baseline" | anything passed to `register_backend`) or
-        an already constructed ExecutionBackend. Extra keyword arguments
-        reach the backend factory (e.g. `segs=...` pins a custom channel
-        segmentation on the async/spmd runtimes).
+        an already constructed ExecutionBackend. `transport` selects the
+        offload channel every device<->host byte moves through
+        (`repro.transport` registry name — "host" | "spill" | "striped"
+        — or an OffloadChannel instance; None = the behavior-identical
+        "host" tier). Extra keyword arguments reach the backend factory
+        (e.g. `segs=...` pins a custom channel segmentation on the
+        async/spmd runtimes).
         """
         if isinstance(cfg, str):
             cfg = get_config(cfg)
         model = build_model(cfg)
         zcfg = ZenFlowConfig() if zcfg is None else zcfg
         rules = default_rules() if rules is None else rules
+        if transport is not None:
+            backend_kw["transport"] = transport
         if isinstance(backend, str):
             backend = make_backend(backend, model, zcfg, rules,
                                    rcfg=rcfg, **backend_kw)

@@ -10,7 +10,9 @@ latest checkpoint in --ckpt-dir. --backend selects the execution mode
 ("async" two-program pipeline by default, "sync" functional spec, "fused"
 lowering-checked pinned-host mode, "baseline" dense AdamW — the
 "ZeRO-Offload semantics" reference); --baseline adamw is kept as an alias
-for --backend baseline. All modes share the one Engine loop.
+for --backend baseline. --transport selects the offload channel
+("host" | "spill" | "striped", repro/transport/). All modes share the one
+Engine loop.
 """
 from __future__ import annotations
 
@@ -50,7 +52,8 @@ def train(args) -> dict:
         callbacks.append(CheckpointCallback(ckpt, every=args.ckpt_every,
                                             loader=loader))
 
-    eng = Engine.from_config(cfg, zcfg, backend=backend, callbacks=callbacks)
+    eng = Engine.from_config(cfg, zcfg, backend=backend, callbacks=callbacks,
+                             transport=args.transport or None)
     eng.init(jax.random.PRNGKey(args.seed))
     if ckpt:
         start = eng.restore_latest(ckpt, loader)
@@ -82,6 +85,13 @@ def main() -> None:
                          "with error feedback)")
     ap.add_argument("--backend", default="async",
                     choices=["sync", "async", "spmd", "fused", "baseline"])
+    ap.add_argument("--transport", default="",
+                    choices=["", "host", "spill", "striped"],
+                    help="offload channel every device<->host byte moves "
+                         "through (repro.transport registry; default "
+                         "\"host\" = the stock DRAM tier, \"spill\" adds "
+                         "a bounded-budget simulated-NVMe file tier, "
+                         "\"striped\" round-robins multi-path stripes)")
     ap.add_argument("--baseline", default="", choices=["", "adamw"],
                     help="deprecated alias for --backend baseline")
     ap.add_argument("--ckpt-dir", default="")

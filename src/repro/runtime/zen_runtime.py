@@ -31,28 +31,35 @@ allocations**:
     `RuntimeConfig.blocking_metrics=True` to restore the legacy
     per-step scalarization (kept for before/after benchmarking; every
     forced read is counted by `telemetry.syncwatch`);
-  * `host_bound` is staged to host memory explicitly
-    (`offload.stage_to_host`, async `jax.device_put` onto the leaf
-    sharding with `offload.host_memory_kind()`), so the PCIe hop
-    overlaps the next step's compute instead of the worker blocking on
-    a lazy transfer.
+  * `host_bound` is staged to host memory explicitly through the
+    runtime's transport channel (`repro.transport`; the stock
+    `HostChannel` is an async `jax.device_put` onto the leaf sharding
+    with `offload.host_memory_kind()`), so the PCIe hop overlaps the
+    next step's compute instead of the worker blocking on a lazy
+    transfer.
 
 Deliberate blocking syncs remain only OFF the steady-state path —
 straggler collects at a forced boundary, warmup landings, `flush()` —
 and all of them are routed through `telemetry.syncwatch` so
 `benchmarks/bench_dispatch.py` can assert the steady-state count is 0.
 
-Compressed wire + traffic accounting
-------------------------------------
-The host-bound complement gradients cross in the encoding selected by
-`ZenFlowConfig.wire_dtype` (fp32 / bf16 / int8-per-row-scale,
-core/wire.py): the device program encodes and tracks the error-feedback
-residual in device state, the host worker's accumulate decodes. Every
-device->host payload (`stage_to_host`, tag "host_bound") and host->device
-pending-row upload (tag "pending_upload") is byte-accounted by
-`telemetry.trafficwatch` — zero extra syncs, static metadata only — so
-`benchmarks/bench_traffic.py` can measure bytes/step and the compression
-ratio against the fp32 wire.
+Transport channel (every device<->host byte)
+--------------------------------------------
+All transfer logic lives behind one `repro.transport.OffloadChannel`
+(the `transport=` constructor argument — a registry name or channel
+instance; default "host"): the device program encodes the complement
+gradients with the channel's wire codec (`ZenFlowConfig.wire_dtype` —
+fp32 / bf16 / int8-per-row-scale, core/wire.py — with the error-feedback
+residual tracked in device state), `channel.stage()` ships the payload
+device->host (tag "host_bound"), the host worker materializes it with
+`channel.fetch()` before the decode inside accumulate, and pending-row
+uploads go back through `channel.upload()` (tag "pending_upload").
+Every payload is byte-accounted by `telemetry.trafficwatch` with
+per-channel/per-tier attribution — zero extra syncs, static metadata
+only — so `benchmarks/bench_traffic.py` can measure bytes/step by tier
+and the compression ratio against the fp32 wire. Tiered channels
+("spill": bounded DRAM budget + simulated-NVMe file tier; "striped":
+round-robin multi-path stripes) slot in without touching this file.
 
 Mesh-parallel execution (the `spmd` engine backend)
 ---------------------------------------------------
@@ -97,7 +104,7 @@ import numpy as np
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.distributed.sharding import MeshRules
 from repro.distributed import zen_spmd
-from repro.telemetry import syncwatch, trafficwatch
+from repro.telemetry import syncwatch
 
 
 # state-dict fields added after the first release: restores of older
@@ -109,7 +116,11 @@ OPTIONAL_CKPT_KEYS = ("s_eff", "window_extensions")
 class RuntimeConfig:
     donate: bool = True
     straggler_window_extension: bool = True   # extend S instead of stalling
-    stage_host_bound: bool = True    # explicit async d2h staging of host_bound
+    # explicit async d2h staging of host_bound; forwarded as
+    # `stage_payloads` to registry-built transports only — a channel
+    # INSTANCE passed via `transport=` owns its staging config
+    # (explicit object beats runtime flag)
+    stage_host_bound: bool = True
     blocking_metrics: bool = False   # legacy per-step scalarization (bench)
 
 
@@ -177,13 +188,24 @@ class ZenFlowRuntime:
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
                  rcfg: Optional[RuntimeConfig] = None,
                  segs: Optional[dict] = None,
-                 place_sharded: Optional[bool] = None):
+                 place_sharded: Optional[bool] = None,
+                 transport=None):
         self.model = model
         self.zcfg = zcfg
         self.rules = rules
         self.rcfg = rcfg = RuntimeConfig() if rcfg is None else rcfg
-        step_fn, segs, partition = zen_spmd.make_device_step(model, zcfg,
-                                                            rules, segs=segs)
+        # every device<->host byte moves through ONE transport channel
+        # (registry name or OffloadChannel instance; module docstring).
+        # A channel instance keeps its own staging config —
+        # rcfg.stage_host_bound only parameterizes registry-built ones
+        if transport is None or isinstance(transport, str):
+            from repro.transport import make_transport
+            transport = make_transport(
+                transport or "host", zcfg,
+                stage_payloads=rcfg.stage_host_bound)
+        self.channel = transport
+        step_fn, segs, partition = zen_spmd.make_device_step(
+            model, zcfg, rules, segs=segs, codec=self.channel)
         self.segs = segs
         self.partition = partition
         # mesh-parallel residency: default on whenever the rules carry a
@@ -195,7 +217,8 @@ class ZenFlowRuntime:
         self.placements = zen_spmd.zen_placements(
             model.param_specs(), zcfg, rules, segs) if place_sharded else None
         steady_fn, _, _ = zen_spmd.make_device_step(
-            model, zcfg, rules, segs=segs, with_pending=False)
+            model, zcfg, rules, segs=segs, with_pending=False,
+            codec=self.channel)
         donate = rcfg.donate
         # boundary variant: lands the pending host rows (donated)
         self.device_step = jax.jit(
@@ -209,15 +232,7 @@ class ZenFlowRuntime:
         self._land = jax.jit(zen_spmd.make_land_pending(segs),
                              donate_argnums=(0,) if donate else ())
         self.host_accumulate, self.host_apply = \
-            zen_spmd.make_host_programs(zcfg)
-        self._stage: Optional[Callable] = None
-        if rcfg.stage_host_bound:
-            from repro.distributed.offload import host_memory_kind, \
-                stage_to_host
-            kind = host_memory_kind()
-            if kind is not None:
-                self._stage = lambda hb, _k=kind: stage_to_host(
-                    hb, kind=_k, tag="host_bound")
+            zen_spmd.make_host_programs(zcfg, codec=self.channel)
         self.worker: Optional[_HostWorker] = None
         self.params = None
         self.dstate = None
@@ -261,17 +276,18 @@ class ZenFlowRuntime:
         """
         if self.pending is not None:
             self.params = self._land(self.params, self.pending)
-        # host->device upload leg of the wire (bf16 rows + int32 idx),
-        # attributed for bench_traffic's bytes/step accounting
-        trafficwatch.record("pending_upload", trafficwatch.tree_bytes(rows)
-                            + trafficwatch.tree_bytes(idx))
+        # host->device upload leg of the wire (bf16 rows + int32 idx)
+        # through the transport channel: byte-accounted under
+        # "pending_upload", and on a mesh asynchronously device_put onto
+        # the pending slot's sharding (each shard receives only its own
+        # rows; a no-op when they already live there)
+        sharding = None
         if self.placements is not None:
-            # asynchronous host->device upload of the window's rows onto
-            # the pending slot's sharding (each shard receives only its
-            # own rows; a no-op when they already live there)
-            rows = jax.device_put(rows, self.placements.pending["rows"])
-            idx = jax.device_put(idx, self.placements.pending["idx"])
-        self.pending = {"rows": rows, "idx": idx,
+            sharding = {"rows": self.placements.pending["rows"],
+                        "idx": self.placements.pending["idx"]}
+        up = self.channel.upload({"rows": rows, "idx": idx}, sharding,
+                                 tag="pending_upload")
+        self.pending = {"rows": up["rows"], "idx": up["idx"],
                         "valid": jnp.ones((), jnp.bool_)}
 
     def step(self, batch) -> dict:
@@ -294,18 +310,16 @@ class ZenFlowRuntime:
         self._t += 1
         self._steps_in_window += 1
 
-        # explicit async d2h staging: the PCIe hop overlaps the next
-        # step's compute; the worker consumes already-host-resident bytes
-        if self._stage is not None:
-            host_bound = self._stage(host_bound)
-        else:
-            # no explicit staging on this platform/config: the same bytes
-            # still cross lazily when the worker touches them — account
-            trafficwatch.tree("host_bound", host_bound)
+        # explicit async d2h staging through the transport channel: the
+        # PCIe hop overlaps the next step's compute; the worker
+        # materializes the staged handle (restoring from colder tiers if
+        # the channel spilled it) and consumes host-resident bytes
+        staged = self.channel.stage(host_bound, tag="host_bound")
 
         # async host accumulate (ordered behind any in-flight apply)
         self.worker.submit(
-            lambda st, hb=host_bound: (self.host_accumulate(st, hb), None))
+            lambda st, hb=staged: (
+                self.host_accumulate(st, self.channel.fetch(hb)), None))
 
         t = self._t
         warm = t <= self.zcfg.warmup_steps
@@ -328,6 +342,8 @@ class ZenFlowRuntime:
                 self._apply_future = None
 
         if boundary:
+            # comp_idx from the device program's output tree (the staged
+            # copy belongs to the worker; the indices are identical)
             comp_idx = host_bound["comp_idx"]
             lr_t = self.zcfg.lr_at(jnp.asarray(t))
 
@@ -363,11 +379,16 @@ class ZenFlowRuntime:
 
     # ------------------------------------------------------------------
     def flush(self):
-        """Land any in-flight host apply (end of run / checkpoint)."""
+        """Land any in-flight host apply and settle the transport
+        channel (end of run / checkpoint)."""
         if self._apply_future is not None:
             rows, idx = syncwatch.wait(self._apply_future, tag="flush")
             self._push_pending(rows, idx)
             self._apply_future = None
+        # restore anything the channel holds in colder tiers and release
+        # its transient resources (no-op for the host tier); never on
+        # the steady-state path
+        self.channel.drain()
 
     def state_dict(self) -> dict:
         self.flush()
@@ -435,3 +456,6 @@ class ZenFlowRuntime:
     def close(self):
         if self.worker is not None:
             self.worker.stop()
+        # settle the transport: restore anything resident in colder
+        # tiers and release spill files (no-op for the host tier)
+        self.channel.drain()

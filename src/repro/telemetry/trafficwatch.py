@@ -13,11 +13,22 @@ Contract:
     `tree(tag, pytree)` records a whole payload pytree (exact static byte
     footprint — `tree_bytes` never reads device values, so accounting
     itself adds zero host syncs to the hot path).
-  * Producers: `offload.stage_to_host` records every staged payload
-    (tag defaults to "stage_to_host"; the runtime tags the per-step
-    complement stream "host_bound"), and the runtime's pending-row upload
-    records under "pending_upload". New transfer paths must route through
-    this module to stay visible to the benchmark.
+  * Every transfer additionally carries a **channel** and **tier**
+    attribution (`repro.transport` — the `OffloadChannel` that moved the
+    bytes, and the storage tier they landed in: "host" for DRAM staging
+    and uploads, "nvme" for `SpillChannel`'s file tier). `counts()`
+    exposes `by_channel` / `by_tier` mirrors of `by_tag`, plus
+    `unattributed_bytes` so benchmarks can assert 100% of staged bytes
+    name their channel/tier. Direct `offload.stage_to_host` callers
+    default to channel="host"/tier="host" (the bytes do land in host
+    DRAM), so nothing in repo code records unattributed.
+  * Producers: every `OffloadChannel.stage()` payload (the runtime tags
+    the per-step complement stream "host_bound") and every
+    `OffloadChannel.upload()` (tag "pending_upload" for the runtime's
+    host->device pending rows); `SpillChannel` records its file-tier
+    writes/reads under "spill_write"/"spill_read". New transfer paths
+    must route through a channel (or this module directly) to stay
+    visible to the benchmark.
   * Bytes are *logical wire bytes* of the global payload: what crosses
     the device/host boundary summed over shards in a mesh run (each
     shard's slice crosses its own link exactly once).
@@ -29,13 +40,16 @@ from __future__ import annotations
 
 import threading
 from collections import Counter
-from typing import Any
+from typing import Any, Optional
 
 import jax
 
 _lock = threading.Lock()
 _bytes: Counter = Counter()
 _transfers: Counter = Counter()
+_channel_bytes: Counter = Counter()
+_tier_bytes: Counter = Counter()
+_unattributed: Counter = Counter()   # bytes recorded without channel / tier
 
 
 def reset() -> None:
@@ -43,13 +57,27 @@ def reset() -> None:
     with _lock:
         _bytes.clear()
         _transfers.clear()
+        _channel_bytes.clear()
+        _tier_bytes.clear()
+        _unattributed.clear()
 
 
-def record(tag: str, nbytes: int, transfers: int = 1) -> None:
-    """Record one (or `transfers`) transfer(s) totalling `nbytes`."""
+def record(tag: str, nbytes: int, transfers: int = 1,
+           channel: Optional[str] = None, tier: Optional[str] = None) -> None:
+    """Record one (or `transfers`) transfer(s) totalling `nbytes`,
+    attributed to the `OffloadChannel` that moved them and the storage
+    tier they landed in."""
     with _lock:
         _bytes[tag] += int(nbytes)
         _transfers[tag] += transfers
+        if channel is not None:
+            _channel_bytes[channel] += int(nbytes)
+        else:
+            _unattributed["channel"] += int(nbytes)
+        if tier is not None:
+            _tier_bytes[tier] += int(nbytes)
+        else:
+            _unattributed["tier"] += int(nbytes)
 
 
 def tree_bytes(tree: Any) -> int:
@@ -60,9 +88,10 @@ def tree_bytes(tree: Any) -> int:
                if hasattr(x, "dtype"))
 
 
-def tree(tag: str, payload: Any) -> None:
+def tree(tag: str, payload: Any, channel: Optional[str] = None,
+         tier: Optional[str] = None) -> None:
     """Record a whole payload pytree as one transfer under `tag`."""
-    record(tag, tree_bytes(payload))
+    record(tag, tree_bytes(payload), channel=channel, tier=tier)
 
 
 def total() -> int:
@@ -72,11 +101,20 @@ def total() -> int:
 
 
 def counts() -> dict:
-    """Snapshot: {"total_bytes", "transfers", "by_tag", "transfers_by_tag"}."""
+    """Snapshot: {"total_bytes", "transfers", "by_tag",
+    "transfers_by_tag", "by_channel", "by_tier", "unattributed_bytes"}.
+
+    `unattributed_bytes` is the max of channel-less and tier-less bytes —
+    0 means every recorded byte named both its channel and its tier (the
+    bench_traffic attribution contract)."""
     with _lock:
         return {
             "total_bytes": sum(_bytes.values()),
             "transfers": sum(_transfers.values()),
             "by_tag": dict(_bytes),
             "transfers_by_tag": dict(_transfers),
+            "by_channel": dict(_channel_bytes),
+            "by_tier": dict(_tier_bytes),
+            "unattributed_bytes": max(_unattributed["channel"],
+                                      _unattributed["tier"]),
         }

@@ -1,0 +1,144 @@
+"""Pluggable offload transports: every device<->host byte behind one
+tiered, multi-path channel API.
+
+ZenFlow's zero-stall claim (paper Fig 7) holds only while every
+device<->host transfer is asynchronous, double-buffered, and accounted.
+This package is the single seam those transfers go through — the
+transport-layer mirror of `engine/backends.py`: one `OffloadChannel`
+protocol, a `register_transport`/`make_transport` registry, and stock
+tiers:
+
+  "host"     `HostChannel` — today's production path: async
+             `offload.stage_to_host` device->host staging onto the
+             detected host memory kind, async `device_put` uploads,
+             stock `core/wire.py` codec. Behavior-identical to the
+             pre-transport runtime.
+  "spill"    `SpillChannel` — a host tier with a bounded DRAM budget
+             that spills cold staged segments to a simulated-NVMe file
+             tier and restores them on access (MLP-Offload's multi-level
+             offloading: host memory backed by NVMe capacity). Eviction
+             never blocks the pipeline: only segments whose transfers
+             have committed spill.
+  "striped"  `StripedChannel` — round-robins payload segments across N
+             sub-channels (MLP-Offload's multi-path story: several
+             independent links instead of one saturated PCIe path); the
+             union of the stripes is the full payload, bit for bit.
+
+Channel contract (duck-typed; `OffloadChannel` is the Protocol)
+---------------------------------------------------------------
+  stage(tree, tag)      device->host: account the payload bytes under
+                        `tag` (trafficwatch, attributed to this
+                        channel's name and tier) and start the transfer
+                        asynchronously. Returns an opaque *staged
+                        handle*; the producer thread must not assume it
+                        is the tree. MUST NOT block the caller — no
+                        device reads, no waits (syncwatch-verified for
+                        every stock tier in tests/test_transport.py).
+  fetch(handle)         consumer side (the host worker): materialize a
+                        staged handle back into the payload pytree,
+                        restoring from colder tiers if the segment was
+                        spilled. Bitwise-identical to the staged tree.
+  upload(tree, sharding, tag)
+                        host->device: account + async `device_put` of
+                        each leaf onto its target. `sharding` is either
+                        None (whole tree: bytes accounted, placement
+                        left to the consuming program) or a pytree of
+                        NamedShardings matching `tree` leaf-for-leaf.
+                        Returns the uploaded tree.
+  encode(rows) / decode(payload)
+                        the wire codec hooks — pure, traceable
+                        functions; `encode` runs inside the jitted
+                        device program, `decode` inside the host
+                        worker's accumulate (`core/wire.py` docs).
+                        `error_feedback` (property) tells the device
+                        program whether to keep the encoder residual.
+  drain()               settle the channel: restore anything resident in
+                        colder tiers and release transient resources.
+                        Called by the runtime's flush()/close(); never
+                        on the steady-state path.
+  stats()               per-channel dict: name, tier, byte counters (and
+                        per-sub-channel stats for multi-path channels).
+                        Global accounting lives in
+                        `telemetry.trafficwatch` (by_channel / by_tier).
+
+Ordering: one channel instance serves one runtime; `stage` calls are
+made in step order from the driver thread and `fetch` calls in the same
+order from the single host-worker thread, so a channel may rely on
+FIFO consumption (the double-buffered pending slot above it guarantees
+no staged window is ever dropped — tests/test_transport.py).
+
+Registering a custom transport (GDS, interleaved optimizer-state tiers,
+a different compression wire) mirrors backends:
+
+    from repro.transport import register_transport
+    class GdsChannel(HostChannel):
+        name = "gds"
+        ...
+    register_transport("gds", GdsChannel)
+    eng = Engine.from_config(cfg, zcfg, backend="async", transport="gds")
+
+Factories are called `factory(zcfg, **kw) -> channel`; `zcfg` (a
+`ZenFlowConfig` or None) selects the default wire codec.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
+
+from repro.transport.host import HostChannel
+from repro.transport.spill import SpillChannel
+from repro.transport.striped import StripedChannel
+
+
+@runtime_checkable
+class OffloadChannel(Protocol):
+    """Uniform transport contract consumed by `ZenFlowRuntime` (see the
+    package docstring for the semantics of each method)."""
+    name: str
+    tier: str
+    # whether the wire codec keeps an encoder residual in device state
+    # (read by `device_update` when tracing the device program)
+    error_feedback: bool
+
+    def stage(self, tree, tag: str = ...) -> Any: ...
+    def fetch(self, handle) -> Any: ...
+    def upload(self, tree, sharding=None, tag: str = ...) -> Any: ...
+    def encode(self, rows) -> Any: ...
+    def decode(self, payload) -> Any: ...
+    def drain(self) -> None: ...
+    def stats(self) -> dict: ...
+
+
+# ---------------------------------------------------------------------------
+# Registry (mirrors engine/backends.py)
+
+
+_REGISTRY: dict[str, Callable[..., Any]] = {}
+
+
+def register_transport(name: str, factory: Callable[..., Any]) -> None:
+    """Register `factory(zcfg, **kw) -> channel` under `name`."""
+    _REGISTRY[name] = factory
+
+
+def available_transports() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_transport(name: str, zcfg=None, **kw):
+    """Build a registered channel. `zcfg` (ZenFlowConfig or None) selects
+    the wire codec; extra keywords reach the channel constructor
+    (e.g. `budget_bytes=...` for "spill", `ways=...` for "striped")."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown transport {name!r}; "
+                       f"available: {available_transports()}")
+    return _REGISTRY[name](zcfg, **kw)
+
+
+register_transport("host", HostChannel)
+register_transport("spill", SpillChannel)
+register_transport("striped", StripedChannel)
+
+__all__ = [
+    "OffloadChannel", "HostChannel", "SpillChannel", "StripedChannel",
+    "register_transport", "available_transports", "make_transport",
+]

@@ -1,0 +1,112 @@
+"""`HostChannel`: the host-DRAM tier — today's production offload path
+as an `OffloadChannel`.
+
+Thin adapter over `distributed/offload.py`'s primitives: staging is
+`stage_to_host` (async `device_put` onto each leaf's own sharding with
+the detected host memory kind — per-shard independent streams on a
+mesh), uploads are async `device_put` onto the caller-supplied
+shardings, and the codec is the stock `core/wire.py` pair selected by
+`ZenFlowConfig.wire_dtype`. `fetch` is the identity: a staged tree IS
+the payload. Behavior-identical to the pre-transport runtime (the
+async-backend parity tests in tests/test_wire.py / tests/test_engine.py
+run unmodified against it).
+"""
+from __future__ import annotations
+
+import threading
+from collections import Counter
+from typing import Optional
+
+import jax
+
+from repro.core import wire
+from repro.telemetry import trafficwatch
+
+
+class CodecHooks:
+    """The wire-codec trio of the `OffloadChannel` contract (pure,
+    traceable; see core/wire.py), shared by every stock tier. Subclasses
+    set `self.codec` (any object with encode/decode/error_feedback)."""
+
+    codec: wire.WireCodec
+
+    @property
+    def error_feedback(self) -> bool:
+        return self.codec.error_feedback
+
+    def encode(self, rows):
+        return self.codec.encode(rows)
+
+    def decode(self, payload):
+        return self.codec.decode(payload)
+
+
+class HostChannel(CodecHooks):
+    """Host-DRAM offload tier (see module docstring)."""
+
+    tier = "host"
+
+    def __init__(self, zcfg=None, *, stage_payloads: bool = True,
+                 kind: Optional[str] = None, name: str = "host"):
+        """`zcfg` selects the wire codec (None -> the default bf16 wire);
+        `stage_payloads=False` keeps the byte accounting but skips the
+        explicit residency hop (`RuntimeConfig.stage_host_bound=False`);
+        `kind` pins the host memory kind (None auto-detects lazily)."""
+        self.name = name
+        self.codec = wire.codec_for(zcfg) if zcfg is not None \
+            else wire.WireCodec()
+        self._stage_payloads = stage_payloads
+        self._kind = kind
+        self._kind_resolved = kind is not None
+        self._lock = threading.Lock()
+        self._ctr: Counter = Counter()
+
+    # -- transfers -------------------------------------------------------
+    def _memory_kind(self) -> Optional[str]:
+        if not self._kind_resolved:
+            from repro.distributed.offload import host_memory_kind
+            self._kind = host_memory_kind()
+            self._kind_resolved = True
+        return self._kind
+
+    def _count(self, key: str, nbytes: int) -> None:
+        with self._lock:
+            self._ctr[key] += int(nbytes)
+            self._ctr[key + "_transfers"] += 1
+
+    def stage(self, tree, tag: str = "stage_to_host"):
+        """Asynchronous device->host staging; returns the staged tree
+        (this channel's handle IS the tree). Never blocks: `device_put`
+        returns with the transfer in flight."""
+        self._count("staged_bytes", trafficwatch.tree_bytes(tree))
+        kind = self._memory_kind() if self._stage_payloads else None
+        if kind is None:
+            # no residency hop on this platform/config — the bytes still
+            # cross when the worker consumes them, so account them here
+            trafficwatch.tree(tag, tree, channel=self.name, tier=self.tier)
+            return tree
+        from repro.distributed.offload import stage_to_host
+        return stage_to_host(tree, kind=kind, tag=tag,
+                             channel=self.name, tier=self.tier)
+
+    def fetch(self, handle):
+        """Host-tier handles are the staged trees themselves."""
+        return handle
+
+    def upload(self, tree, sharding=None, tag: str = "upload"):
+        """Asynchronous host->device upload of `tree`. `sharding` is a
+        matching pytree of NamedShardings (each leaf is device_put onto
+        its target — a no-op when already resident there) or None (bytes
+        accounted, placement left to the consuming program)."""
+        self._count("uploaded_bytes", trafficwatch.tree_bytes(tree))
+        trafficwatch.tree(tag, tree, channel=self.name, tier=self.tier)
+        if sharding is None:
+            return tree
+        return jax.tree.map(jax.device_put, tree, sharding)
+
+    def drain(self) -> None:
+        """Nothing resident in colder tiers; transfers settle with XLA."""
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"name": self.name, "tier": self.tier, **dict(self._ctr)}

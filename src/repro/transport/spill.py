@@ -1,0 +1,270 @@
+"""`SpillChannel`: a host tier with a bounded DRAM budget backed by a
+simulated-NVMe file tier (MLP-Offload's multi-level offloading).
+
+Staged payloads enter a FIFO ledger of *segments*. While the resident
+(host-DRAM) footprint exceeds `budget_bytes`, the **coldest committed**
+segments are evicted: their leaves are serialized to one spill file each
+(the simulated NVMe tier — raw bytes + shape/dtype metadata, bitwise
+round-trip) and the host arrays dropped. `fetch` restores a spilled
+segment transparently; `drain` restores everything still on the file
+tier and removes the spill directory.
+
+Zero-sync contract: eviction only ever touches segments whose transfers
+have already committed (`is_ready()` on every leaf) — a segment still in
+flight is skipped rather than waited on, temporarily tolerating an
+over-budget ledger. The driver thread therefore never blocks on a
+device value, and the serialize + file write runs on a dedicated
+background writer thread (the driver only claims the victim and
+enqueues it), so the device dispatch loop never waits on the disk
+either (syncwatch-verified in tests/test_transport.py). A consumer that
+races a claimed segment waits on the channel's condition variable until
+the writer publishes the file (or, on a write error, republishes the
+in-memory leaves — a failed spill degrades to host residency, never to
+data loss). Spill writes/reads are byte-accounted by
+`telemetry.trafficwatch` under "spill_write"/"spill_read" on the "nvme"
+tier, so `bench_traffic` attributes the extra tier traffic alongside
+the PCIe wire bytes.
+
+In the steady-state runtime the host worker consumes each staged window
+within a step or two, so with a sane budget nothing spills; the file
+tier absorbs exactly the backlog a lagging host optimizer would
+otherwise pile into DRAM — the failure mode MLP-Offload's capacity
+tiering exists for.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import queue
+import tempfile
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.telemetry import trafficwatch
+from repro.transport.host import HostChannel
+
+
+def _is_ready(x) -> bool:
+    try:
+        return bool(x.is_ready())
+    except AttributeError:
+        return True      # numpy / python scalars: nothing in flight
+
+
+class _Segment:
+    __slots__ = ("seq", "leaves", "treedef", "nbytes", "path")
+
+    def __init__(self, seq, leaves, treedef, nbytes):
+        self.seq = seq
+        self.leaves = leaves          # None once spilled
+        self.treedef = treedef
+        self.nbytes = nbytes
+        self.path: Optional[str] = None
+
+
+class _SpillHandle:
+    """Opaque staged-payload handle (ledger key)."""
+    __slots__ = ("seq",)
+
+    def __init__(self, seq: int):
+        self.seq = seq
+
+
+class SpillChannel(HostChannel):
+    """Bounded-host-memory tier spilling cold segments to a file tier."""
+
+    def __init__(self, zcfg=None, *, budget_bytes: int = 256 << 20,
+                 spill_dir: Optional[str] = None, name: str = "spill",
+                 **kw):
+        super().__init__(zcfg, name=name, **kw)
+        self.budget_bytes = int(budget_bytes)
+        self._dir = spill_dir
+        self._ledger: dict[int, _Segment] = {}
+        self._order: list[int] = []            # FIFO (coldest first)
+        self._seq = 0
+        self._resident = 0
+        # eviction hand-off: a segment mid-spill has leaves=None AND
+        # path=None (claimed, write in flight on the writer thread);
+        # consumers wait on this condition until the writer publishes
+        # the path (or republishes the leaves on a write error)
+        self._cond = threading.Condition(self._lock)
+        self._wq: Optional[queue.Queue] = None    # lazily-started writer
+        self._writer: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def _spill_path(self, seq: int) -> str:
+        if self._dir is None:
+            self._dir = tempfile.mkdtemp(prefix="zenflow-spill-")
+        return os.path.join(self._dir, f"seg-{seq:08d}.bin")
+
+    @staticmethod
+    def _serialize(leaves) -> bytes:
+        out = []
+        for x in leaves:
+            if hasattr(x, "dtype"):
+                a = np.asarray(x)
+                out.append(("arr", a.shape, a.dtype, a.tobytes()))
+            else:
+                out.append(("obj", None, None, x))
+        return pickle.dumps(out)
+
+    @staticmethod
+    def _deserialize(blob: bytes):
+        leaves = []
+        for kind, shape, dtype, data in pickle.loads(blob):
+            if kind == "arr":
+                leaves.append(np.frombuffer(data, dtype=dtype).reshape(shape))
+            else:
+                leaves.append(data)
+        return leaves
+
+    def _writer_loop(self) -> None:
+        """Background spill writer: serializes claimed segments to the
+        file tier and publishes the path; on any write error the leaves
+        are republished to host memory (never dropped)."""
+        while True:
+            seg, leaves, path = self._wq.get()
+            try:
+                blob = self._serialize(leaves)
+                with open(path, "wb") as f:
+                    f.write(blob)
+                with self._cond:
+                    seg.path = path
+                    self._cond.notify_all()
+                self._count("spilled_bytes", seg.nbytes)
+                trafficwatch.record("spill_write", seg.nbytes,
+                                    channel=self.name, tier="nvme")
+            except BaseException:
+                with self._cond:
+                    seg.leaves = leaves
+                    self._resident += seg.nbytes
+                    self._cond.notify_all()
+
+    def _submit_spill(self, seg: _Segment, leaves) -> None:
+        if self._writer is None:
+            self._wq = queue.Queue()
+            self._writer = threading.Thread(target=self._writer_loop,
+                                            daemon=True)
+            self._writer.start()
+        self._wq.put((seg, leaves, self._spill_path(seg.seq)))
+
+    def _evict_cold(self) -> None:
+        """Claim coldest committed segments until back under budget and
+        hand them to the writer thread. Never blocks the caller:
+        in-flight segments are skipped, not awaited, and the disk write
+        happens off this thread."""
+        while True:
+            with self._lock:
+                if self._resident <= self.budget_bytes:
+                    return
+                victim = None
+                for seq in self._order:
+                    seg = self._ledger[seq]
+                    if seg.leaves is not None \
+                            and all(_is_ready(x) for x in seg.leaves):
+                        victim = seg
+                        break
+                if victim is None:
+                    return              # everything cold is in flight
+                leaves, victim.leaves = victim.leaves, None
+                self._resident -= victim.nbytes
+            self._submit_spill(victim, leaves)
+
+    def _settle(self) -> None:
+        """Block until no claimed segment is still with the writer
+        (drain/testing helper — never on the steady-state path)."""
+        with self._cond:
+            while any(s.leaves is None and s.path is None
+                      for s in self._ledger.values()):
+                self._cond.wait()
+
+    # ------------------------------------------------------------------
+    def stage(self, tree, tag: str = "stage_to_host"):
+        staged = super().stage(tree, tag)
+        leaves, treedef = jax.tree_util.tree_flatten(staged)
+        nbytes = trafficwatch.tree_bytes(staged)
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+            self._ledger[seq] = _Segment(seq, leaves, treedef, nbytes)
+            self._order.append(seq)
+            self._resident += nbytes
+        self._evict_cold()
+        return _SpillHandle(seq)
+
+    def fetch(self, handle):
+        """Materialize a staged segment, restoring from the file tier if
+        it was evicted (bitwise round-trip)."""
+        if not isinstance(handle, _SpillHandle):
+            return handle              # plain trees pass through
+        with self._cond:
+            seg = self._ledger.pop(handle.seq)
+            self._order.remove(handle.seq)
+            # hand-off: leaves=None with no path means another thread
+            # owns the bytes right now (evictor writing the file, or
+            # drain restoring it) — wait for it to publish
+            while seg.leaves is None and seg.path is None:
+                self._cond.wait()
+            if seg.leaves is not None:
+                self._resident -= seg.nbytes
+                return jax.tree_util.tree_unflatten(seg.treedef, seg.leaves)
+            path, seg.path = seg.path, None    # claim the file
+        # spilled: read back outside the lock (the file is now ours)
+        with open(path, "rb") as f:
+            leaves = self._deserialize(f.read())
+        os.remove(path)
+        self._count("restored_bytes", seg.nbytes)
+        trafficwatch.record("spill_read", seg.nbytes,
+                            channel=self.name, tier="nvme")
+        return jax.tree_util.tree_unflatten(seg.treedef, leaves)
+
+    def drain(self) -> None:
+        """Restore every still-spilled segment to host memory and remove
+        the spill directory (end of run / checkpoint). Safe against a
+        concurrent worker `fetch`: each file is claimed under the lock
+        (path=None) before reading, and a fetch that races the claim
+        waits on the condition until the restored leaves are published.
+        """
+        self._settle()
+        with self._cond:
+            claimed = []
+            for seg in self._ledger.values():
+                if seg.leaves is None and seg.path is not None:
+                    claimed.append((seg, seg.path))
+                    seg.path = None            # claim the file
+        for seg, path in claimed:
+            with open(path, "rb") as f:
+                leaves = self._deserialize(f.read())
+            os.remove(path)
+            self._count("restored_bytes", seg.nbytes)
+            trafficwatch.record("spill_read", seg.nbytes,
+                                channel=self.name, tier="nvme")
+            with self._cond:
+                seg.leaves = leaves
+                self._resident += seg.nbytes
+                self._cond.notify_all()
+        if self._dir is not None and os.path.isdir(self._dir):
+            try:
+                # only succeeds when empty; a segment claimed by a
+                # concurrent fetch may still own a file here (its write
+                # can land between any emptiness check and the rmdir) —
+                # leave the directory for the next drain/close to reap
+                os.rmdir(self._dir)
+                self._dir = None
+            except OSError:
+                pass
+
+    def stats(self) -> dict:
+        out = super().stats()
+        with self._lock:
+            out.update({
+                "budget_bytes": self.budget_bytes,
+                "resident_bytes": self._resident,
+                "ledger_entries": len(self._ledger),
+                "spilled_entries": sum(1 for s in self._ledger.values()
+                                       if s.leaves is None),
+            })
+        return out

@@ -1,0 +1,109 @@
+"""`StripedChannel`: round-robins payload segments across N sub-channels
+(MLP-Offload's multi-path offloading).
+
+A single offload stream saturates one PCIe path while any other
+device<->host links (a second root complex, NVLink-to-host, a GDS lane)
+sit idle. `StripedChannel` models the multi-path fix at the transport
+seam: every staged payload is flattened into its leaf segments and leaf
+i goes to sub-channel (rr + i) % N, with the round-robin cursor rotating
+across calls so unequal trees still balance long-run. Each sub-channel
+stages/accounts its own stripe (trafficwatch shows per-stripe bytes
+under "<name>/<i>"), and `fetch` reassembles the original tree from the
+stripes — their union is the full payload, bit for bit
+(tests/test_transport.py). Uploads stripe the same way.
+
+Sub-channels default to `HostChannel`s; pass `sub_factory` to build the
+stripes from any other tier (e.g. spill-backed stripes = multi-path AND
+multi-level, the full MLP-Offload picture). The codec is the striped
+channel's own (striping moves bytes, it never re-encodes them).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from repro.core import wire
+from repro.transport.host import CodecHooks, HostChannel
+
+
+class _StripedHandle:
+    """Treedef + per-leaf (sub-channel index, sub-handle) stripes."""
+    __slots__ = ("treedef", "parts")
+
+    def __init__(self, treedef, parts):
+        self.treedef = treedef
+        self.parts = parts            # list of (sub_index, sub_handle)
+
+
+class StripedChannel(CodecHooks):
+    """Multi-path offload channel over N round-robin stripes."""
+
+    tier = "host"
+
+    def __init__(self, zcfg=None, *, ways: int = 2,
+                 sub_factory: Optional[Callable[[int], object]] = None,
+                 name: str = "striped", **kw):
+        """`ways` sub-channels; `sub_factory(i) -> channel` overrides the
+        default `HostChannel` stripes (extra `**kw` — `stage_payloads`,
+        `kind` — reach the default stripes)."""
+        if ways < 1:
+            raise ValueError(f"StripedChannel needs ways >= 1, got {ways}")
+        self.name = name
+        self.ways = ways
+        self.codec = wire.codec_for(zcfg) if zcfg is not None \
+            else wire.WireCodec()
+        if sub_factory is None:
+            sub_factory = lambda i: HostChannel(zcfg, name=f"{name}/{i}",
+                                                **kw)
+        self.subs = [sub_factory(i) for i in range(ways)]
+        self._rr = 0
+
+    # -- transfers (codec hooks inherited from CodecHooks) ---------------
+    def stage(self, tree, tag: str = "stage_to_host"):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        parts = []
+        rr = self._rr
+        for i, leaf in enumerate(leaves):
+            k = (rr + i) % self.ways
+            parts.append((k, self.subs[k].stage(leaf, tag)))
+        self._rr = (rr + len(leaves)) % self.ways
+        return _StripedHandle(treedef, parts)
+
+    def fetch(self, handle):
+        if not isinstance(handle, _StripedHandle):
+            return handle
+        leaves = [self.subs[k].fetch(h) for k, h in handle.parts]
+        return jax.tree_util.tree_unflatten(handle.treedef, leaves)
+
+    def upload(self, tree, sharding=None, tag: str = "upload"):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if sharding is None:
+            shards = [None] * len(leaves)
+        else:
+            shards = jax.tree_util.tree_leaves(sharding)
+            if len(shards) != len(leaves):
+                # a prefix/partial sharding tree would silently misalign
+                # the zip below — refuse it (upload contract: None or a
+                # leaf-for-leaf match; see transport/__init__.py)
+                raise ValueError(
+                    f"upload sharding must match tree leaf-for-leaf: "
+                    f"{len(shards)} shardings for {len(leaves)} leaves")
+        rr = self._rr
+        out = [self.subs[(rr + i) % self.ways].upload(x, s, tag)
+               for i, (x, s) in enumerate(zip(leaves, shards))]
+        self._rr = (rr + len(leaves)) % self.ways
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def drain(self) -> None:
+        for sub in self.subs:
+            sub.drain()
+
+    def stats(self) -> dict:
+        subs = [sub.stats() for sub in self.subs]
+        return {
+            "name": self.name, "tier": self.tier, "ways": self.ways,
+            "staged_bytes": sum(s.get("staged_bytes", 0) for s in subs),
+            "uploaded_bytes": sum(s.get("uploaded_bytes", 0) for s in subs),
+            "subchannels": subs,
+        }

@@ -1,0 +1,343 @@
+"""Transport layer (ISSUE 5): OffloadChannel semantics per tier —
+registry, FIFO ordering/no-drop, SpillChannel budget eviction + bitwise
+restore, StripedChannel stripe completeness, engine bit-parity and the
+zero-sync steady state over every stock tier, and 100% channel/tier
+byte attribution in trafficwatch."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import wire
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.data import make_train_stream
+from repro.engine import Engine
+from repro.telemetry import syncwatch, trafficwatch
+from repro.transport import (HostChannel, SpillChannel, StripedChannel,
+                             available_transports, make_transport,
+                             register_transport)
+
+TIERS = ("host", "spill", "striped")
+# engine-level sweeps add an eviction-pressure spill variant: a 1-byte
+# budget makes EVERY committed staged segment round-trip the file tier
+# while the host worker consumes concurrently (the backlog scenario)
+ENGINE_TIERS = TIERS + ("spill-tiny",)
+
+
+def _engine_transport(tier: str, zcfg):
+    """Map a sweep name to a `transport=` argument for Engine."""
+    if tier == "spill-tiny":
+        return SpillChannel(zcfg, budget_bytes=1)
+    return tier
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced_config(get_config("llama2-7b"))
+
+
+@pytest.fixture(scope="module")
+def zcfg():
+    return ZenFlowConfig(topk_ratio=0.1, update_interval=2,
+                         refresh_interval=4, lr=1e-3, use_kernels="never")
+
+
+def _batches(cfg, n, seed=0):
+    loader = make_train_stream(cfg.vocab, 32, 8, seed=seed)
+    return [{k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+            for _ in range(n)]
+
+
+def _tree(i: int):
+    """A distinct, mixed-dtype payload tree per sequence number."""
+    return {"g": jnp.full((4, 8), float(i), jnp.bfloat16),
+            "idx": jnp.arange(i, i + 5, dtype=jnp.int32),
+            "flag": jnp.asarray(i % 2 == 0)}
+
+
+def _assert_trees_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        ax, ay = np.asarray(x), np.asarray(y)
+        assert ax.dtype == ay.dtype
+        np.testing.assert_array_equal(ax, ay)
+
+
+def _mk_channel(tier: str, zcfg, **kw):
+    if tier == "spill":
+        kw.setdefault("budget_bytes", 1)     # force eviction pressure
+    if tier == "striped":
+        kw.setdefault("ways", 3)
+    return make_transport(tier, zcfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+
+
+def test_registry_has_stock_tiers():
+    assert set(TIERS) <= set(available_transports())
+
+
+def test_make_transport_unknown_name_lists_available():
+    with pytest.raises(KeyError, match="unknown transport"):
+        make_transport("warp")
+
+
+def test_register_custom_transport(zcfg):
+    class TaggedHost(HostChannel):
+        pass
+
+    register_transport("tagged", lambda z, **kw: TaggedHost(
+        z, name="tagged", **kw))
+    try:
+        ch = make_transport("tagged", zcfg)
+        assert ch.name == "tagged"
+        assert ch.codec.wire_dtype == zcfg.wire_dtype
+    finally:
+        from repro import transport
+        transport._REGISTRY.pop("tagged")
+
+
+def test_codec_hooks_match_stock_wire():
+    zc = ZenFlowConfig(wire_dtype="int8", use_kernels="never")
+    ch = make_transport("host", zc)
+    assert ch.error_feedback is True
+    rows = jnp.asarray(np.random.default_rng(0).normal(size=(6, 16)),
+                       jnp.float32)
+    enc = ch.encode(rows)
+    ref = wire.encode_rows(rows, "int8", "never")
+    _assert_trees_bitwise(enc, ref)
+    _assert_trees_bitwise(ch.decode(enc), wire.decode_rows(ref, "never"))
+
+
+# ---------------------------------------------------------------------------
+# FIFO ordering / no-drop (the contract the pending slot relies on)
+
+
+@pytest.mark.parametrize("tier", TIERS)
+def test_fifo_stage_fetch_never_drops_or_reorders(tier, zcfg):
+    """Stage N distinct payloads, fetch in FIFO order (the host worker's
+    consumption pattern): every payload comes back bitwise intact, in
+    order — no drop, no overwrite, even under spill eviction pressure."""
+    ch = _mk_channel(tier, zcfg)
+    trees = [_tree(i) for i in range(8)]
+    handles = []
+    for t in trees:
+        jax.block_until_ready(t)        # make every segment evictable
+        handles.append(ch.stage(t, tag="host_bound"))
+    for t, h in zip(trees, handles):
+        _assert_trees_bitwise(ch.fetch(h), t)
+    ch.drain()
+
+
+# ---------------------------------------------------------------------------
+# SpillChannel: budget eviction + restore round-trip
+
+
+def test_spill_budget_eviction_and_bitwise_restore(tmp_path, zcfg):
+    ch = SpillChannel(zcfg, budget_bytes=1, spill_dir=str(tmp_path))
+    trafficwatch.reset()
+    t0, t1 = _tree(3), _tree(4)
+    jax.block_until_ready((t0, t1))
+    h0 = ch.stage(t0)
+    h1 = ch.stage(t1)                    # pushes t0 (committed) out
+    ch._settle()                         # let the background writer land
+    st = ch.stats()
+    assert st["spilled_entries"] >= 1
+    assert st["spilled_bytes"] >= trafficwatch.tree_bytes(t0)
+    assert trafficwatch.counts()["by_tier"].get("nvme", 0) > 0
+    assert os.listdir(str(tmp_path))     # segments live on the file tier
+    _assert_trees_bitwise(ch.fetch(h0), t0)   # restored from file
+    _assert_trees_bitwise(ch.fetch(h1), t1)
+    final = ch.stats()
+    assert final["ledger_entries"] == 0
+    assert final["restored_bytes"] == final["spilled_bytes"]
+    ch.drain()
+
+
+def test_spill_fetch_roundtrips_regardless_of_commit_state(zcfg):
+    """Eviction only considers committed segments (skipped, never
+    awaited); whether or not the leaf committed before the budget check,
+    fetch must round-trip bitwise."""
+    ch = SpillChannel(zcfg, budget_bytes=1)
+    # leaf from an async computation we never wait on before staging
+    x = jnp.ones((64, 64)) @ jnp.ones((64, 64))
+    h = ch.stage({"x": x})
+    _assert_trees_bitwise(ch.fetch(h), {"x": x})
+    ch.drain()
+
+
+def test_spill_drain_restores_file_tier(tmp_path, zcfg):
+    ch = SpillChannel(zcfg, budget_bytes=1, spill_dir=str(tmp_path))
+    trees = [_tree(i) for i in range(4)]
+    handles = []
+    for t in trees:
+        jax.block_until_ready(t)
+        handles.append(ch.stage(t))
+    assert ch.stats()["spilled_entries"] >= 1    # claimed synchronously
+    ch.drain()
+    assert ch.stats()["spilled_entries"] == 0
+    assert not os.path.exists(str(tmp_path)) or not os.listdir(str(tmp_path))
+    for t, h in zip(trees, handles):
+        _assert_trees_bitwise(ch.fetch(h), t)
+
+
+# ---------------------------------------------------------------------------
+# StripedChannel: multi-path completeness
+
+
+def test_striped_union_of_stripes_is_full_tree_bitwise(zcfg):
+    trafficwatch.reset()
+    ch = StripedChannel(zcfg, ways=3)
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32),
+                  "d": jnp.full((2, 2), 7.0, jnp.bfloat16)},
+            "e": jnp.asarray(True)}
+    h = ch.stage(tree, tag="host_bound")
+    _assert_trees_bitwise(ch.fetch(h), tree)
+    st = ch.stats()
+    # every stripe carried part of the payload; together they carry ALL
+    per_sub = [s["staged_bytes"] for s in st["subchannels"]]
+    assert all(b > 0 for b in per_sub)
+    assert sum(per_sub) == trafficwatch.tree_bytes(tree)
+    by_ch = trafficwatch.counts()["by_channel"]
+    assert sum(by_ch.get(f"striped/{i}", 0) for i in range(3)) \
+        == trafficwatch.tree_bytes(tree)
+
+
+def test_striped_round_robin_rotates_across_calls(zcfg):
+    ch = StripedChannel(zcfg, ways=2)
+    h0 = ch.stage(jnp.zeros(3))          # single leaf -> sub 0
+    h1 = ch.stage(jnp.ones(3))           # cursor rotated -> sub 1
+    assert h0.parts[0][0] != h1.parts[0][0]
+    subs = ch.stats()["subchannels"]
+    assert all(s["staged_bytes"] > 0 for s in subs)
+
+
+def test_striped_upload_preserves_tree(zcfg):
+    ch = StripedChannel(zcfg, ways=2)
+    tree = {"rows": jnp.full((4, 4), 2.5), "idx": jnp.arange(4)}
+    out = ch.upload(tree, sharding=None, tag="pending_upload")
+    _assert_trees_bitwise(out, tree)
+    assert ch.stats()["uploaded_bytes"] == trafficwatch.tree_bytes(tree)
+
+
+def test_striped_upload_rejects_misaligned_sharding(zcfg):
+    """The upload contract is None or a leaf-for-leaf sharding match; a
+    partial tree would silently misroute leaves, so it must raise."""
+    ch = StripedChannel(zcfg, ways=2)
+    tree = {"rows": jnp.zeros((4, 4)), "idx": jnp.arange(4)}
+    with pytest.raises(ValueError, match="leaf-for-leaf"):
+        ch.upload(tree, sharding={"rows": None, "idx": None})
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: bit-parity, zero-sync steady state, attribution
+
+
+@pytest.fixture(scope="module")
+def host_reference(cfg, zcfg):
+    """Final params + losses of the async engine on the stock host tier."""
+    batches = _batches(cfg, 8)
+    eng = Engine.from_config(cfg, zcfg, backend="async", transport="host")
+    eng.init(jax.random.PRNGKey(0))
+    losses = [float(eng.step(b)["loss"]) for b in batches]
+    eng.flush()
+    params = jax.tree.leaves(eng.state_dict()["backend"]["params"])
+    params = [np.asarray(p) for p in params]
+    eng.close()
+    return batches, losses, params
+
+
+@pytest.mark.parametrize("tier", ("spill", "striped", "spill-tiny"))
+def test_engine_bit_parity_across_tiers(tier, cfg, zcfg, host_reference):
+    """spill / striped move the SAME bytes through different tiers: the
+    async pipeline must produce bit-identical params and losses vs the
+    behavior-identical host tier (XLA:CPU) — including under constant
+    eviction pressure (spill-tiny: every committed segment round-trips
+    the file tier while the worker fetches concurrently)."""
+    batches, ref_losses, ref_params = host_reference
+    eng = Engine.from_config(cfg, zcfg, backend="async",
+                             transport=_engine_transport(tier, zcfg))
+    eng.init(jax.random.PRNGKey(0))
+    losses = [float(eng.step(b)["loss"]) for b in batches]
+    eng.flush()
+    got = [np.asarray(p) for p in
+           jax.tree.leaves(eng.state_dict()["backend"]["params"])]
+    eng.close()
+    assert losses == ref_losses
+    assert len(got) == len(ref_params)
+    for a, b in zip(ref_params, got):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("tier", ENGINE_TIERS)
+def test_zero_steady_state_syncs_on_every_tier(tier, cfg):
+    """The zero-sync contract is tier-independent: no stock channel may
+    add a blocking host sync to the steady-state step — eviction skips
+    uncommitted segments instead of waiting (spill-tiny)."""
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=8,
+                         refresh_interval=8, lr=1e-3, use_kernels="never")
+    eng = Engine.from_config(cfg, zcfg, backend="async",
+                             transport=_engine_transport(tier, zcfg))
+    eng.init(jax.random.PRNGKey(0))
+    batches = _batches(cfg, 7)
+    for b in batches[:3]:                  # compile + settle (t<S)
+        eng.step(b)
+    syncwatch.reset()
+    for b in batches[3:]:                  # t=4..7: all steady-state
+        m = eng.step(b)
+        assert m["boundary"] is False
+    assert syncwatch.total() == 0, (tier, syncwatch.counts())
+    eng.flush()
+    eng.close()
+
+
+@pytest.mark.parametrize("tier", ENGINE_TIERS)
+def test_traffic_fully_attributed_on_every_tier(tier, cfg, zcfg):
+    """100% of staged/uploaded bytes name a channel and a tier — the
+    bench_traffic attribution contract (spill-tiny additionally shows
+    "nvme"-tier bytes for its file-tier round-trips)."""
+    trafficwatch.reset()
+    eng = Engine.from_config(cfg, zcfg, backend="async",
+                             transport=_engine_transport(tier, zcfg))
+    eng.init(jax.random.PRNGKey(0))
+    for b in _batches(cfg, 5):
+        eng.step(b)
+    eng.flush()
+    eng.close()
+    tc = trafficwatch.counts()
+    assert tc["total_bytes"] > 0
+    assert tc["unattributed_bytes"] == 0, tc
+    assert sum(tc["by_channel"].values()) == tc["total_bytes"]
+    assert sum(tc["by_tier"].values()) == tc["total_bytes"]
+    assert tc["by_tag"].get("host_bound", 0) > 0
+
+
+def test_engine_forwards_transport_to_runtime(cfg, zcfg):
+    eng = Engine.from_config(cfg, zcfg, backend="async", transport="spill")
+    assert isinstance(eng.backend.rt.channel, SpillChannel)
+    assert eng.backend.rt.channel.codec.wire_dtype == zcfg.wire_dtype
+    eng.close()
+
+
+def test_sync_backend_accepts_transport_codec(cfg, zcfg):
+    """Single-program backends take the transport's codec hook; the host
+    tier's stock codec keeps them bit-identical to no transport at all."""
+    batches = _batches(cfg, 4)
+    finals = {}
+    for tr in (None, "host"):
+        eng = Engine.from_config(cfg, zcfg, backend="sync", transport=tr)
+        eng.init(jax.random.PRNGKey(0))
+        for b in batches:
+            eng.step(b)
+        finals[tr] = [np.asarray(p) for p in
+                      jax.tree.leaves(eng.backend.params)]
+        eng.close()
+    for a, b in zip(finals[None], finals["host"]):
+        np.testing.assert_array_equal(a, b)
