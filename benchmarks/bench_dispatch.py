@@ -12,7 +12,19 @@ Measures, per execution backend, on a real reduced `opt-350m` run:
     (zero-sync dispatch returns while the device still computes);
   * mean step wall time (one `block_until_ready` at the end, so the
     pipeline is never serialized by the measurement itself);
-  * stall / window-extension counters (async).
+  * stall / window-extension counters (async);
+  * host-bound transfer dispatches and fresh buffer allocations per
+    steady-state step (counted by `repro.telemetry.trafficwatch`). The
+    coalesced async backend must measure <= 2 transfers/step and 0
+    allocations/step; `async_uncoalesced` (RuntimeConfig(coalesce=False))
+    measures the per-leaf dispatch count for the coalescing factor;
+  * bitwise parity of the coalesced vs per-leaf wire, measured on a
+    DEDICATED deterministic pair of short runs with straggler window
+    extension disabled — the production runs above absorb stragglers by
+    extending windows on wall-clock timing, so their trajectories can
+    legitimately differ run-to-run; with extensions off the boundary
+    stalls instead, the schedule is timing-independent, and every
+    per-step loss must match bit for bit.
 
 Writes `BENCH_dispatch.json` — the seed of the repo's perf trajectory —
 and doubles as a row source for `benchmarks/run.py` (quick mode).
@@ -39,19 +51,23 @@ def run_backend(backend: str, cfg, zcfg, steps: int, seq: int, batch: int,
                 seed: int = 0) -> dict:
     """Train `steps` steps; return timing + sync statistics.
 
-    `backend` is an Engine registry name, or "async_blocking" for the
-    async backend under the legacy blocking-metrics contract.
+    `backend` is an Engine registry name, "async_blocking" for the
+    async backend under the legacy blocking-metrics contract, or
+    "async_uncoalesced" for per-leaf (uncoalesced) transfers.
     """
     from repro.data import make_train_stream
     from repro.engine import Engine
     from repro.runtime import RuntimeConfig
-    from repro.telemetry import syncwatch
+    from repro.telemetry import syncwatch, trafficwatch
 
     rcfg = None
     name = backend
     if backend == "async_blocking":
         name = "async"
         rcfg = RuntimeConfig(blocking_metrics=True)
+    elif backend == "async_uncoalesced":
+        name = "async"
+        rcfg = RuntimeConfig(coalesce=False)
     eng = Engine.from_config(cfg, zcfg, backend=name, rcfg=rcfg)
     eng.init(jax.random.PRNGKey(seed))
     loader = make_train_stream(cfg.vocab, seq, batch, seed=seed, prefetch=2)
@@ -71,19 +87,31 @@ def run_backend(backend: str, cfg, zcfg, steps: int, seq: int, batch: int,
     jax.block_until_ready(m["loss"])
 
     syncwatch.reset()
+    trafficwatch.reset()
     dispatch, steady_syncs, boundary_syncs, stalls = [], [], [], []
+    steady_transfers, steady_allocs = [], []
+
+    def _tw():
+        c = trafficwatch.counts()
+        return (c["transfers_by_tag"].get("host_bound", 0),
+                c["allocations"])
+
     t_run = time.perf_counter()
     for _ in range(steps):
         b = loader.next_batch()
         before = syncwatch.total()
+        tx0, al0 = _tw()
         t0 = time.perf_counter()
         m = eng.step(b)
         dispatch.append(time.perf_counter() - t0)
         delta = syncwatch.total() - before
+        tx1, al1 = _tw()
         # async backends report the boundary in Python; single-program
         # backends have no boundary distinction — count every step
         if isinstance(m.get("boundary"), bool) and not m["boundary"]:
             steady_syncs.append(delta)
+            steady_transfers.append(tx1 - tx0)
+            steady_allocs.append(al1 - al0)
         else:
             boundary_syncs.append(delta)
         if isinstance(m.get("stall"), float):
@@ -93,6 +121,7 @@ def run_backend(backend: str, cfg, zcfg, steps: int, seq: int, batch: int,
     eng.flush()
     final_loss = float(m["loss"])
     sync_counts = syncwatch.counts()
+    traffic = trafficwatch.counts()
     out = {
         "steps": steps,
         "mean_step_ms": wall / steps * 1e3,
@@ -106,6 +135,15 @@ def run_backend(backend: str, cfg, zcfg, steps: int, seq: int, batch: int,
                                     if boundary_syncs else 0.0),
         "total_syncs": sync_counts["total"],
         "syncs_by_tag": sync_counts["by_tag"],
+        # host-bound transfer dispatches + fresh buffer allocations per
+        # steady step: the transfer-coalescing acceptance counters
+        "steady_transfers_per_step": (float(np.mean(steady_transfers))
+                                      if steady_transfers else 0.0),
+        "steady_allocs_per_step": (float(np.mean(steady_allocs))
+                                   if steady_allocs else 0.0),
+        "transfers_by_tag": traffic["transfers_by_tag"],
+        "allocations": traffic["allocations"],
+        "alloc_bytes": traffic["alloc_bytes"],
         "mean_stall_ms": float(np.mean(stalls)) * 1e3 if stalls else 0.0,
         "final_loss": final_loss,
     }
@@ -115,6 +153,30 @@ def run_backend(backend: str, cfg, zcfg, steps: int, seq: int, batch: int,
     if hasattr(loader, "close"):
         loader.close()
     return out
+
+
+def parity_losses(coalesce: bool, cfg, zcfg, steps: int, seq: int,
+                  batch: int, seed: int = 0) -> list:
+    """Per-step losses of a deterministic async run (straggler window
+    extension OFF, so the boundary schedule cannot depend on wall-clock
+    timing). Bitwise parity of the coalesced wire means the coalesce=True
+    and coalesce=False lists are identical floats."""
+    from repro.data import make_train_stream
+    from repro.engine import Engine
+    from repro.runtime import RuntimeConfig
+
+    rcfg = RuntimeConfig(coalesce=coalesce,
+                         straggler_window_extension=False)
+    eng = Engine.from_config(cfg, zcfg, backend="async", rcfg=rcfg)
+    eng.init(jax.random.PRNGKey(seed))
+    loader = make_train_stream(cfg.vocab, seq, batch, seed=seed)
+    losses = [float(eng.step(loader.next_batch())["loss"])
+              for _ in range(steps)]
+    eng.flush()
+    eng.close()
+    if hasattr(loader, "close"):
+        loader.close()
+    return losses
 
 
 def run(steps: int = 100, arch: str = "opt-350m", seq: int = 64,
@@ -129,10 +191,17 @@ def run(steps: int = 100, arch: str = "opt-350m", seq: int = 64,
                          refresh_interval=16, lr=1e-3, use_kernels="never")
 
     backends = {}
-    for b in ("async", "async_blocking", "sync", "baseline"):
+    for b in ("async", "async_uncoalesced", "async_blocking", "sync",
+              "baseline"):
         backends[b] = run_backend(b, cfg, zcfg, steps, seq, batch)
 
+    # deterministic parity pair: 2 full windows + a settle step each
+    p_steps = 2 * zcfg.update_interval + 1
+    p_on = parity_losses(True, cfg, zcfg, p_steps, seq, batch)
+    p_off = parity_losses(False, cfg, zcfg, p_steps, seq, batch)
+
     az, lb = backends["async"], backends["async_blocking"]
+    uz = backends["async_uncoalesced"]
     report = {
         "bench": "dispatch",
         "arch": f"{arch} (reduced)",
@@ -152,7 +221,21 @@ def run(steps: int = 100, arch: str = "opt-350m", seq: int = 64,
                 / max(az["mean_step_ms"], 1e-9),
             "dispatch_fraction_of_step":
                 az["mean_dispatch_ms"] / max(az["mean_step_ms"], 1e-9),
+            # transfer coalescing (ISSUE 7): one packed dispatch per
+            # steady step instead of per-leaf device_puts, zero fresh
+            # allocations after pool warmup, bitwise training parity
+            "async_steady_transfers_per_step":
+                az["steady_transfers_per_step"],
+            "uncoalesced_steady_transfers_per_step":
+                uz["steady_transfers_per_step"],
+            "transfer_coalescing_factor":
+                uz["steady_transfers_per_step"]
+                / max(az["steady_transfers_per_step"], 1e-9),
+            "async_steady_allocs_per_step": az["steady_allocs_per_step"],
+            "coalesce_loss_parity": p_on == p_off,
         },
+        "parity": {"steps": p_steps, "coalesced_losses": p_on,
+                   "uncoalesced_losses": p_off},
     }
     return report
 
@@ -176,6 +259,12 @@ def bench_rows(quick: bool = True):
          round(h["step_time_speedup_vs_blocking"], 4)),
         ("dispatch_speedup_vs_sync", 0.0,
          round(h["step_time_speedup_vs_sync"], 4)),
+        ("dispatch_async_steady_transfers_per_step", 0.0,
+         h["async_steady_transfers_per_step"]),
+        ("dispatch_transfer_coalescing_factor", 0.0,
+         round(h["transfer_coalescing_factor"], 2)),
+        ("dispatch_async_steady_allocs_per_step", 0.0,
+         h["async_steady_allocs_per_step"]),
     ]
 
 
@@ -204,9 +293,25 @@ def main() -> None:
           f"{h['step_time_speedup_vs_blocking']:.3f}x")
     print(f"step-time speedup vs sync:      "
           f"{h['step_time_speedup_vs_sync']:.3f}x")
+    print(f"steady transfers/step:          "
+          f"{h['async_steady_transfers_per_step']:.2f} coalesced vs "
+          f"{h['uncoalesced_steady_transfers_per_step']:.2f} per-leaf "
+          f"({h['transfer_coalescing_factor']:.1f}x fewer)")
+    print(f"steady allocations/step:        "
+          f"{h['async_steady_allocs_per_step']:.2f}")
+    print(f"coalesce loss parity:           {h['coalesce_loss_parity']}")
     if h["async_steady_syncs_per_step"] != 0.0:
         raise SystemExit("FAIL: steady-state async step performed "
                          "blocking host syncs")
+    if h["async_steady_transfers_per_step"] > 2.0:
+        raise SystemExit("FAIL: coalesced steady step dispatched more "
+                         "than 2 host-bound transfers")
+    if h["async_steady_allocs_per_step"] != 0.0:
+        raise SystemExit("FAIL: steady-state step allocated fresh "
+                         "staging buffers after pool warmup")
+    if not h["coalesce_loss_parity"]:
+        raise SystemExit("FAIL: coalesced and per-leaf deterministic "
+                         "runs diverged (per-step losses differ)")
 
 
 if __name__ == "__main__":

@@ -11,11 +11,18 @@ This gate fails the build when:
 
   * the async steady-state step performs ANY blocking host sync
     (hard invariant, baseline-independent);
+  * the coalesced steady-state step dispatches more than
+    MAX_STEADY_TRANSFERS host-bound transfers, allocates ANY fresh
+    staging buffer after pool warmup, or diverges from the per-leaf
+    wire on the bench's deterministic parity pair — the ISSUE 7
+    transfer-coalescing contract (hard invariants, baseline-independent);
   * a headline ratio regresses more than --tolerance (default 10%)
     below its committed baseline: the int8-vs-fp32 compression ratio
-    (traffic; deterministic byte counts), or the step-time speedup vs
-    the blocking runtime (dispatch; wall-clock-derived, so gated at the
-    wider TIMING_NOISE_TOLERANCE floor — see the constant's comment);
+    (traffic; deterministic byte counts), the transfer-coalescing
+    factor (dispatch; deterministic dispatch counts), or the step-time
+    speedup vs the blocking runtime (dispatch; wall-clock-derived, so
+    gated at the wider TIMING_NOISE_TOLERANCE floor — see the
+    constant's comment);
   * the int8 wire's final loss leaves the fp32 trajectory (hard
     invariant, tolerance recorded in the report itself).
 
@@ -40,9 +47,15 @@ BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 # headline metrics gated as "must not regress > tolerance": ratios, so
 # they are comparable across runner speeds (absolute ms are not gated)
 RATIO_GATES = {
-    "dispatch": ["step_time_speedup_vs_blocking"],
+    "dispatch": ["step_time_speedup_vs_blocking",
+                 "transfer_coalescing_factor"],
     "traffic": ["compression_ratio_int8_vs_fp32"],
 }
+
+# the coalesced steady step ships the packed host_bound buffer plus at
+# most one scalar companion — anything above this means per-leaf
+# dispatch crept back in
+MAX_STEADY_TRANSFERS = 2.0
 
 # wall-clock-derived ratios measured on ~20-step quick runs swing +-15%
 # between identical runs on 2-core CI runners (observed: 0.85..0.98 with
@@ -83,6 +96,20 @@ def check_report(kind: str, current: dict, baseline: dict,
         if syncs is None or syncs > 0:
             errs.append(f"dispatch: async steady-state syncs/step = {syncs} "
                         f"(must be 0)")
+        # ISSUE 7 transfer-coalescing contract. `not (<=)` so a missing/
+        # NaN counter fails instead of slipping past a `>` comparison.
+        tx = cur_h.get("async_steady_transfers_per_step")
+        if tx is None or not (tx <= MAX_STEADY_TRANSFERS):
+            errs.append(f"dispatch: coalesced steady-state host-bound "
+                        f"transfers/step = {tx} "
+                        f"(must be <= {MAX_STEADY_TRANSFERS})")
+        allocs = cur_h.get("async_steady_allocs_per_step")
+        if allocs is None or not (allocs <= 0):
+            errs.append(f"dispatch: steady-state fresh allocations/step = "
+                        f"{allocs} (must be 0 after pool warmup)")
+        if cur_h.get("coalesce_loss_parity") is not True:
+            errs.append("dispatch: coalesced wire diverged from the "
+                        "per-leaf wire on the deterministic parity pair")
     if kind == "traffic":
         syncs = cur_h.get("int8_steady_syncs_per_step")
         if syncs is None or syncs > 0:

@@ -46,23 +46,47 @@ def has_host_placement(ir_text: str) -> bool:
     return any(m in ir_text for m in HOST_PLACEMENT_MARKERS)
 
 
+# host_memory_kind answers per device and never changes within a process
+# (memory kinds are a backend property), but the uncached query walks
+# `addressable_memories()` through the C++ client on EVERY stage/upload —
+# a per-step cost on the hot path. Cache per device; tests that fake
+# devices flush via reset_host_memory_kind_cache().
+_KIND_CACHE: dict = {}
+_KIND_MISS = object()   # sentinel: None is a valid cached answer
+
+
+def reset_host_memory_kind_cache() -> None:
+    """Flush the per-device `host_memory_kind` cache (test hook — e.g.
+    after monkeypatching device objects or backend selection)."""
+    _KIND_CACHE.clear()
+
+
 def host_memory_kind(device=None) -> Optional[str]:
     """Best host-side memory kind this backend can address: "pinned_host"
-    on TPU/GPU; XLA:CPU exposes only "unpinned_host"; None if neither."""
+    on TPU/GPU; XLA:CPU exposes only "unpinned_host"; None if neither.
+    Cached per device (including the None default-device key) — call
+    `reset_host_memory_kind_cache()` to re-probe."""
     dev = device if device is not None else jax.devices()[0]
+    cached = _KIND_CACHE.get(dev, _KIND_MISS)
+    if cached is not _KIND_MISS:
+        return cached
     try:
         kinds = {m.kind for m in dev.addressable_memories()}
     except Exception:
-        return None
-    for k in ("pinned_host", "unpinned_host"):
-        if k in kinds:
-            return k
-    return None
+        kinds = set()
+    kind = next((k for k in ("pinned_host", "unpinned_host") if k in kinds),
+                None)
+    try:
+        _KIND_CACHE[dev] = kind
+    except TypeError:
+        pass                      # unhashable fake device: skip caching
+    return kind
 
 
 def stage_to_host(tree, kind: Optional[str] = None,
                   tag: str = "stage_to_host",
-                  channel: str = "host", tier: str = "host"):
+                  channel: str = "host", tier: str = "host",
+                  account: bool = True):
     """Explicit, asynchronous device->host staging of a host-bound pytree.
 
     `jax.device_put` to the leaf's own sharding with the host memory kind
@@ -84,7 +108,11 @@ def stage_to_host(tree, kind: Optional[str] = None,
     bytes still cross the logical device/host boundary when the host
     worker consumes them. `repro.transport` channels pass their own
     name; direct callers default to the "host" channel (the bytes do
-    land in host DRAM).
+    land in host DRAM). Channels that already accounted the payload at
+    their own boundary (the single-accounting-point contract —
+    `OffloadChannel.stage(account=...)`) pass ``account=False`` so
+    composed paths (striped stripes, spill re-stages) never double-count
+    a byte.
 
     Mesh-parallel note (the `spmd` backend): staging targets *the leaf's
     own NamedSharding* with only the memory kind swapped, so a
@@ -96,8 +124,9 @@ def stage_to_host(tree, kind: Optional[str] = None,
     (`zen_spmd.zen_placements().host`) is laid out identically, so the
     worker's accumulate consumes each shard's bytes where they landed.
     """
-    from repro.telemetry import trafficwatch
-    trafficwatch.tree(tag, tree, channel=channel, tier=tier)
+    if account:
+        from repro.telemetry import trafficwatch
+        trafficwatch.tree(tag, tree, channel=channel, tier=tier)
     kind = kind or host_memory_kind()
     if kind is None:
         return tree

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.column_norm import column_norm_pallas
 from repro.kernels.grad_accum import grad_accum_pallas
+from repro.kernels.pack import pack_segments_pallas, unpack_segments_pallas
 from repro.kernels.quantize import (dequantize_rows_pallas,
                                     quantize_rows_pallas)
 from repro.kernels.selective_adam import selective_adam_pallas
@@ -95,3 +96,25 @@ def dequantize_rows(q: Array, scale: Array) -> Array:
     else:
         fn = ref.dequantize_rows_ref
     return _batched(fn, 2)(q, scale)
+
+
+def pack_segments(segments, offsets, total: int) -> Array:
+    """Coalesced-transfer pack: N 1-D uint8 segments -> one (total,)
+    uint8 buffer (segment j at byte offsets[j], gaps zero-filled).
+    1-D memcpy — no batch lifting."""
+    if not segments:
+        return jnp.zeros((total,), jnp.uint8)
+    if pallas_available():
+        return pack_segments_pallas(segments, offsets, total,
+                                    interpret=_force_interpret())
+    return ref.pack_segments_ref(segments, offsets, total)
+
+
+def unpack_segments(buf: Array, offsets, sizes) -> list:
+    """The inverse of pack_segments: slice each segment back out."""
+    if not sizes:
+        return []
+    if pallas_available():
+        return unpack_segments_pallas(buf, offsets, sizes,
+                                      interpret=_force_interpret())
+    return ref.unpack_segments_ref(buf, offsets, sizes)

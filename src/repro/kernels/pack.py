@@ -1,0 +1,80 @@
+"""Byte-pack/unpack Pallas kernels — the coalesced-transfer wire layout
+(ISSUE 7; transport/coalesce.py is the caller).
+
+The transport layer ships the whole per-step `host_bound` payload as ONE
+contiguous uint8 buffer so the device->host hop is a single DMA instead
+of one dispatch per pytree leaf. These kernels are the device-side
+memcpy halves of that layout:
+
+  pack:    N uint8 segments (each a leaf bitcast to bytes) -> one flat
+           uint8 buffer, each segment at its statically-planned byte
+           offset (transport/coalesce.py aligns offsets to the leaf's
+           itemsize). Gap bytes between segments are zero-filled so the
+           output is a pure function of the inputs — required for the
+           bitwise-parity contract with ``ref.pack_segments_ref``.
+  unpack:  the inverse — slice each segment back out of the flat buffer.
+
+Contract (must match ``ref.pack_segments_ref`` / ``ref.unpack_segments_ref``
+bit-for-bit under interpret mode — tests/test_coalesce.py): byte i of
+segment j lands at ``offsets[j] + i``; every byte not covered by a
+segment is 0.
+
+Kernel shape notes: segments arrive 1-D with static, mutually distinct
+offsets, so both kernels are single-invocation (grid=()) unrolled copy
+loops — on TPU the copies lower to contiguous VMEM moves and there is
+nothing to tile (the payload is consumed linearly by the DMA engine, not
+revisited). Offsets/sizes are Python ints baked into the kernel body,
+exactly like the block shapes of the other kernels in this package.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _pack_kernel_factory(offsets: Sequence[int], sizes: Sequence[int]):
+    def kernel(*refs):
+        *in_refs, out_ref = refs
+        out_ref[...] = jnp.zeros_like(out_ref)     # deterministic gap bytes
+        for ref, off, size in zip(in_refs, offsets, sizes):
+            out_ref[pl.dslice(off, size)] = ref[...]
+    return kernel
+
+
+def pack_segments_pallas(segments: Sequence[Array], offsets: Sequence[int],
+                         total: int, interpret: bool = False) -> Array:
+    """N 1-D uint8 segments -> one (total,) uint8 buffer at `offsets`."""
+    sizes = [int(s.shape[0]) for s in segments]
+    return pl.pallas_call(
+        _pack_kernel_factory(offsets, sizes),
+        in_specs=[pl.BlockSpec(s.shape, lambda: (0,)) for s in segments],
+        out_specs=pl.BlockSpec((total,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((total,), jnp.uint8),
+        interpret=interpret,
+    )(*segments)
+
+
+def _unpack_kernel_factory(offsets: Sequence[int], sizes: Sequence[int]):
+    def kernel(buf_ref, *out_refs):
+        for ref, off, size in zip(out_refs, offsets, sizes):
+            ref[...] = buf_ref[pl.dslice(off, size)]
+    return kernel
+
+
+def unpack_segments_pallas(buf: Array, offsets: Sequence[int],
+                           sizes: Sequence[int],
+                           interpret: bool = False) -> list[Array]:
+    """The inverse of pack: slice each (size,) uint8 segment back out."""
+    total = int(buf.shape[0])
+    return list(pl.pallas_call(
+        _unpack_kernel_factory(offsets, sizes),
+        in_specs=[pl.BlockSpec((total,), lambda: (0,))],
+        out_specs=[pl.BlockSpec((s,), lambda: (0,)) for s in sizes],
+        out_shape=[jax.ShapeDtypeStruct((s,), jnp.uint8) for s in sizes],
+        interpret=interpret,
+    )(buf))

@@ -53,3 +53,25 @@ def quantize_rows_ref(x: Array):
 def dequantize_rows_ref(q: Array, scale: Array) -> Array:
     """(q (..., M, N) int8, scale (..., M, 1) f32) -> f32 rows."""
     return q.astype(jnp.float32) * scale
+
+
+def pack_segments_ref(segments, offsets, total: int) -> Array:
+    """N 1-D uint8 segments -> one (total,) uint8 buffer with segment j at
+    byte `offsets[j]` and zero-filled gaps — the coalesced-transfer wire
+    layout (kernels/pack.py must match bit-for-bit: every gap byte 0)."""
+    parts = []
+    cursor = 0
+    for seg, off in zip(segments, offsets):
+        if off > cursor:
+            parts.append(jnp.zeros((off - cursor,), jnp.uint8))
+        parts.append(seg)
+        cursor = off + seg.shape[0]
+    if total > cursor:
+        parts.append(jnp.zeros((total - cursor,), jnp.uint8))
+    return jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.uint8)
+
+
+def unpack_segments_ref(buf: Array, offsets, sizes) -> list:
+    """The inverse of pack_segments_ref: static slices of the flat buffer."""
+    return [jax.lax.slice(buf, (off,), (off + size,))
+            for off, size in zip(offsets, sizes)]

@@ -61,6 +61,25 @@ and the compression ratio against the fp32 wire. Tiered channels
 ("spill": bounded DRAM budget + simulated-NVMe file tier; "striped":
 round-robin multi-path stripes) slot in without touching this file.
 
+Coalesced transfers & pooled buffers (`RuntimeConfig.coalesce`)
+---------------------------------------------------------------
+With coalescing on (the default on the single-device path), the jitted
+device program packs the whole `host_bound` payload into ONE contiguous
+uint8 buffer (`transport/coalesce.py`; Pallas memcpy kernels in
+`kernels/pack.py`), so staging is a single dispatch per step instead of
+one per leaf — trafficwatch's `transfers_by_tag` drops to 1/step for
+"host_bound". The host worker reconstructs the leaves as zero-copy
+numpy views of the staged buffer; pending-row uploads pack the same way
+into a `transport.pool.BufferPool` buffer (steady state: every acquire
+is a pool hit — zero fresh allocations, the bench_dispatch gate).
+Released upload buffers are held two windows deep before reuse: on
+XLA:CPU `device_put`/jit alias numpy memory rather than copying at
+dispatch, so a buffer may only be rewritten once its consuming program
+has provably executed. Packing is bitwise-lossless — the coalesced and
+per-leaf paths produce identical training trajectories (parity-gated in
+benchmarks/check_regression.py). The mesh (spmd) path keeps per-shard
+streams and auto-disables coalescing.
+
 Mesh-parallel execution (the `spmd` engine backend)
 ---------------------------------------------------
 The same runtime runs the whole pipeline across a `jax` device mesh:
@@ -105,6 +124,8 @@ from repro.core.zen_optimizer import ZenFlowConfig
 from repro.distributed.sharding import MeshRules
 from repro.distributed import zen_spmd
 from repro.telemetry import syncwatch
+from repro.transport import coalesce
+from repro.transport.pool import BufferPool
 
 
 # state-dict fields added after the first release: restores of older
@@ -122,6 +143,21 @@ class RuntimeConfig:
     # (explicit object beats runtime flag)
     stage_host_bound: bool = True
     blocking_metrics: bool = False   # legacy per-step scalarization (bench)
+    # coalesced transfers (repro.transport.coalesce): the device program
+    # packs the whole host_bound payload into ONE uint8 buffer so staging
+    # is a single dispatch instead of one per leaf, the host worker
+    # reconstructs the leaves as zero-copy views, and pending uploads
+    # pack into a pooled host buffer the same way. Auto-disabled on the
+    # mesh-parallel path (per-shard streams must stay per-leaf so each
+    # shard's bytes cross its own link)
+    coalesce: bool = True
+
+
+def _is_committed(x) -> bool:
+    try:
+        return bool(x.is_ready())
+    except AttributeError:
+        return True      # numpy / python scalars: nothing in flight
 
 
 class _Future:
@@ -219,17 +255,66 @@ class ZenFlowRuntime:
         steady_fn, _, _ = zen_spmd.make_device_step(
             model, zcfg, rules, segs=segs, with_pending=False,
             codec=self.channel)
+        land_fn = zen_spmd.make_land_pending(segs)
         donate = rcfg.donate
-        # boundary variant: lands the pending host rows (donated)
+        # coalesced transfers: both compiled program variants emit the
+        # host_bound payload as ONE packed uint8 buffer and the boundary
+        # variant accepts the pending upload in the same packed layout
+        # (transport/coalesce.py), so staging is a single device_put per
+        # step. The spmd path keeps per-shard per-leaf streams (each
+        # shard's slice must cross its own link) — coalescing would
+        # funnel the mesh through one buffer.
+        self._coalesce = rcfg.coalesce and self.placements is None
+        self._hb_spec = None     # host_bound PackSpec, captured at trace
+        self._pending_spec = None
+        self._upload_bufs: list = []  # pooled pending-upload buffers held
+        #   until their consuming device program provably executed (the
+        #   CPU client ALIASES device_put'd numpy memory — releasing too
+        #   early would let the next pack overwrite an unread upload).
+        #   Held two deep: by the time push w+1 runs, the boundary step
+        #   that consumed push w-1's buffer has executed (the apply
+        #   future waited on at w+1 is queued behind that step's
+        #   accumulate, which blocks on its staged output).
+        self._upload_pool = getattr(self.channel, "pool", None) \
+            or BufferPool(name="runtime")
+        if self._coalesce:
+            pend_spec = coalesce.plan(
+                zen_spmd.pending_specs(segs, model.param_specs()))
+            self._pending_spec = pend_spec
+            base_step, base_steady, base_land = step_fn, steady_fn, land_fn
+            cell = self  # PackSpec cell written at trace time (static)
+
+            def step_fn(params, dstate, packed_pending, batch):
+                pending = coalesce.unpack_tree(
+                    packed_pending[coalesce.PACKED_KEY], pend_spec)
+                params, dstate, hb, metrics = base_step(
+                    params, dstate, pending, batch)
+                packed_hb, cell._hb_spec = coalesce.pack_tree(hb)
+                return params, dstate, packed_hb, metrics
+
+            def steady_fn(params, dstate, batch):
+                params, dstate, hb, metrics = base_steady(
+                    params, dstate, batch)
+                packed_hb, cell._hb_spec = coalesce.pack_tree(hb)
+                return params, dstate, packed_hb, metrics
+
+            def land_fn(params, packed_pending):
+                return base_land(params, coalesce.unpack_tree(
+                    packed_pending[coalesce.PACKED_KEY], pend_spec))
+
+        # boundary variant: lands the pending host rows. The packed
+        # pending buffer is never donated: its memory is the pool's
+        # (aliased numpy), so XLA must not write into it
         self.device_step = jax.jit(
-            step_fn, donate_argnums=(0, 1, 2) if donate else ())
+            step_fn, donate_argnums=((0, 1) if self._coalesce else (0, 1, 2))
+            if donate else ())
         # steady-state variant: no pending input, no scatter dead work
         self.device_step_steady = jax.jit(
             steady_fn, donate_argnums=(0, 1) if donate else ())
         # boundary-path landing in isolation (pending-slot overflow);
         # only params are donated — the pending buffers cannot alias the
         # params-shaped output
-        self._land = jax.jit(zen_spmd.make_land_pending(segs),
+        self._land = jax.jit(land_fn,
                              donate_argnums=(0,) if donate else ())
         self.host_accumulate, self.host_apply = \
             zen_spmd.make_host_programs(zcfg, codec=self.channel)
@@ -263,6 +348,44 @@ class ZenFlowRuntime:
         return self
 
     # ------------------------------------------------------------------
+    def _accumulate_staged(self, st, handle):
+        """Worker-side consumption of one staged host_bound payload:
+        fetch, (for coalesced payloads) rebuild the leaves as zero-copy
+        views of the packed buffer, accumulate. Runs on the host-worker
+        thread — blocking here is the pipeline's consumer-side wait, not
+        a driver stall."""
+        payload = self.channel.fetch(handle)
+        scratch = None
+        if self._coalesce and coalesce.is_packed(payload):
+            buf = payload[coalesce.PACKED_KEY]
+            payload = coalesce.unpack_tree_host(buf, self._hb_spec)
+            if isinstance(buf, np.ndarray):
+                scratch = buf     # pooled reassembly scratch (striped)
+        st2 = self.host_accumulate(st, payload)
+        if scratch is not None:
+            # the jitted accumulate reads the scratch's views
+            # asynchronously (the CPU client aliases numpy args) — wait
+            # for it on THIS thread before recycling the buffer
+            jax.block_until_ready(st2["count"])
+            pool = getattr(self.channel, "pool", None)
+            if pool is not None:
+                pool.maybe_release(scratch)
+        return st2
+
+    def pending_view(self) -> Optional[dict]:
+        """The pending slot in its legacy {"rows", "idx", "valid"}
+        layout (None when empty) — unpacks the coalesced upload buffer
+        when coalescing is on. Checkpoints and tests read this view, so
+        the serialized layout is identical across coalesce settings."""
+        if self.pending is None:
+            return None
+        if coalesce.is_packed(self.pending):
+            return coalesce.unpack_tree(
+                jnp.asarray(self.pending[coalesce.PACKED_KEY]),
+                self._pending_spec)
+        return self.pending
+
+    # ------------------------------------------------------------------
     def _push_pending(self, rows, idx):
         """Queue host-apply output rows for landing at the next step.
 
@@ -276,6 +399,37 @@ class ZenFlowRuntime:
         """
         if self.pending is not None:
             self.params = self._land(self.params, self.pending)
+        if self._coalesce:
+            # coalesced upload: pack rows+idx+valid into ONE pooled host
+            # buffer (zero fresh allocations after warmup) and ship it
+            # as a single transfer. Materializing the apply rows blocks
+            # this (boundary-only) path — counted like every deliberate
+            # sync
+            tree = {"rows": rows, "idx": idx,
+                    "valid": jnp.ones((), jnp.bool_)}
+            syncwatch.record("pending_pack", blocked=not all(
+                _is_committed(x) for x in jax.tree.leaves(tree)))
+            buf = self._upload_pool.acquire(
+                (self._pending_spec.total_bytes,), np.uint8)
+            coalesce.pack_into(tree, self._pending_spec, buf)
+            # sharding=None, NOT an explicit SingleDeviceSharding: an
+            # explicitly-placed upload makes the pending buffer COMMITTED,
+            # and jax recompiles a jitted program for every distinct
+            # committed/uncommitted argument pattern — one committed input
+            # here cascades through step_fn -> host_bound -> comp_idx ->
+            # apply, re-lowering each program mid-run (seconds each, on
+            # the worker's critical path, so every window extends). The
+            # per-leaf wire ships uploads unplaced for the same reason;
+            # the jitted consumer reads the numpy buffer where it lies
+            # (the CPU client aliases it — see the _upload_bufs hold).
+            up = self.channel.upload({coalesce.PACKED_KEY: buf}, None,
+                                     tag="pending_upload")
+            self.pending = up
+            self._upload_bufs.append(buf)
+            if len(self._upload_bufs) > 2:
+                # provably consumed two pushes ago (see __init__ note)
+                self._upload_pool.release(self._upload_bufs.pop(0))
+            return
         # host->device upload leg of the wire (bf16 rows + int32 idx)
         # through the transport channel: byte-accounted under
         # "pending_upload", and on a mesh asynchronously device_put onto
@@ -318,8 +472,7 @@ class ZenFlowRuntime:
 
         # async host accumulate (ordered behind any in-flight apply)
         self.worker.submit(
-            lambda st, hb=staged: (
-                self.host_accumulate(st, self.channel.fetch(hb)), None))
+            lambda st, hb=staged: (self._accumulate_staged(st, hb), None))
 
         t = self._t
         warm = t <= self.zcfg.warmup_steps
@@ -343,8 +496,16 @@ class ZenFlowRuntime:
 
         if boundary:
             # comp_idx from the device program's output tree (the staged
-            # copy belongs to the worker; the indices are identical)
-            comp_idx = host_bound["comp_idx"]
+            # copy belongs to the worker; the indices are identical).
+            # Coalesced: eagerly unpack just that field from the packed
+            # buffer — static slices + bitcasts, async device ops, no
+            # host read
+            if self._coalesce:
+                comp_idx = coalesce.unpack_field(
+                    host_bound[coalesce.PACKED_KEY], self._hb_spec,
+                    "comp_idx")
+            else:
+                comp_idx = host_bound["comp_idx"]
             lr_t = self.zcfg.lr_at(jnp.asarray(t))
 
             def do_apply(st, ci=comp_idx, lr=lr_t):
@@ -385,17 +546,29 @@ class ZenFlowRuntime:
             rows, idx = syncwatch.wait(self._apply_future, tag="flush")
             self._push_pending(rows, idx)
             self._apply_future = None
+        # hand held upload buffers back before draining the pool: drain
+        # drops the free lists, so these can never be re-acquired (the
+        # freshest one may still back self.pending via CPU aliasing —
+        # safe precisely because it is forgotten, not recycled)
+        for buf in self._upload_bufs:
+            self._upload_pool.maybe_release(buf)
+        self._upload_bufs.clear()
         # restore anything the channel holds in colder tiers and release
         # its transient resources (no-op for the host tier); never on
         # the steady-state path
         self.channel.drain()
+        if self._upload_pool is not getattr(self.channel, "pool", None):
+            self._upload_pool.drain()
 
     def state_dict(self) -> dict:
         self.flush()
-        pending = self.pending
+        # checkpoint layout is stable across coalesce settings: the
+        # pending slot always serializes in its legacy
+        # {"rows", "idx", "valid"} layout (unpacked from the coalesced
+        # buffer when needed), and an empty slot serializes as an
+        # invalid zero-pending buffer (same shapes every time)
+        pending = self.pending_view()
         if pending is None:
-            # checkpoint layout is stable: an empty slot serializes as an
-            # invalid zero-pending buffer (same shapes every time)
             pending = zen_spmd.zero_pending(self.segs,
                                             self.model.param_specs())
         return {
@@ -438,6 +611,15 @@ class ZenFlowRuntime:
         # one-time host reads at restore (not the hot path): step counter
         # and pending validity move back into Python
         self.pending = pending if bool(np.asarray(pending["valid"])) else None
+        if self._coalesce and self.pending is not None:
+            # checkpoints hold the legacy {"rows","idx","valid"} layout;
+            # a coalescing runtime keeps its pending slot packed so the
+            # boundary program sees one layout everywhere. One-time
+            # eager pack — restore path, not the hot path.
+            self.pending = coalesce.pack_tree(
+                {"rows": pending["rows"], "idx": pending["idx"],
+                 "valid": jnp.ones((), jnp.bool_)},
+                self._pending_spec)[0]
         self._t = int(np.asarray(self.dstate["step"]))
         self._steps_in_window = int(sd.get("steps_in_window", 0))
         self._s_eff = int(sd.get("s_eff", self.zcfg.update_interval))
@@ -456,6 +638,12 @@ class ZenFlowRuntime:
     def close(self):
         if self.worker is not None:
             self.worker.stop()
+        # hand held upload buffers back before draining (see flush())
+        for buf in self._upload_bufs:
+            self._upload_pool.maybe_release(buf)
+        self._upload_bufs.clear()
         # settle the transport: restore anything resident in colder
         # tiers and release spill files (no-op for the host tier)
         self.channel.drain()
+        if self._upload_pool is not getattr(self.channel, "pool", None):
+            self._upload_pool.drain()

@@ -32,6 +32,19 @@ Contract:
   * Bytes are *logical wire bytes* of the global payload: what crosses
     the device/host boundary summed over shards in a mesh run (each
     shard's slice crosses its own link exactly once).
+  * **Transfers are counted per array leaf**, not per payload: each leaf
+    of an uncoalesced pytree is its own `device_put` dispatch, so a
+    payload of N arrays is N transfers — and a coalesced payload
+    (`transport.coalesce`, a single packed uint8 buffer) is 1. That
+    asymmetry is the whole point: `bench_dispatch` reports
+    transfers/step from these counters and the regression gate holds
+    the coalesced steady state to <=2 dispatches/step.
+    `transfers_by_channel` mirrors the attribution per channel.
+  * **Host-buffer allocations** are the third axis: `alloc(nbytes,
+    channel=...)` records a fresh staging-buffer allocation (producer:
+    `transport.pool.BufferPool` on a miss). On real hardware these are
+    pinned (page-locked) allocations — the expensive, serializing kind —
+    so `bench_dispatch` asserts allocations/step == 0 after warmup.
   * Counters are process-global and lock-guarded (driver + host worker
     threads both record); `reset()` zeroes them (benchmarks call it after
     warmup/compile).
@@ -48,8 +61,11 @@ _lock = threading.Lock()
 _bytes: Counter = Counter()
 _transfers: Counter = Counter()
 _channel_bytes: Counter = Counter()
+_channel_transfers: Counter = Counter()
 _tier_bytes: Counter = Counter()
 _unattributed: Counter = Counter()   # bytes recorded without channel / tier
+_allocs: Counter = Counter()         # fresh host-buffer allocations / channel
+_alloc_bytes: Counter = Counter()
 
 
 def reset() -> None:
@@ -58,8 +74,11 @@ def reset() -> None:
         _bytes.clear()
         _transfers.clear()
         _channel_bytes.clear()
+        _channel_transfers.clear()
         _tier_bytes.clear()
         _unattributed.clear()
+        _allocs.clear()
+        _alloc_bytes.clear()
 
 
 def record(tag: str, nbytes: int, transfers: int = 1,
@@ -72,12 +91,22 @@ def record(tag: str, nbytes: int, transfers: int = 1,
         _transfers[tag] += transfers
         if channel is not None:
             _channel_bytes[channel] += int(nbytes)
+            _channel_transfers[channel] += transfers
         else:
             _unattributed["channel"] += int(nbytes)
         if tier is not None:
             _tier_bytes[tier] += int(nbytes)
         else:
             _unattributed["tier"] += int(nbytes)
+
+
+def alloc(nbytes: int, channel: Optional[str] = None) -> None:
+    """Record one fresh host staging-buffer allocation (producer:
+    `transport.pool.BufferPool` on a miss). Pinned allocation is the
+    serializing cost on real hardware — the steady-state gate is 0."""
+    with _lock:
+        _allocs[channel or "unattributed"] += 1
+        _alloc_bytes[channel or "unattributed"] += int(nbytes)
 
 
 def tree_bytes(tree: Any) -> int:
@@ -88,10 +117,19 @@ def tree_bytes(tree: Any) -> int:
                if hasattr(x, "dtype"))
 
 
+def tree_transfers(tree: Any) -> int:
+    """Dispatch count of a payload pytree: one transfer per array leaf
+    (each leaf is its own `device_put`). A coalesced payload is 1."""
+    return sum(1 for x in jax.tree.leaves(tree) if hasattr(x, "dtype"))
+
+
 def tree(tag: str, payload: Any, channel: Optional[str] = None,
          tier: Optional[str] = None) -> None:
-    """Record a whole payload pytree as one transfer under `tag`."""
-    record(tag, tree_bytes(payload), channel=channel, tier=tier)
+    """Record a payload pytree under `tag`: exact static bytes, one
+    transfer per array leaf (see module docstring — coalescing is
+    visible as the leaf count collapsing to 1)."""
+    record(tag, tree_bytes(payload), transfers=tree_transfers(payload),
+           channel=channel, tier=tier)
 
 
 def total() -> int:
@@ -102,7 +140,9 @@ def total() -> int:
 
 def counts() -> dict:
     """Snapshot: {"total_bytes", "transfers", "by_tag",
-    "transfers_by_tag", "by_channel", "by_tier", "unattributed_bytes"}.
+    "transfers_by_tag", "by_channel", "transfers_by_channel", "by_tier",
+    "unattributed_bytes", "allocations", "alloc_bytes",
+    "allocations_by_channel"}.
 
     `unattributed_bytes` is the max of channel-less and tier-less bytes —
     0 means every recorded byte named both its channel and its tier (the
@@ -114,7 +154,11 @@ def counts() -> dict:
             "by_tag": dict(_bytes),
             "transfers_by_tag": dict(_transfers),
             "by_channel": dict(_channel_bytes),
+            "transfers_by_channel": dict(_channel_transfers),
             "by_tier": dict(_tier_bytes),
             "unattributed_bytes": max(_unattributed["channel"],
                                       _unattributed["tier"]),
+            "allocations": sum(_allocs.values()),
+            "alloc_bytes": sum(_alloc_bytes.values()),
+            "allocations_by_channel": dict(_allocs),
         }

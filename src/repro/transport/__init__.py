@@ -26,7 +26,8 @@ tiers:
 
 Channel contract (duck-typed; `OffloadChannel` is the Protocol)
 ---------------------------------------------------------------
-  stage(tree, tag)      device->host: account the payload bytes under
+  stage(tree, tag, account=True)
+                        device->host: account the payload bytes under
                         `tag` (trafficwatch, attributed to this
                         channel's name and tier) and start the transfer
                         asynchronously. Returns an opaque *staged
@@ -34,17 +35,36 @@ Channel contract (duck-typed; `OffloadChannel` is the Protocol)
                         is the tree. MUST NOT block the caller — no
                         device reads, no waits (syncwatch-verified for
                         every stock tier in tests/test_transport.py).
+                        This call is the payload's SINGLE accounting
+                        point: `account=False` suppresses it when a
+                        composing parent already counted the bytes, so
+                        no composed path (striping, spilling, packing)
+                        ever double-counts
+                        (tests/test_transport.py::test_accounting_exact_bytes).
   fetch(handle)         consumer side (the host worker): materialize a
                         staged handle back into the payload pytree,
                         restoring from colder tiers if the segment was
                         spilled. Bitwise-identical to the staged tree.
-  upload(tree, sharding, tag)
+                        May return a pooled scratch buffer (packed
+                        payloads on multi-path tiers); the caller
+                        recycles it via `channel.pool.maybe_release`
+                        once consumed.
+  upload(tree, sharding, tag, account=True)
                         host->device: account + async `device_put` of
                         each leaf onto its target. `sharding` is either
                         None (whole tree: bytes accounted, placement
                         left to the consuming program) or a pytree of
                         NamedShardings matching `tree` leaf-for-leaf.
-                        Returns the uploaded tree.
+                        Returns the uploaded tree. Same single
+                        accounting point rule as `stage`.
+  pool                  a `transport.pool.BufferPool` owning the
+                        channel's host-side staging scratch — keyed by
+                        (shape, dtype, placement kind), lifetime tied to
+                        the channel (`drain()` drops cached buffers and
+                        flags leaks). Steady-state contract: after
+                        warmup, every acquire is a hit — zero fresh
+                        allocations (`trafficwatch.alloc` counts the
+                        misses; bench_dispatch gates on 0/step).
   encode(rows) / decode(payload)
                         the wire codec hooks — pure, traceable
                         functions; `encode` runs inside the jitted
@@ -79,12 +99,27 @@ a different compression wire) mirrors backends:
 
 Factories are called `factory(zcfg, **kw) -> channel`; `zcfg` (a
 `ZenFlowConfig` or None) selects the default wire codec.
+
+Coalesced payloads (`repro.transport.coalesce`)
+-----------------------------------------------
+The runtime may hand any channel a *packed* payload — the single-key
+tree ``{coalesce.PACKED_KEY: uint8_buffer}`` holding every leaf of the
+logical payload at statically-planned byte offsets. Channels need no
+special handling (it is a 1-leaf pytree; staging it is ONE dispatch —
+the whole point), except that multi-path tiers SHOULD stripe it by byte
+range rather than treat it as one leaf (`StripedChannel` does). The
+pack/unpack halves are bitwise-lossless; layout planning, traced
+pack/unpack, zero-copy host views and pooled host-side packing all live
+in `transport/coalesce.py` (Pallas memcpy kernels in
+`kernels/pack.py`).
 """
 from __future__ import annotations
 
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
+from repro.transport import coalesce
 from repro.transport.host import HostChannel
+from repro.transport.pool import BufferPool
 from repro.transport.spill import SpillChannel
 from repro.transport.striped import StripedChannel
 
@@ -98,10 +133,13 @@ class OffloadChannel(Protocol):
     # whether the wire codec keeps an encoder residual in device state
     # (read by `device_update` when tracing the device program)
     error_feedback: bool
+    # host-side staging-buffer pool, lifetime tied to the channel
+    pool: BufferPool
 
-    def stage(self, tree, tag: str = ...) -> Any: ...
+    def stage(self, tree, tag: str = ..., account: bool = ...) -> Any: ...
     def fetch(self, handle) -> Any: ...
-    def upload(self, tree, sharding=None, tag: str = ...) -> Any: ...
+    def upload(self, tree, sharding=None, tag: str = ...,
+               account: bool = ...) -> Any: ...
     def encode(self, rows) -> Any: ...
     def decode(self, payload) -> Any: ...
     def drain(self) -> None: ...
@@ -140,5 +178,6 @@ register_transport("striped", StripedChannel)
 
 __all__ = [
     "OffloadChannel", "HostChannel", "SpillChannel", "StripedChannel",
+    "BufferPool", "coalesce",
     "register_transport", "available_transports", "make_transport",
 ]

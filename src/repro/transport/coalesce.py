@@ -1,0 +1,233 @@
+"""Coalesced transfers: one packed uint8 buffer per payload instead of
+one dispatch per pytree leaf (ISSUE 7).
+
+`offload.stage_to_host` used to issue one `jax.device_put` per leaf of
+the `host_bound` tree — rows + idx + comp_idx (+ refresh scalars) for
+every split param, every step. Small per-tensor transfers spend most of
+the interconnect on dispatch overhead (the Breaking-the-Memory-Wall I/O
+observation; the monarch RDMA example batches many small transfers into
+one action for the same reason). This module defines the packed wire
+layout that fixes it:
+
+  * `plan(tree)` computes a static `PackSpec`: every leaf gets a byte
+    range in one flat uint8 buffer, offsets aligned to the leaf's
+    itemsize (so host-side views are aligned), gaps zero-filled. The
+    spec is pure metadata — shapes/dtypes/offsets/treedef — computed
+    once (at trace time for the device program, at construction for the
+    pending layout).
+  * `pack_tree(tree)` is TRACEABLE and runs *inside the jitted device
+    program*: each leaf is bitcast to bytes and copied to its offset
+    (Pallas memcpy kernel on TPU — kernels/pack.py — jnp concat oracle
+    elsewhere, bitwise identical). The program's host-bound output is
+    then ONE buffer, so `channel.stage` is a single `device_put`
+    dispatch no matter how many params the model splits.
+  * `unpack_tree_host(buf, spec)` reconstructs the leaves as ZERO-COPY
+    numpy views of the staged buffer (the host worker's side): no
+    per-leaf allocation, no copy — the bytes are consumed where the DMA
+    landed them. `np.asarray` on the staged buffer blocks the *worker*
+    until the transfer committed, exactly like touching the first leaf
+    used to; the driver thread never waits.
+  * `unpack_tree(buf, spec)` is the traceable inverse (the boundary
+    device program unpacks the coalesced pending upload with it), and
+    `unpack_field` eagerly unpacks one top-level field (`comp_idx` at
+    window boundaries) with async device ops — no host sync.
+  * `pack_into(tree, spec, out)` fills a caller-supplied (pooled — see
+    transport/pool.py) host buffer for the upload direction.
+
+Bitwise contract: pack -> unpack is the identity on every leaf, bit for
+bit, on both the traced and the host path (bitcasts only, no value
+conversion; bools travel as their 0/1 bytes) — tests/test_coalesce.py.
+A packed payload is the single-key tree ``{PACKED_KEY: buf}`` so every
+`OffloadChannel` moves it unchanged; `StripedChannel` special-cases the
+key to stripe the buffer BY BYTE RANGE across its sub-channels (a
+1-leaf payload would otherwise defeat multi-path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# the single-key tree shape of a packed payload; channels treat it as an
+# opaque 1-leaf tree except where byte-range striping applies
+PACKED_KEY = "coalesced_u8"
+
+
+def is_packed(tree: Any) -> bool:
+    """True when `tree` is a packed payload — exactly the single-key
+    form ``{PACKED_KEY: buf}`` (a larger dict that merely contains the
+    key is somebody's ordinary payload, not a packed one)."""
+    return isinstance(tree, dict) and len(tree) == 1 and PACKED_KEY in tree
+
+
+def _keystr(k) -> str:
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """One leaf's byte range in the packed buffer."""
+    keys: tuple          # tree path (normalized key strings)
+    shape: tuple
+    dtype: Any           # np.dtype (bfloat16 via ml_dtypes)
+    offset: int          # byte offset, aligned to the dtype's itemsize
+    nbytes: int
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PackSpec:
+    """Static layout of a packed payload: slots in flatten order + the
+    treedef to rebuild the original pytree. Pure metadata — never holds
+    array data."""
+    slots: tuple
+    treedef: Any
+    total_bytes: int
+
+
+def plan(tree) -> PackSpec:
+    """Compute the packed layout of `tree` (arrays or ShapeDtypeStructs).
+    Leaves keep flatten order; each offset is rounded up to the leaf's
+    itemsize so host-side views are naturally aligned (pad gaps are
+    zero-filled by pack)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    slots = []
+    offset = 0
+    for path, leaf in flat:
+        dt = np.dtype(leaf.dtype)
+        isz = dt.itemsize
+        offset = (offset + isz - 1) // isz * isz
+        nbytes = int(np.prod(leaf.shape, dtype=np.int64)) * isz
+        slots.append(LeafSlot(tuple(_keystr(k) for k in path),
+                              tuple(leaf.shape), dt, offset, nbytes))
+        offset += nbytes
+    return PackSpec(tuple(slots), treedef, offset)
+
+
+# ---------------------------------------------------------------------------
+# Traced halves (inside jitted programs)
+
+
+def _to_u8(x: Array) -> Array:
+    """Bitcast any leaf to its flat bytes (bools travel as 0/1 bytes)."""
+    x = jnp.asarray(x)
+    if x.dtype == jnp.bool_:
+        return x.astype(jnp.uint8).reshape(-1)
+    return jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+
+
+def _from_u8(seg: Array, shape: tuple, dtype) -> Array:
+    """The inverse bitcast: a flat uint8 segment back to (shape, dtype)."""
+    jdt = jnp.dtype(dtype)
+    if jdt == jnp.bool_:
+        return seg.astype(jnp.bool_).reshape(shape)
+    isz = jdt.itemsize
+    if isz == 1:
+        return jax.lax.bitcast_convert_type(seg, jdt).reshape(shape)
+    return jax.lax.bitcast_convert_type(
+        seg.reshape(-1, isz), jdt).reshape(shape)
+
+
+def pack_tree(tree, spec: Optional[PackSpec] = None):
+    """TRACEABLE: pack a payload pytree into its flat uint8 buffer.
+    Returns ``({PACKED_KEY: buf}, spec)`` — plan computed from the traced
+    shapes when not supplied (static under jit)."""
+    from repro.kernels import ops as kops
+    if spec is None:
+        spec = plan(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != len(spec.slots):
+        raise ValueError(f"pack_tree: {len(leaves)} leaves vs "
+                         f"{len(spec.slots)} planned slots")
+    segments = [_to_u8(x) for x in leaves]
+    buf = kops.pack_segments(segments, [s.offset for s in spec.slots],
+                             spec.total_bytes)
+    return {PACKED_KEY: buf}, spec
+
+
+def unpack_tree(buf: Array, spec: PackSpec):
+    """TRACEABLE inverse of pack_tree (the boundary device program
+    unpacks the coalesced pending upload with this)."""
+    from repro.kernels import ops as kops
+    segments = kops.unpack_segments(buf, [s.offset for s in spec.slots],
+                                    [s.nbytes for s in spec.slots])
+    leaves = [_from_u8(seg, s.shape, s.dtype)
+              for seg, s in zip(segments, spec.slots)]
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def unpack_field(buf: Array, spec: PackSpec, field: str) -> dict:
+    """Eagerly unpack one top-level field (e.g. "comp_idx") from a packed
+    DEVICE buffer: static slices + bitcasts only — asynchronous device
+    ops, never a host read (the boundary path needs comp_idx without
+    breaking the zero-sync contract)."""
+    out: dict = {}
+    for s in spec.slots:
+        if not s.keys or s.keys[0] != field:
+            continue
+        seg = jax.lax.slice(buf, (s.offset,), (s.offset + s.nbytes,))
+        leaf = _from_u8(seg, s.shape, s.dtype)
+        node = out
+        for k in s.keys[1:-1]:
+            node = node.setdefault(k, {})
+        if len(s.keys) == 1:
+            return leaf          # the field IS the leaf (scalar)
+        node[s.keys[-1]] = leaf
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Host halves (worker thread / upload packing)
+
+
+def unpack_tree_host(buf, spec: PackSpec):
+    """Reconstruct the payload as ZERO-COPY numpy views of the staged
+    buffer. `np.asarray` blocks the calling (worker) thread until the
+    transfer committed — the consumer-side wait that used to happen on
+    first touch of each leaf, now paid once."""
+    flat = np.asarray(buf)
+    leaves = []
+    for s in spec.slots:
+        seg = flat[s.offset:s.offset + s.nbytes]
+        leaves.append(seg.view(s.dtype).reshape(s.shape))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def pack_into(tree, spec: PackSpec, out: np.ndarray) -> np.ndarray:
+    """Fill a caller-supplied (pooled) host buffer with the packed bytes
+    of `tree` — the upload direction's half of the layout. Zero-fills
+    first so gap bytes match the traced pack bit-for-bit."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != len(spec.slots):
+        raise ValueError(f"pack_into: {len(leaves)} leaves vs "
+                         f"{len(spec.slots)} planned slots")
+    if out.shape != (spec.total_bytes,) or out.dtype != np.uint8:
+        raise ValueError(f"pack_into: buffer {out.shape}/{out.dtype} vs "
+                         f"planned ({spec.total_bytes},)/uint8")
+    out.fill(0)
+    for leaf, s in zip(leaves, spec.slots):
+        view = out[s.offset:s.offset + s.nbytes].view(s.dtype)
+        np.copyto(view, np.asarray(leaf).reshape(-1).view(s.dtype)
+                  if np.asarray(leaf).dtype != s.dtype
+                  else np.asarray(leaf).reshape(-1))
+    return out
+
+
+def byte_stripes(total: int, ways: int) -> list[tuple[int, int]]:
+    """Split [0, total) into `ways` contiguous (start, stop) byte ranges,
+    remainder spread over the leading stripes — `StripedChannel`'s
+    byte-range striping of a packed buffer."""
+    base, extra = divmod(total, ways)
+    bounds, start = [], 0
+    for i in range(ways):
+        stop = start + base + (1 if i < extra else 0)
+        bounds.append((start, stop))
+        start = stop
+    return bounds

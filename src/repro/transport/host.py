@@ -10,6 +10,18 @@ shardings, and the codec is the stock `core/wire.py` pair selected by
 the payload. Behavior-identical to the pre-transport runtime (the
 async-backend parity tests in tests/test_wire.py / tests/test_engine.py
 run unmodified against it).
+
+Single accounting point: `stage`/`upload` are where a payload's wire
+bytes hit `telemetry.trafficwatch` — exactly once, at the channel
+boundary. The underlying `stage_to_host` hop is always called with
+``account=False``, and composed channels (striping, spilling, packed
+payloads) pass ``account=False`` down whenever the parent already
+accounted, so no byte is ever counted twice
+(tests/test_transport.py::test_accounting_exact_bytes).
+
+Every channel owns a `transport.pool.BufferPool` (`self.pool`) for its
+host-side staging scratch — pooled so steady-state steps allocate
+nothing fresh; `drain()` drops the cached buffers and flags leaks.
 """
 from __future__ import annotations
 
@@ -21,6 +33,7 @@ import jax
 
 from repro.core import wire
 from repro.telemetry import trafficwatch
+from repro.transport.pool import BufferPool
 
 
 class CodecHooks:
@@ -55,6 +68,7 @@ class HostChannel(CodecHooks):
         self.name = name
         self.codec = wire.codec_for(zcfg) if zcfg is not None \
             else wire.WireCodec()
+        self.pool = BufferPool(name=name)
         self._stage_payloads = stage_payloads
         self._kind = kind
         self._kind_resolved = kind is not None
@@ -74,39 +88,54 @@ class HostChannel(CodecHooks):
             self._ctr[key] += int(nbytes)
             self._ctr[key + "_transfers"] += 1
 
-    def stage(self, tree, tag: str = "stage_to_host"):
+    def stage(self, tree, tag: str = "stage_to_host",
+              account: bool = True):
         """Asynchronous device->host staging; returns the staged tree
         (this channel's handle IS the tree). Never blocks: `device_put`
-        returns with the transfer in flight."""
+        returns with the transfer in flight.
+
+        This call is the payload's SINGLE byte-accounting point
+        (`account=False` only when a composing parent channel already
+        accounted it) — the staging hop below never re-counts."""
         self._count("staged_bytes", trafficwatch.tree_bytes(tree))
+        if account:
+            trafficwatch.tree(tag, tree, channel=self.name, tier=self.tier)
         kind = self._memory_kind() if self._stage_payloads else None
         if kind is None:
-            # no residency hop on this platform/config — the bytes still
-            # cross when the worker consumes them, so account them here
-            trafficwatch.tree(tag, tree, channel=self.name, tier=self.tier)
+            # no residency hop on this platform/config — the bytes were
+            # still accounted above: they cross when the worker consumes
             return tree
         from repro.distributed.offload import stage_to_host
         return stage_to_host(tree, kind=kind, tag=tag,
-                             channel=self.name, tier=self.tier)
+                             channel=self.name, tier=self.tier,
+                             account=False)
 
     def fetch(self, handle):
         """Host-tier handles are the staged trees themselves."""
         return handle
 
-    def upload(self, tree, sharding=None, tag: str = "upload"):
+    def upload(self, tree, sharding=None, tag: str = "upload",
+               account: bool = True):
         """Asynchronous host->device upload of `tree`. `sharding` is a
         matching pytree of NamedShardings (each leaf is device_put onto
         its target — a no-op when already resident there) or None (bytes
-        accounted, placement left to the consuming program)."""
+        accounted, placement left to the consuming program). Accounting
+        follows the same single-point rule as `stage`."""
         self._count("uploaded_bytes", trafficwatch.tree_bytes(tree))
-        trafficwatch.tree(tag, tree, channel=self.name, tier=self.tier)
+        if account:
+            trafficwatch.tree(tag, tree, channel=self.name, tier=self.tier)
         if sharding is None:
             return tree
         return jax.tree.map(jax.device_put, tree, sharding)
 
     def drain(self) -> None:
-        """Nothing resident in colder tiers; transfers settle with XLA."""
+        """Nothing resident in colder tiers; transfers settle with XLA.
+        Drops the pool's cached staging buffers (leaks flagged in
+        `pool.stats()`)."""
+        self.pool.drain()
 
     def stats(self) -> dict:
         with self._lock:
-            return {"name": self.name, "tier": self.tier, **dict(self._ctr)}
+            out = {"name": self.name, "tier": self.tier, **dict(self._ctr)}
+        out["pool"] = self.pool.stats()
+        return out

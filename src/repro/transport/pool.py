@@ -1,0 +1,157 @@
+"""`BufferPool`: pinned host-buffer reuse for the transport layer
+(ISSUE 7 — the registration-once/reuse-forever half of the monarch RDMA
+bulk-transfer pattern).
+
+Every host-side staging buffer the transport layer fills — the packed
+pending-upload buffer `ZenFlowRuntime._push_pending` rebuilds each
+window, `StripedChannel`'s stripe-reassembly scratch — used to be a
+fresh allocation on every use. On real hardware those are *pinned*
+(page-locked) allocations, and pinning is the expensive part: the
+driver must register the pages with the DMA engine, so per-step
+allocation serializes exactly the transfers the zero-stall pipeline
+exists to overlap. The fix is the same as RDMA buffer registration: pay
+the allocation once, key it by what makes a buffer substitutable, and
+reuse it for the lifetime of the channel.
+
+Contract
+--------
+  * `acquire(shape, dtype, kind=None)` returns a writable numpy buffer
+    of exactly that (shape, dtype). Buffers are keyed by
+    ``(shape, dtype, kind)`` where `kind` carries any placement identity
+    beyond shape/dtype — the host memory kind for plain staging buffers,
+    or a sharding repr when per-shard buffers must not be exchanged
+    (`key_for(sharding)` builds one). A free buffer under the same key
+    is reused (hit); otherwise one is allocated (miss) and the
+    allocation is reported to `telemetry.trafficwatch.alloc` so
+    `bench_dispatch` can assert zero steady-state allocations.
+  * `release(buf)` returns an acquired buffer to the free list. The
+    caller must be done *writing* AND the consuming transfer must have
+    read the bytes (for jit/device_put consumers the copy happens at
+    dispatch, so releasing after the dispatch call returned is safe —
+    the runtime releases window w's upload buffer when window w+1's is
+    packed, at least S steps later).
+  * Lifetime is tied to the owning channel: `drain()` drops the free
+    lists (cached capacity) and reports any still-acquired buffer as a
+    leak (`stats()["leaked"]`); `OffloadChannel.drain()`/`close()` call
+    it, and tests/test_pool.py asserts leak detection fires.
+  * `stats()`: hits / misses / allocations / alloc_bytes / outstanding /
+    free / leaked. After warmup a steady-state step must show hits only
+    — zero fresh allocations (the bench_dispatch acceptance gate).
+
+Thread safety: acquire/release/drain are lock-guarded (the driver
+thread packs uploads while the host worker releases fetch scratch).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+
+def key_for(sharding: Any) -> Optional[str]:
+    """A pool `kind` key for a placement: stable repr of a NamedSharding
+    (mesh + spec + memory kind) so per-shard buffers never cross shards;
+    None placements pool together."""
+    if sharding is None:
+        return None
+    kind = getattr(sharding, "memory_kind", None)
+    return f"{sharding!r}/{kind}"
+
+
+class BufferPool:
+    """Keyed free-list pool of host-side staging buffers (module
+    docstring for the full contract)."""
+
+    def __init__(self, name: str = "pool"):
+        self.name = name
+        self._lock = threading.Lock()
+        self._free: dict[tuple, list[np.ndarray]] = {}
+        # id(buf) -> (key, buf): the buf reference keeps id() stable
+        self._acquired: dict[int, tuple] = {}
+        self._hits = 0
+        self._misses = 0
+        self._alloc_bytes = 0
+        self._leaked = 0
+
+    # ------------------------------------------------------------------
+    def acquire(self, shape, dtype, kind: Optional[str] = None) -> np.ndarray:
+        """A writable (shape, dtype) buffer — reused when a released one
+        with the same key exists, freshly allocated (and counted)
+        otherwise."""
+        shape = tuple(int(s) for s in (shape if isinstance(shape, (tuple, list))
+                                       else (shape,)))
+        key = (shape, np.dtype(dtype).str, kind)
+        with self._lock:
+            free = self._free.get(key)
+            if free:
+                buf = free.pop()
+                self._hits += 1
+                self._acquired[id(buf)] = (key, buf)
+                return buf
+            self._misses += 1
+        # allocate outside the lock; account it as a pool allocation so
+        # benchmarks can assert the steady state allocates nothing fresh
+        buf = np.empty(shape, np.dtype(dtype))
+        from repro.telemetry import trafficwatch
+        trafficwatch.alloc(buf.nbytes, channel=self.name)
+        with self._lock:
+            self._alloc_bytes += buf.nbytes
+            self._acquired[id(buf)] = (key, buf)
+        return buf
+
+    def release(self, buf: Optional[np.ndarray]) -> None:
+        """Return an acquired buffer to its free list (None is a no-op,
+        so callers can unconditionally release an optional slot)."""
+        if buf is None:
+            return
+        with self._lock:
+            entry = self._acquired.pop(id(buf), None)
+            if entry is None:
+                raise ValueError(
+                    f"{self.name}: release of a buffer this pool never "
+                    f"acquired (or already released)")
+            key, _ = entry
+            self._free.setdefault(key, []).append(buf)
+
+    def maybe_release(self, buf) -> bool:
+        """`release` that no-ops on buffers this pool never acquired —
+        for callers handed an opaque payload that is pooled only on SOME
+        channel tiers (e.g. the runtime recycling a striped reassembly
+        scratch, where the host tier hands back a jax buffer instead).
+        Returns True iff the buffer was released."""
+        if buf is None or not isinstance(buf, np.ndarray):
+            return False
+        with self._lock:
+            entry = self._acquired.pop(id(buf), None)
+            if entry is None:
+                return False
+            key, _ = entry
+            self._free.setdefault(key, []).append(buf)
+            return True
+
+    # ------------------------------------------------------------------
+    def drain(self) -> int:
+        """Drop cached free buffers and count still-acquired ones as
+        leaks. Returns the number of leaks detected (also accumulated in
+        `stats()["leaked"]`). Called from the owning channel's
+        `drain()`/`close()` — never on the steady-state path."""
+        with self._lock:
+            self._free.clear()
+            leaks = len(self._acquired)
+            self._leaked += leaks
+            # keep the acquired entries: a caller may still release them
+            return leaks
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "name": self.name,
+                "hits": self._hits,
+                "misses": self._misses,
+                "allocations": self._misses,
+                "alloc_bytes": self._alloc_bytes,
+                "outstanding": len(self._acquired),
+                "free": sum(len(v) for v in self._free.values()),
+                "leaked": self._leaked,
+            }

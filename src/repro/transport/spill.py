@@ -182,8 +182,12 @@ class SpillChannel(HostChannel):
                 self._cond.wait()
 
     # ------------------------------------------------------------------
-    def stage(self, tree, tag: str = "stage_to_host"):
-        staged = super().stage(tree, tag)
+    def stage(self, tree, tag: str = "stage_to_host",
+              account: bool = True):
+        # packed payloads (transport.coalesce) need no special handling
+        # here: the ledger is segment-granular, and a 1-leaf packed tree
+        # is just a segment whose spill file holds one buffer
+        staged = super().stage(tree, tag, account=account)
         leaves, treedef = jax.tree_util.tree_flatten(staged)
         nbytes = trafficwatch.tree_bytes(staged)
         with self._lock:
@@ -256,6 +260,7 @@ class SpillChannel(HostChannel):
                 self._dir = None
             except OSError:
                 pass
+        super().drain()       # drop pooled staging buffers, flag leaks
 
     def stats(self) -> dict:
         out = super().stats()

@@ -12,28 +12,49 @@ under "<name>/<i>"), and `fetch` reassembles the original tree from the
 stripes — their union is the full payload, bit for bit
 (tests/test_transport.py). Uploads stripe the same way.
 
+Packed (coalesced) payloads stripe BY BYTE RANGE: a
+`transport.coalesce` payload is one uint8 buffer — per-leaf round-robin
+would put the whole thing on a single path and defeat multi-path — so
+`stage`/`upload` split it into `ways` contiguous byte ranges
+(`coalesce.byte_stripes`) and each sub-channel moves (and accounts) its
+own range; `fetch` reassembles into a pooled scratch buffer
+(`self.pool`, zero fresh allocations in steady state) that the caller
+recycles via `pool.maybe_release` once consumed.
+
 Sub-channels default to `HostChannel`s; pass `sub_factory` to build the
 stripes from any other tier (e.g. spill-backed stripes = multi-path AND
 multi-level, the full MLP-Offload picture). The codec is the striped
 channel's own (striping moves bytes, it never re-encodes them).
+
+Accounting: the striped channel itself never records wire bytes — each
+sub-channel is the single accounting point for its own stripe (their
+union is the payload, so totals add up exactly once; the `account=`
+toggle in the stage/upload contract).
 """
 from __future__ import annotations
 
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core import wire
+from repro.transport import coalesce
 from repro.transport.host import CodecHooks, HostChannel
+from repro.transport.pool import BufferPool
 
 
 class _StripedHandle:
-    """Treedef + per-leaf (sub-channel index, sub-handle) stripes."""
-    __slots__ = ("treedef", "parts")
+    """Treedef + per-leaf (sub-channel index, sub-handle) stripes.
+    `packed` is (total_bytes, byte_bounds) when the stripes are byte
+    ranges of one coalesced buffer instead of pytree leaves."""
+    __slots__ = ("treedef", "parts", "packed")
 
-    def __init__(self, treedef, parts):
+    def __init__(self, treedef, parts, packed=None):
         self.treedef = treedef
         self.parts = parts            # list of (sub_index, sub_handle)
+        self.packed = packed          # (total, [(start, stop), ...]) | None
 
 
 class StripedChannel(CodecHooks):
@@ -57,26 +78,82 @@ class StripedChannel(CodecHooks):
             sub_factory = lambda i: HostChannel(zcfg, name=f"{name}/{i}",
                                                 **kw)
         self.subs = [sub_factory(i) for i in range(ways)]
+        self.pool = BufferPool(name=name)   # packed-reassembly scratch
         self._rr = 0
 
     # -- transfers (codec hooks inherited from CodecHooks) ---------------
-    def stage(self, tree, tag: str = "stage_to_host"):
+    def _stage_packed(self, tree, tag: str, account: bool):
+        """Byte-range striping of a coalesced payload: stripe i is a
+        contiguous uint8 slice staged (and accounted) by sub-channel
+        (rr + i) % ways. Slicing is an async device op — never a read."""
+        buf = tree[coalesce.PACKED_KEY]
+        total = int(buf.shape[0])
+        bounds = coalesce.byte_stripes(total, self.ways)
+        rr = self._rr
+        parts = []
+        for i, (start, stop) in enumerate(bounds):
+            k = (rr + i) % self.ways
+            stripe = jax.lax.slice(buf, (start,), (stop,))
+            parts.append((k, self.subs[k].stage(
+                {coalesce.PACKED_KEY: stripe}, tag, account=account)))
+        self._rr = (rr + len(bounds)) % self.ways
+        return _StripedHandle(None, parts, packed=(total, bounds))
+
+    def stage(self, tree, tag: str = "stage_to_host",
+              account: bool = True):
+        # the striped parent never accounts — its SUBS are the single
+        # accounting point, one stripe each — so `account` forwards to
+        # them verbatim (False when a composing caller already counted)
+        if coalesce.is_packed(tree):
+            return self._stage_packed(tree, tag, account)
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         parts = []
         rr = self._rr
         for i, leaf in enumerate(leaves):
             k = (rr + i) % self.ways
-            parts.append((k, self.subs[k].stage(leaf, tag)))
+            parts.append((k, self.subs[k].stage(leaf, tag,
+                                                account=account)))
         self._rr = (rr + len(leaves)) % self.ways
         return _StripedHandle(treedef, parts)
 
     def fetch(self, handle):
         if not isinstance(handle, _StripedHandle):
             return handle
+        if handle.packed is not None:
+            # reassemble the byte ranges into ONE pooled scratch buffer
+            # (steady state: a pool hit, no fresh allocation). The caller
+            # recycles it with `pool.maybe_release` once consumed.
+            total, bounds = handle.packed
+            out = self.pool.acquire((total,), np.uint8)
+            for (k, h), (start, stop) in zip(handle.parts, bounds):
+                stripe = self.subs[k].fetch(h)[coalesce.PACKED_KEY]
+                out[start:stop] = np.asarray(stripe)
+            return {coalesce.PACKED_KEY: out}
         leaves = [self.subs[k].fetch(h) for k, h in handle.parts]
         return jax.tree_util.tree_unflatten(handle.treedef, leaves)
 
-    def upload(self, tree, sharding=None, tag: str = "upload"):
+    def _upload_packed(self, tree, tag: str, account: bool):
+        """Byte-range striping of a packed upload. Each sub-channel
+        accounts its stripe; the stripes are rejoined on device with one
+        concatenate (the packed layout must arrive contiguous)."""
+        buf = tree[coalesce.PACKED_KEY]
+        total = int(buf.shape[0] if hasattr(buf, "shape") else len(buf))
+        bounds = coalesce.byte_stripes(total, self.ways)
+        rr = self._rr
+        stripes = []
+        for i, (start, stop) in enumerate(bounds):
+            k = (rr + i) % self.ways
+            stripes.append(self.subs[k].upload(buf[start:stop], None, tag,
+                                               account=account))
+        self._rr = (rr + len(bounds)) % self.ways
+        return {coalesce.PACKED_KEY:
+                jnp.concatenate([jnp.asarray(s) for s in stripes])}
+
+    def upload(self, tree, sharding=None, tag: str = "upload",
+               account: bool = True):
+        # same single-accounting rule as stage(): subs count, parent never
+        if coalesce.is_packed(tree):
+            return self._upload_packed(tree, tag, account)
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         if sharding is None:
             shards = [None] * len(leaves)
@@ -90,7 +167,8 @@ class StripedChannel(CodecHooks):
                     f"upload sharding must match tree leaf-for-leaf: "
                     f"{len(shards)} shardings for {len(leaves)} leaves")
         rr = self._rr
-        out = [self.subs[(rr + i) % self.ways].upload(x, s, tag)
+        out = [self.subs[(rr + i) % self.ways].upload(x, s, tag,
+                                                      account=account)
                for i, (x, s) in enumerate(zip(leaves, shards))]
         self._rr = (rr + len(leaves)) % self.ways
         return jax.tree_util.tree_unflatten(treedef, out)
@@ -98,6 +176,7 @@ class StripedChannel(CodecHooks):
     def drain(self) -> None:
         for sub in self.subs:
             sub.drain()
+        self.pool.drain()
 
     def stats(self) -> dict:
         subs = [sub.stats() for sub in self.subs]
@@ -105,5 +184,6 @@ class StripedChannel(CodecHooks):
             "name": self.name, "tier": self.tier, "ways": self.ways,
             "staged_bytes": sum(s.get("staged_bytes", 0) for s in subs),
             "uploaded_bytes": sum(s.get("uploaded_bytes", 0) for s in subs),
+            "pool": self.pool.stats(),
             "subchannels": subs,
         }

@@ -1,0 +1,159 @@
+"""`transport.coalesce` (ISSUE 7): the packed uint8 wire layout is
+bitwise-lossless on every path — traced pack/unpack, Pallas interpret vs
+ref oracle, zero-copy host views, pooled host-side packing — and the
+byte-stripe partition is exact."""
+import os
+
+os.environ["REPRO_PALLAS_INTERPRET"] = "1"   # force interpret-mode Pallas
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.transport import coalesce
+from repro.transport.coalesce import PACKED_KEY
+
+
+def _tree():
+    """Mixed dtypes, shapes, and itemsizes — incl. bool and scalars."""
+    k = jax.random.PRNGKey(0)
+    return {
+        "g_comp": {"wq": jax.random.normal(k, (4, 8), jnp.bfloat16),
+                   "wk": {"q": jnp.arange(-7, 9, dtype=jnp.int8)
+                          .reshape(4, 4),
+                          "scale": jax.random.normal(k, (4, 1))}},
+        "comp_idx": {"wq": jnp.arange(5, dtype=jnp.int32)},
+        "refresh": jnp.asarray(True),
+        "sync_master": jnp.asarray(False),
+        "mean": jnp.float32(3.25),
+    }
+
+
+def _assert_bitwise(a, b):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert [p for p, _ in la] == [p for p, _ in lb]
+    for (p, x), (_, y) in zip(la, lb):
+        ax, ay = np.asarray(x), np.asarray(y)
+        assert ax.dtype == ay.dtype and ax.shape == ay.shape, p
+        np.testing.assert_array_equal(ax, ay, err_msg=str(p))
+
+
+def test_plan_aligned_offsets_and_stable_total():
+    spec = coalesce.plan(_tree())
+    seen = set()
+    for s in spec.slots:
+        itemsize = np.dtype(s.dtype).itemsize
+        assert s.offset % itemsize == 0, s
+        assert s.nbytes == int(np.prod(s.shape, dtype=np.int64)) * itemsize
+        # byte ranges never overlap
+        rng = (s.offset, s.offset + s.nbytes)
+        assert all(rng[1] <= lo or rng[0] >= hi for lo, hi in seen)
+        seen.add(rng)
+    assert spec.total_bytes >= max(hi for _, hi in seen)
+    # planning is deterministic
+    assert coalesce.plan(_tree()).total_bytes == spec.total_bytes
+
+
+def test_pack_unpack_roundtrip_bitwise_traced():
+    tree = _tree()
+    packed, spec = coalesce.pack_tree(tree)
+    assert coalesce.is_packed(packed)
+    buf = packed[PACKED_KEY]
+    assert buf.dtype == jnp.uint8 and buf.shape == (spec.total_bytes,)
+    _assert_bitwise(coalesce.unpack_tree(buf, spec), tree)
+
+
+def test_pack_unpack_under_jit():
+    tree = _tree()
+    spec = coalesce.plan(tree)
+    packed = jax.jit(lambda t: coalesce.pack_tree(t, spec)[0])(tree)
+    out = jax.jit(lambda b: coalesce.unpack_tree(b, spec))(
+        packed[PACKED_KEY])
+    _assert_bitwise(out, tree)
+
+
+def test_unpack_tree_host_zero_copy_views():
+    tree = _tree()
+    packed, spec = coalesce.pack_tree(tree)
+    host_buf = np.asarray(packed[PACKED_KEY])
+    out = coalesce.unpack_tree_host(host_buf, spec)
+    _assert_bitwise(out, tree)
+    # the leaves are VIEWS of the staged buffer, not copies
+    for leaf in jax.tree.leaves(out):
+        assert isinstance(leaf, np.ndarray)
+        assert leaf.base is not None
+        assert leaf.base.base is host_buf or leaf.base is host_buf
+
+
+def test_unpack_field_is_eager_and_exact():
+    tree = _tree()
+    packed, spec = coalesce.pack_tree(tree)
+    got = coalesce.unpack_field(packed[PACKED_KEY], spec, "comp_idx")
+    _assert_bitwise(got, tree["comp_idx"])
+    # a single-leaf field comes back as the leaf itself
+    got = coalesce.unpack_field(packed[PACKED_KEY], spec, "refresh")
+    assert bool(np.asarray(got)) is True
+
+
+def test_pack_into_matches_traced_pack_bitwise():
+    tree = _tree()
+    packed, spec = coalesce.pack_tree(tree)
+    out = np.full((spec.total_bytes,), 0xAB, np.uint8)  # dirty scratch
+    coalesce.pack_into(tree, spec, out)
+    # identical bytes INCLUDING the zero-filled alignment gaps, so the
+    # host-packed and device-packed wire layouts are interchangeable
+    np.testing.assert_array_equal(out, np.asarray(packed[PACKED_KEY]))
+
+
+def test_pack_into_validates_scratch():
+    tree = _tree()
+    spec = coalesce.plan(tree)
+    with pytest.raises(ValueError):
+        coalesce.pack_into(tree, spec,
+                           np.zeros((spec.total_bytes + 1,), np.uint8))
+    with pytest.raises(ValueError):
+        coalesce.pack_into(tree, spec,
+                           np.zeros((spec.total_bytes,), np.int8))
+
+
+def test_pack_kernel_pallas_matches_ref():
+    """kernels/pack.py interpret-mode Pallas vs the ref.py oracle."""
+    from repro.kernels import pack as kp
+    from repro.kernels import ref
+    segs = [jnp.arange(7, dtype=jnp.uint8),
+            jnp.arange(16, dtype=jnp.uint8)[::-1],
+            jnp.ones((3,), jnp.uint8) * 255]
+    offsets = [0, 8, 26]                       # gaps at 7..8 and 24..26
+    total = 32
+    a = kp.pack_segments_pallas(segs, offsets, total, interpret=True)
+    b = ref.pack_segments_ref(segs, offsets, total)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    sizes = [7, 16, 3]
+    ua = kp.unpack_segments_pallas(a, offsets, sizes, interpret=True)
+    ub = ref.unpack_segments_ref(b, offsets, sizes)
+    for x, y, src in zip(ua, ub, segs):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(src))
+
+
+def test_byte_stripes_partition_exactly():
+    for total, ways in [(10, 3), (7, 7), (5, 8), (0, 2), (100, 1)]:
+        stripes = coalesce.byte_stripes(total, ways)
+        covered = 0
+        prev = 0
+        for start, stop in stripes:
+            assert start == prev and stop >= start
+            covered += stop - start
+            prev = stop
+        assert covered == total
+        if stripes:
+            assert stripes[-1][1] == total
+
+
+def test_is_packed_rejects_lookalikes():
+    assert not coalesce.is_packed({"rows": jnp.zeros(3)})
+    assert not coalesce.is_packed({PACKED_KEY: jnp.zeros(3), "x": 1})
+    assert not coalesce.is_packed(jnp.zeros(3))
+    assert coalesce.is_packed({PACKED_KEY: jnp.zeros(3, jnp.uint8)})

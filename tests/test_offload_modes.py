@@ -61,3 +61,34 @@ def test_single_device_host_memory_roundtrip():
     except (ValueError, NotImplementedError) as e:
         pytest.skip(f"backend lacks pinned_host: {e}")
     np.testing.assert_array_equal(np.asarray(y), x)
+
+
+def test_host_memory_kind_cached_per_device_with_reset_hook():
+    """The kind probe walks addressable_memories() through the C++
+    client; it must run ONCE per device (hot-path callers hit the cache)
+    and re-probe only after reset_host_memory_kind_cache()."""
+    from repro.distributed import offload
+
+    calls = []
+
+    class FakeMem:
+        kind = "pinned_host"
+
+    class FakeDev:
+        def addressable_memories(self):
+            calls.append(1)
+            return [FakeMem()]
+
+    offload.reset_host_memory_kind_cache()
+    dev = FakeDev()
+    assert offload.host_memory_kind(dev) == "pinned_host"
+    assert offload.host_memory_kind(dev) == "pinned_host"
+    assert len(calls) == 1                    # second answer was cached
+    offload.reset_host_memory_kind_cache()
+    assert offload.host_memory_kind(dev) == "pinned_host"
+    assert len(calls) == 2                    # reset forces a re-probe
+    # the real default device caches too (incl. a possible None answer)
+    offload.reset_host_memory_kind_cache()
+    first = offload.host_memory_kind()
+    assert offload.host_memory_kind() == first
+    offload.reset_host_memory_kind_cache()

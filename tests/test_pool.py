@@ -1,0 +1,94 @@
+"""`transport.pool.BufferPool` lifecycle (ISSUE 7 satellite): keyed
+reuse, zero-allocation steady state, leak detection on drain, and
+allocation attribution through trafficwatch."""
+import numpy as np
+import pytest
+
+from repro.telemetry import trafficwatch
+from repro.transport.pool import BufferPool, key_for
+
+
+def test_acquire_release_reuses_the_same_buffer():
+    pool = BufferPool(name="t")
+    a = pool.acquire((4, 8), np.float32)
+    assert a.shape == (4, 8) and a.dtype == np.float32
+    pool.release(a)
+    b = pool.acquire((4, 8), np.float32)
+    assert b is a                              # recycled, not reallocated
+    st = pool.stats()
+    assert st["hits"] == 1 and st["misses"] == 1 and st["allocations"] == 1
+
+
+def test_keying_separates_shape_dtype_and_kind():
+    pool = BufferPool(name="t")
+    a = pool.acquire((4,), np.float32)
+    pool.release(a)
+    # different dtype, shape, or kind never reuses a mismatched buffer
+    assert pool.acquire((4,), np.int32) is not a
+    assert pool.acquire((5,), np.float32) is not a
+    assert pool.acquire((4,), np.float32, kind="pinned") is not a
+    # the exact key does
+    assert pool.acquire((4,), np.float32) is a
+
+
+def test_zero_alloc_steady_state_after_warmup():
+    """After one warmup acquire per key, a steady-state loop is 100%
+    hits — the bench_dispatch allocations/step == 0 gate in miniature."""
+    pool = BufferPool(name="t")
+    warm = pool.acquire((16,), np.uint8)
+    pool.release(warm)
+    before = pool.stats()["allocations"]
+    for _ in range(32):
+        buf = pool.acquire((16,), np.uint8)
+        pool.release(buf)
+    st = pool.stats()
+    assert st["allocations"] == before         # zero fresh allocations
+    assert st["hits"] >= 32
+
+
+def test_allocations_attributed_to_trafficwatch():
+    trafficwatch.reset()
+    pool = BufferPool(name="mypool")
+    pool.acquire((10,), np.float64)            # 80 B miss
+    c = trafficwatch.counts()
+    assert c["allocations"] == 1
+    assert c["alloc_bytes"] == 80
+    assert c["allocations_by_channel"] == {"mypool": 1}
+    trafficwatch.reset()
+
+
+def test_release_of_foreign_buffer_raises_but_maybe_release_noops():
+    pool = BufferPool(name="t")
+    stranger = np.zeros(3)
+    with pytest.raises(ValueError, match="never"):
+        pool.release(stranger)
+    assert pool.maybe_release(stranger) is False
+    assert pool.maybe_release(None) is False
+    assert pool.maybe_release("not-a-buffer") is False
+    mine = pool.acquire((3,), np.float64)
+    assert pool.maybe_release(mine) is True
+
+
+def test_drain_drops_capacity_and_flags_leaks():
+    pool = BufferPool(name="t")
+    freed = pool.acquire((4,), np.int8)
+    pool.release(freed)
+    held = pool.acquire((8,), np.int8)         # never released: a leak
+    assert pool.drain() == 1
+    st = pool.stats()
+    assert st["leaked"] == 1 and st["free"] == 0
+    # drained free lists are gone — same key allocates fresh
+    again = pool.acquire((4,), np.int8)
+    assert again is not freed
+    # a late release of the leaked buffer still works (entry kept)
+    pool.release(held)
+
+
+def test_key_for_shardings():
+    assert key_for(None) is None
+    class FakeSharding:
+        memory_kind = "unpinned_host"
+        def __repr__(self):
+            return "FakeSharding(mesh=x)"
+    k = key_for(FakeSharding())
+    assert "FakeSharding" in k and "unpinned_host" in k

@@ -13,9 +13,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.check_regression import BASELINE_DIR, check_report
 
 
-def _dispatch(syncs=0.0, speedup=1.14):
+def _dispatch(syncs=0.0, speedup=1.14, transfers=1.0, allocs=0.0,
+              parity=True, factor=37.0):
     return {"headline": {"async_steady_syncs_per_step": syncs,
-                         "step_time_speedup_vs_blocking": speedup}}
+                         "step_time_speedup_vs_blocking": speedup,
+                         "async_steady_transfers_per_step": transfers,
+                         "async_steady_allocs_per_step": allocs,
+                         "transfer_coalescing_factor": factor,
+                         "coalesce_loss_parity": parity}}
 
 
 def _traffic(ratio=2.5, loss_diff=0.001, syncs=0.0, rtol=0.05):
@@ -63,6 +68,36 @@ def test_gate_hard_fails_on_any_steady_state_sync():
     errs = check_report("traffic", _traffic(syncs=2.0),
                         _traffic(syncs=2.0), 0.10)
     assert any("must be 0" in e for e in errs)
+
+
+def test_gate_hard_fails_on_coalescing_contract():
+    """Transfers/step, allocations/step, and coalesce parity are hard
+    invariants (ISSUE 7) — baseline-independent, NaN-safe."""
+    errs = check_report("dispatch", _dispatch(transfers=5.0),
+                        _dispatch(transfers=5.0), 0.10)
+    assert any("transfers/step" in e for e in errs)
+    errs = check_report("dispatch", _dispatch(transfers=float("nan")),
+                        _dispatch(), 0.10)
+    assert any("transfers/step" in e for e in errs)
+    errs = check_report("dispatch", _dispatch(allocs=1.0),
+                        _dispatch(allocs=1.0), 0.10)
+    assert any("allocations/step" in e for e in errs)
+    errs = check_report("dispatch", _dispatch(parity=False),
+                        _dispatch(), 0.10)
+    assert any("diverged" in e for e in errs)
+    # <= 2/step (packed buffer + one scalar companion) is still fine
+    assert check_report("dispatch", _dispatch(transfers=2.0),
+                        _dispatch(), 0.10) == []
+
+
+def test_gate_fails_on_coalescing_factor_regression():
+    """The coalescing factor is a deterministic dispatch-count ratio:
+    tight 10% tolerance, like the compression ratio."""
+    cur = _dispatch(factor=37.0 * 0.85)
+    errs = check_report("dispatch", cur, _dispatch(), 0.10)
+    assert len(errs) == 1 and "transfer_coalescing_factor" in errs[0]
+    assert check_report("dispatch", _dispatch(factor=37.0 * 0.95),
+                        _dispatch(), 0.10) == []
 
 
 def test_gate_fails_on_loss_drift():

@@ -321,7 +321,9 @@ def test_trafficwatch_exact_bytes_for_known_pytree():
     c = trafficwatch.counts()
     assert c["total_bytes"] == 107 + 128
     assert c["by_tag"] == {"host_bound": 107, "pending_upload": 128}
-    assert c["transfers_by_tag"] == {"host_bound": 1, "pending_upload": 1}
+    # transfers count dispatches per array leaf (5 array leaves above);
+    # a raw record() is one transfer unless told otherwise
+    assert c["transfers_by_tag"] == {"host_bound": 5, "pending_upload": 1}
     trafficwatch.reset()
     assert trafficwatch.total() == 0
 

@@ -106,8 +106,9 @@ def test_pending_slot_never_drops_an_apply():
     landed = sel.gather_rows(pseg[p0], idx[p0])
     np.testing.assert_allclose(np.asarray(landed, np.float32), 3.0)
     # ...and the newer ones occupy the slot for the next step
+    # (pending_view unpacks the coalesced slot back to its logical layout)
     np.testing.assert_allclose(
-        np.asarray(rt.pending["rows"][p0], np.float32), 5.0)
+        np.asarray(rt.pending_view()["rows"][p0], np.float32), 5.0)
     rt.close()
 
 
