@@ -21,12 +21,20 @@ async run (every transfer in repo code is byte-accounted by
     trajectory) and steady-state syncs (must stay 0 under compression);
   * mean step wall time (compression must not cost the zero-sync path).
 
+With `--skewed` the bench additionally runs the adaptive-transport
+scenario (ISSUE 8): two offload paths with one throttled ~4x slower,
+measured blind (equal split) vs oracle (known-optimal weights) vs the
+`AdaptiveChannel` controller, which must recover >= 50% of the
+blind->oracle throughput gap from its own bandwidth measurements — plus
+a symmetric-path run gated BIT-IDENTICAL to the static host transport.
+
 Writes `BENCH_traffic.json` and doubles as a row source for
 `benchmarks/run.py` (quick mode). `benchmarks/check_regression.py` diffs
 the headline against the committed baseline in CI.
 
     PYTHONPATH=src python benchmarks/bench_traffic.py \
-        [--steps 60] [--arch opt-350m] [--quick] [--out BENCH_traffic.json]
+        [--steps 60] [--arch opt-350m] [--quick] [--skewed] \
+        [--out BENCH_traffic.json]
 """
 from __future__ import annotations
 
@@ -46,14 +54,18 @@ MIN_INT8_RATIO = 1.9
 
 
 def run_wire(wire_dtype: str, cfg, zcfg_base, steps: int, seq: int,
-             batch: int, seed: int = 0, transport: str = "host") -> dict:
-    """Train `steps` async steps under `wire_dtype` over `transport`;
-    return byte/timing statistics from trafficwatch/syncwatch."""
+             batch: int, seed: int = 0, transport="host") -> dict:
+    """Train `steps` async steps under `wire_dtype` over `transport`
+    (a registry name, or a zero-arg channel factory for the skewed
+    scenario's custom topologies); return byte/timing statistics from
+    trafficwatch/syncwatch."""
     from repro.data import make_train_stream
     from repro.engine import Engine
     from repro.runtime import RuntimeConfig
     from repro.telemetry import syncwatch, trafficwatch
 
+    if callable(transport):
+        transport = transport()
     zcfg = dataclasses.replace(zcfg_base, wire_dtype=wire_dtype)
     # straggler window extension OFF: extensions push pending uploads
     # out of the measured window on a loaded machine, which would make
@@ -137,9 +149,120 @@ def run_wire(wire_dtype: str, cfg, zcfg_base, steps: int, seq: int,
     }
 
 
+def run_skewed(cfg, zcfg_base, steps: int, seq: int, batch: int,
+               host_ref: dict) -> dict:
+    """Skewed-bandwidth scenario (ISSUE 8): two offload paths, one
+    throttled ~4x slower than the other, measured over four transports:
+
+      blind         StripedChannel, equal split — half the bytes pile
+                    onto the slow link every step
+      oracle        same links, weights pinned to the known-optimal
+                    bandwidth-proportional split [0.8, 0.2]
+      adaptive      AdaptiveChannel over the same throttled links — must
+                    RECOVER most of the blind->oracle throughput gap
+                    from its own measurements, with the zero-sync steady
+                    state intact
+      adaptive_sym  AdaptiveChannel over symmetric (unthrottled) links —
+                    the do-no-harm half: bytes/step within noise of the
+                    static host transport and a BIT-IDENTICAL final loss
+                    (reweighting moves bytes, never values)
+
+    The throttle is sized from the measured host run: the slow link
+    alone needs ~3 host-steps of wall time per step of bytes, so the
+    blind split visibly gates throughput while the oracle split runs
+    near-unthrottled. The wire is pinned to bf16 for every run (a
+    single-rung ladder) so the scenario isolates the STRIPE-WEIGHT knob;
+    escalation is covered by tests/test_adaptive.py.
+    """
+    from repro.transport import (AdaptiveChannel, ControllerConfig,
+                                 HostChannel, StripedChannel,
+                                 ThrottledChannel)
+
+    zcfg = dataclasses.replace(zcfg_base, wire_dtype="bf16")
+    hb_bytes = max(host_ref["host_bound_bytes_per_step"], 1.0)
+    slow_s = 3.0 * host_ref["mean_step_ms"] / 1e3
+    bw_slow = (hb_bytes / 2) / max(slow_s, 1e-6)
+    bw_fast = 4.0 * bw_slow
+    pinned = ControllerConfig(wire_ladder=("bf16",))
+    channels: dict = {}
+
+    def throttled_sub(name):
+        def sub(i):
+            return ThrottledChannel(
+                HostChannel(zcfg, name=f"{name}/{i}"),
+                [bw_fast, bw_slow][i])
+        return sub
+
+    def blind():
+        ch = StripedChannel(zcfg, ways=2, sub_factory=throttled_sub("blind"),
+                            name="blind")
+        channels["blind"] = ch
+        return ch
+
+    def oracle():
+        ch = StripedChannel(zcfg, ways=2,
+                            sub_factory=throttled_sub("oracle"),
+                            name="oracle")
+        ch.set_weights([0.8, 0.2])     # bw_fast/(fast+slow), bw_slow/...
+        channels["oracle"] = ch
+        return ch
+
+    def adaptive():
+        ch = AdaptiveChannel(zcfg, ways=2,
+                             throttle_bps=[bw_fast, bw_slow],
+                             ctrl_cfg=pinned, name="adaptive")
+        channels["adaptive"] = ch
+        return ch
+
+    def adaptive_sym():
+        ch = AdaptiveChannel(zcfg, ways=2, ctrl_cfg=pinned,
+                             name="adaptive")
+        channels["adaptive_sym"] = ch
+        return ch
+
+    runs = {name: run_wire("bf16", cfg, zcfg, steps, seq, batch,
+                           transport=factory)
+            for name, factory in (("blind", blind), ("oracle", oracle),
+                                  ("adaptive", adaptive),
+                                  ("adaptive_sym", adaptive_sym))}
+
+    blind_ms = runs["blind"]["mean_step_ms"]
+    oracle_ms = runs["oracle"]["mean_step_ms"]
+    adaptive_ms = runs["adaptive"]["mean_step_ms"]
+    gap = max(blind_ms - oracle_ms, 1e-9)
+    sym = runs["adaptive_sym"]
+    return {
+        "bandwidth": {"fast_bps": bw_fast, "slow_bps": bw_slow},
+        "runs": runs,
+        "adaptive_final_weights": channels["adaptive"].stats()["weights"],
+        "adaptive_decisions": len(
+            channels["adaptive"].stats()["decisions"]),
+        "headline": {
+            # the acceptance criterion: the controller recovers >= 50%
+            # of the blind->oracle throughput gap from measurements alone
+            "skew_recovered_frac": (blind_ms - adaptive_ms) / gap,
+            "skew_blind_ms_per_step": blind_ms,
+            "skew_oracle_ms_per_step": oracle_ms,
+            "skew_adaptive_ms_per_step": adaptive_ms,
+            # do-no-harm gates (symmetric paths vs the static host run)
+            "adaptive_bytes_ratio_vs_host":
+                sym["bytes_per_step"]
+                / max(host_ref["bytes_per_step"], 1e-9),
+            "adaptive_transfers_per_step": sym["transfers_per_step"],
+            "adaptive_sym_loss_bitwise_vs_host":
+                sym["final_loss"] == host_ref["final_loss"],
+            "adaptive_steady_syncs_per_step":
+                max(runs["adaptive"]["steady_syncs_per_step"],
+                    sym["steady_syncs_per_step"]),
+            "adaptive_unattributed_bytes":
+                max(r["unattributed_bytes"] for r in runs.values()),
+        },
+    }
+
+
 def run(steps: int = 60, arch: str = "opt-350m", seq: int = 64,
         batch: int = 8, quick: bool = False,
-        transport: str = "host") -> dict:
+        transport: str = "host", skewed: bool = False) -> dict:
     from repro.configs import get_config, reduced_config
     from repro.core.zen_optimizer import ZenFlowConfig
 
@@ -186,6 +309,12 @@ def run(steps: int = 60, arch: str = "opt-350m", seq: int = 64,
                                       for w in wires.values()),
         },
     }
+    if skewed:
+        # the skewed-bandwidth adaptive-transport scenario rides on the
+        # bf16 host run as its reference (same wire, same shapes)
+        sk = run_skewed(cfg, zcfg, steps, seq, batch, wires["bf16"])
+        report["skewed"] = {k: v for k, v in sk.items() if k != "headline"}
+        report["headline"].update(sk["headline"])
     return report
 
 
@@ -208,6 +337,25 @@ def check(report: dict) -> list[str]:
     if h.get("unattributed_bytes", 0) != 0:
         errs.append(f"{h['unattributed_bytes']} staged bytes carry no "
                     f"channel/tier attribution (repro.transport contract)")
+    if "skew_recovered_frac" in h:
+        # adaptive-transport contract (ISSUE 8; only when the skewed
+        # scenario ran): recover >= half the blind->oracle gap, keep the
+        # zero-sync steady state, attribute every byte, and stay
+        # bit-identical to the static host transport on symmetric paths
+        if not (h["skew_recovered_frac"] >= 0.5):
+            errs.append(f"adaptive transport recovered only "
+                        f"{h['skew_recovered_frac']:.1%} of the skewed-"
+                        f"bandwidth throughput gap (>= 50% required)")
+        if h["adaptive_steady_syncs_per_step"] != 0.0:
+            errs.append("adaptive transport broke the zero-sync steady "
+                        "state")
+        if h["adaptive_unattributed_bytes"] != 0:
+            errs.append(f"{h['adaptive_unattributed_bytes']} adaptive-"
+                        f"transport bytes carry no channel/tier "
+                        f"attribution")
+        if h["adaptive_sym_loss_bitwise_vs_host"] is not True:
+            errs.append("adaptive transport on symmetric paths is not "
+                        "bit-identical to the static host transport")
     return errs
 
 
@@ -242,14 +390,20 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: <=16 steps, smaller shapes")
     ap.add_argument("--transport", default="host",
-                    choices=["host", "spill", "striped"],
+                    choices=["host", "spill", "striped", "adaptive"],
                     help="offload channel tier to measure over "
                          "(repro.transport)")
+    ap.add_argument("--skewed", action="store_true",
+                    help="also run the skewed-bandwidth adaptive-"
+                         "transport scenario (one path throttled ~4x "
+                         "slower; the controller must recover >= 50% of "
+                         "the blind->oracle throughput gap)")
     ap.add_argument("--out", default="BENCH_traffic.json")
     args = ap.parse_args()
 
     rep = run(steps=args.steps, arch=args.arch, seq=args.seq,
-              batch=args.batch, quick=args.quick, transport=args.transport)
+              batch=args.batch, quick=args.quick, transport=args.transport,
+              skewed=args.skewed)
     with open(args.out, "w") as f:
         json.dump(rep, f, indent=2, sort_keys=True)
     h = rep["headline"]
@@ -267,6 +421,14 @@ def main() -> None:
     print(f"int8 vs fp32 wire: {h['compression_ratio_int8_vs_fp32']:.2f}x "
           f"fewer bytes/step "
           f"(loss diff {h['int8_loss_rel_diff_vs_fp32']:.3%})")
+    if "skew_recovered_frac" in h:
+        w = rep["skewed"]["adaptive_final_weights"]
+        print(f"skewed: blind {h['skew_blind_ms_per_step']:.1f} ms/step, "
+              f"oracle {h['skew_oracle_ms_per_step']:.1f}, adaptive "
+              f"{h['skew_adaptive_ms_per_step']:.1f} -> recovered "
+              f"{h['skew_recovered_frac']:.1%} of the gap "
+              f"(final weights {w[0]:.2f}/{w[1]:.2f}; symmetric parity "
+              f"{'bitwise' if h['adaptive_sym_loss_bitwise_vs_host'] else 'BROKEN'})")
     errs = check(rep)
     if errs:
         raise SystemExit("FAIL: " + "; ".join(errs))

@@ -24,7 +24,14 @@ This gate fails the build when:
     gated at the wider TIMING_NOISE_TOLERANCE floor — see the
     constant's comment);
   * the int8 wire's final loss leaves the fp32 trajectory (hard
-    invariant, tolerance recorded in the report itself).
+    invariant, tolerance recorded in the report itself);
+  * the adaptive transport (ISSUE 8, when the traffic report carries
+    the --skewed scenario) recovers < 50% of the skewed-bandwidth
+    throughput gap, breaks the zero-sync steady state, leaves bytes
+    unattributed, or diverges bitwise from the static host transport
+    on symmetric paths (hard invariants) — or its traffic grows above
+    its baseline CEILING (CEIL_GATES: adaptivity may never cost bytes
+    or dispatches).
 
 Baselines live in `benchmarks/baselines/` (quick-mode runs, same shapes
 CI measures); refresh them deliberately with --update-baselines when a
@@ -50,6 +57,20 @@ RATIO_GATES = {
     "dispatch": ["step_time_speedup_vs_blocking",
                  "transfer_coalescing_factor"],
     "traffic": ["compression_ratio_int8_vs_fp32"],
+}
+
+# headline metrics gated as CEILINGS (cur <= base * (1 + tolerance)) —
+# the adaptive transport's do-no-harm contract (ISSUE 8): adaptivity may
+# never cost traffic. bytes_ratio_vs_host is gated against the static
+# host run inside the same report (~1.0); transfers/step is gated
+# against its own committed baseline (a 2-way stripe legitimately
+# dispatches ~2x host's transfers — the ceiling catches per-leaf
+# dispatch creeping back in, not striping itself). Both keys only exist
+# when the bench ran --skewed; skipped when absent from BOTH reports so
+# a non-skewed baseline refresh does not brick the gate.
+CEIL_GATES = {
+    "traffic": ["adaptive_bytes_ratio_vs_host",
+                "adaptive_transfers_per_step"],
 }
 
 # the coalesced steady step ships the packed host_bound buffer plus at
@@ -122,6 +143,26 @@ def check_report(kind: str, current: dict, baseline: dict,
         if drift is None or not (drift <= rtol):
             errs.append(f"traffic: int8 final loss off the fp32 trajectory "
                         f"by {drift} (> {rtol})")
+        # adaptive-transport hard invariants (ISSUE 8) — only when the
+        # report carries the skewed scenario
+        if "skew_recovered_frac" in cur_h:
+            rec = cur_h["skew_recovered_frac"]
+            if not (rec >= 0.5):
+                errs.append(f"traffic: adaptive transport recovered only "
+                            f"{rec} of the skewed-bandwidth gap "
+                            f"(must be >= 0.5)")
+            asyncs = cur_h.get("adaptive_steady_syncs_per_step")
+            if asyncs is None or asyncs > 0:
+                errs.append(f"traffic: adaptive steady-state syncs/step = "
+                            f"{asyncs} (must be 0)")
+            ab = cur_h.get("adaptive_unattributed_bytes")
+            if ab is None or ab != 0:
+                errs.append(f"traffic: adaptive transport left {ab} bytes "
+                            f"unattributed (must be 0)")
+            if cur_h.get("adaptive_sym_loss_bitwise_vs_host") is not True:
+                errs.append("traffic: adaptive transport on symmetric "
+                            "paths diverged from the static host "
+                            "transport (must be bit-identical)")
 
     # ratio gates vs the committed baseline
     for key in RATIO_GATES.get(kind, []):
@@ -142,6 +183,27 @@ def check_report(kind: str, current: dict, baseline: dict,
             errs.append(f"{kind}: {key} regressed to {cur:.4f} "
                         f"(baseline {base:.4f}, floor {floor:.4f} at "
                         f"{tol:.0%} tolerance)")
+
+    # ceiling gates (adaptivity must not cost traffic — ISSUE 8)
+    for key in CEIL_GATES.get(kind, []):
+        cur = cur_h.get(key)
+        base = base_h.get(key)
+        if cur is None and base is None:
+            continue        # scenario not run and never baselined: skip
+        if cur is None:
+            errs.append(f"{kind}: headline metric {key!r} missing from "
+                        f"current report but present in baseline — did "
+                        f"the skewed scenario get dropped from CI?")
+            continue
+        if base is None:
+            errs.append(f"{kind}: headline metric {key!r} missing from "
+                        f"baseline (refresh benchmarks/baselines/)")
+            continue
+        ceil = base * (1.0 + tolerance)
+        if not (cur <= ceil):           # NaN-safe: NaN must fail
+            errs.append(f"{kind}: {key} grew to {cur:.4f} "
+                        f"(baseline {base:.4f}, ceiling {ceil:.4f} at "
+                        f"{tolerance:.0%} tolerance)")
     return errs
 
 
@@ -185,7 +247,7 @@ def main() -> None:
         current, baseline = _load(path), _load(base_path)
         errs = check_report(kind, current, baseline, args.tolerance)
         status = "FAIL" if errs else "ok"
-        for key in RATIO_GATES[kind]:
+        for key in RATIO_GATES[kind] + CEIL_GATES.get(kind, []):
             cur = current.get("headline", {}).get(key)
             base = baseline.get("headline", {}).get(key)
             print(f"[{status}] {kind}.{key}: current={cur} baseline={base}")

@@ -21,8 +21,12 @@ def acc_vs_important(host: dict, host_bound: dict,
     den = jnp.zeros((), jnp.float32)
     count = jnp.maximum(host["count"].astype(jnp.float32), 1.0)
     for p, acc in host["acc"].items():
-        # mean per-channel energy of the accumulated gradient
-        e = jnp.sum(jnp.square(acc / count)) / max(acc.shape[-2], 1)
+        # mean per-channel energy of the accumulated gradient. Channels
+        # live on axis -2 for matrix-shaped accumulators; a rank-1 leaf
+        # (bias / norm scale) is a single channel — indexing shape[-2]
+        # on it raised IndexError before ISSUE 8's fix
+        channels = acc.shape[-2] if acc.ndim >= 2 else 1
+        e = jnp.sum(jnp.square(acc / count)) / max(channels, 1)
         num = num + e
         den = den + imp_ema[p]
     return num / jnp.maximum(den, 1e-30)

@@ -35,11 +35,15 @@ its own compressed stream, byte-accounted by `telemetry.trafficwatch`.
 
 Transport channels (`repro.transport`) are the backends' sibling
 registry for the *byte-moving* side: every factory accepts
-`transport=...` (a registry name — "host" | "spill" | "striped" — or an
-`OffloadChannel` instance). On the async/spmd pipelines the channel
-carries every device<->host payload (staging, uploads, wire codec); on
-the single-program backends only the codec hook applies. Default is the
-behavior-identical "host" tier.
+`transport=...` (a registry name — "host" | "spill" | "striped" |
+"adaptive" — or an `OffloadChannel` instance). On the async/spmd
+pipelines the channel carries every device<->host payload (staging,
+uploads, wire codec) and the runtime additionally drives any channel
+exposing `on_window_boundary` (the "adaptive" measured-path controller:
+stripe weights, spill budgets, wire-dtype escalation). On the
+single-program backends only the codec hook applies — there is no
+window-boundary hook, so an adaptive channel's wire stays pinned at its
+configured dtype there. Default is the behavior-identical "host" tier.
 
 New execution paths (another hardware offload route, elastic serving-time
 updates, ...) plug in via `register_backend` instead of a new driver;

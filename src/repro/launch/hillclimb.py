@@ -1,5 +1,19 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+
+def _merge_xla_flags(existing: str) -> str:
+    """Append the host-device-count flag WITHOUT clobbering whatever
+    XLA_FLAGS the caller already exported (the old assignment silently
+    discarded e.g. a user's --xla_dump_to). A caller that already pins
+    --xla_force_host_platform_device_count wins — their topology choice
+    is respected verbatim."""
+    flag = "--xla_force_host_platform_device_count=512"
+    if "--xla_force_host_platform_device_count" in existing:
+        return existing
+    return f"{existing} {flag}".strip()
+
+
+os.environ["XLA_FLAGS"] = _merge_xla_flags(os.environ.get("XLA_FLAGS", ""))
 # (must precede jax init — same production mesh as the dry-run)
 
 """§Perf hillclimb driver: hypothesis -> change -> re-lower -> validate for
@@ -52,6 +66,17 @@ def compile_cell(arch, shape_name, overrides=None, remat="full",
     }
 
 
+def _hlo_delta_frac(before_gib: float, after_gib: float) -> float:
+    """Fractional HLO-collective reduction, degenerate-safe: a cell with
+    zero collective bytes before the change has nothing to reduce, so
+    the delta is 0.0 — the old expression divided by 1e-9 and reported a
+    billions-scale negative "regression" whenever `after` was nonzero
+    (and `(0 or 1) and x` short-circuited to x, hiding the guard)."""
+    if before_gib <= 0:
+        return 0.0
+    return 1 - after_gib / before_gib
+
+
 def experiment(name, arch, shape_name, base_kw, change_kw, hypothesis,
                mesh_shape=None, analytic_kw_base=None, analytic_kw_new=None):
     mesh_shape = mesh_shape or {"data": 16, "model": 16}
@@ -86,9 +111,8 @@ def experiment(name, arch, shape_name, base_kw, change_kw, hypothesis,
     key = {"compute": "compute_s", "memory": "memory_s",
            "collective": "collective_s"}[dom]
     b, a = rec["analytic_before"][key], rec["analytic_after"][key]
-    hlo_delta = (before["hlo_collective_gib"] or 1) and \
-        (1 - after["hlo_collective_gib"] / max(before["hlo_collective_gib"],
-                                               1e-9))
+    hlo_delta = _hlo_delta_frac(before["hlo_collective_gib"],
+                                after["hlo_collective_gib"])
     rec["dominant_term"] = dom
     rec["dominant_delta_frac"] = round(1 - a / max(b, 1e-12), 4)
     rec["hlo_collective_delta_frac"] = round(hlo_delta, 4)

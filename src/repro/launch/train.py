@@ -86,12 +86,15 @@ def main() -> None:
     ap.add_argument("--backend", default="async",
                     choices=["sync", "async", "spmd", "fused", "baseline"])
     ap.add_argument("--transport", default="",
-                    choices=["", "host", "spill", "striped"],
+                    choices=["", "host", "spill", "striped", "adaptive"],
                     help="offload channel every device<->host byte moves "
                          "through (repro.transport registry; default "
                          "\"host\" = the stock DRAM tier, \"spill\" adds "
                          "a bounded-budget simulated-NVMe file tier, "
-                         "\"striped\" round-robins multi-path stripes)")
+                         "\"striped\" round-robins multi-path stripes, "
+                         "\"adaptive\" measures per-path bandwidth and "
+                         "retunes stripe weights / spill budgets / the "
+                         "wire dtype at window boundaries)")
     ap.add_argument("--baseline", default="", choices=["", "adamw"],
                     help="deprecated alias for --backend baseline")
     ap.add_argument("--ckpt-dir", default="")

@@ -61,6 +61,17 @@ and the compression ratio against the fp32 wire. Tiered channels
 ("spill": bounded DRAM budget + simulated-NVMe file tier; "striped":
 round-robin multi-path stripes) slot in without touching this file.
 
+The runtime additionally drives ADAPTIVE channels (ISSUE 8): a channel
+exposing `on_window_boundary(ctx)` is called at every window boundary
+with the measured window wall time (`_window_t0` bookkeeping — pure
+Python, no device reads) and may retune itself (stripe weights, spill
+budgets) and request a wire-dtype escalation, which the runtime applies
+via `_rebind_wire`: update `zcfg`, swap the channel codec, rebuild all
+traced programs (`_build_programs`), and reconcile the error-feedback
+residual. In-flight coalesced payloads are safe across a rebind because
+`step()` snapshots each payload's PackSpec at submit time and the host
+decode is payload-polymorphic.
+
 Coalesced transfers & pooled buffers (`RuntimeConfig.coalesce`)
 ---------------------------------------------------------------
 With coalescing on (the default on the single-device path), the jitted
@@ -114,6 +125,7 @@ import dataclasses
 import queue
 import threading
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -130,7 +142,7 @@ from repro.transport.pool import BufferPool
 
 # state-dict fields added after the first release: restores of older
 # checkpoints may lack them (they fall back to configured defaults)
-OPTIONAL_CKPT_KEYS = ("s_eff", "window_extensions")
+OPTIONAL_CKPT_KEYS = ("s_eff", "window_extensions", "coalesce_effective")
 
 
 @dataclasses.dataclass
@@ -221,6 +233,10 @@ class _HostWorker:
 class ZenFlowRuntime:
     """Orchestrates the device/host ZenFlow pipeline for a model."""
 
+    # mesh-coalesce downgrade warning fires once per process, not once
+    # per runtime (spmd tests construct dozens)
+    _warned_mesh_coalesce = False
+
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
                  rcfg: Optional[RuntimeConfig] = None,
                  segs: Optional[dict] = None,
@@ -240,7 +256,10 @@ class ZenFlowRuntime:
                 transport or "host", zcfg,
                 stage_payloads=rcfg.stage_host_bound)
         self.channel = transport
-        step_fn, segs, partition = zen_spmd.make_device_step(
+        # segmentation + partition are wire-independent: resolve them
+        # once here; the traced programs themselves are (re)built by
+        # _build_programs so a mid-run wire escalation can rebind them
+        _, segs, partition = zen_spmd.make_device_step(
             model, zcfg, rules, segs=segs, codec=self.channel)
         self.segs = segs
         self.partition = partition
@@ -252,11 +271,6 @@ class ZenFlowRuntime:
                 and rules.mesh.devices.size > 1
         self.placements = zen_spmd.zen_placements(
             model.param_specs(), zcfg, rules, segs) if place_sharded else None
-        steady_fn, _, _ = zen_spmd.make_device_step(
-            model, zcfg, rules, segs=segs, with_pending=False,
-            codec=self.channel)
-        land_fn = zen_spmd.make_land_pending(segs)
-        donate = rcfg.donate
         # coalesced transfers: both compiled program variants emit the
         # host_bound payload as ONE packed uint8 buffer and the boundary
         # variant accepts the pending upload in the same packed layout
@@ -265,8 +279,26 @@ class ZenFlowRuntime:
         # shard's slice must cross its own link) — coalescing would
         # funnel the mesh through one buffer.
         self._coalesce = rcfg.coalesce and self.placements is None
-        self._hb_spec = None     # host_bound PackSpec, captured at trace
-        self._pending_spec = None
+        if rcfg.coalesce and not self._coalesce:
+            # the silent-drop bug: a user setting coalesce=True on the
+            # mesh path got per-leaf streams with no indication. Warn
+            # once per process; the effective setting is recorded in
+            # state_dict()["coalesce_effective"] and channel stats stay
+            # per-leaf-attributed either way
+            if not ZenFlowRuntime._warned_mesh_coalesce:
+                ZenFlowRuntime._warned_mesh_coalesce = True
+                warnings.warn(
+                    "RuntimeConfig.coalesce=True is ignored on the "
+                    "mesh-parallel path (per-shard streams must stay "
+                    "per-leaf so each shard's bytes cross its own link); "
+                    "running with coalesce_effective=False",
+                    RuntimeWarning, stacklevel=2)
+        self._hb_spec = None     # latest host_bound PackSpec (trace-time
+        #   cell; step() snapshots it per payload before handing it to
+        #   the worker, so a wire rebind mid-run can never cross specs)
+        self._pending_spec = coalesce.plan(
+            zen_spmd.pending_specs(segs, model.param_specs())) \
+            if self._coalesce else None
         self._upload_bufs: list = []  # pooled pending-upload buffers held
         #   until their consuming device program provably executed (the
         #   CPU client ALIASES device_put'd numpy memory — releasing too
@@ -277,10 +309,38 @@ class ZenFlowRuntime:
         #   accumulate, which blocks on its staged output).
         self._upload_pool = getattr(self.channel, "pool", None) \
             or BufferPool(name="runtime")
+        self._build_programs()
+        self.worker: Optional[_HostWorker] = None
+        self.params = None
+        self.dstate = None
+        self.pending = None               # None = steady state (no landing)
+        self._apply_future: Optional[_Future] = None
+        self._t = 0                       # Python-side step counter
+        self._steps_in_window = 0
+        self._s_eff = zcfg.update_interval
+        self._window_t0 = time.perf_counter()   # boundary-hook timing
+        self.stall_log: list[float] = []
+        self.window_extensions = 0
+
+    def _build_programs(self) -> None:
+        """(Re)build the jitted device/host programs from the CURRENT
+        `self.zcfg` / `self.channel` codec. Called once at construction
+        and again by `_rebind_wire` when the adaptive transport escalates
+        the wire dtype mid-run — the jit cache keys on the new function
+        objects, so the old programs (and any in-flight staged payloads
+        in their old layout) are never silently reused with the new
+        codec."""
+        zcfg, rcfg = self.zcfg, self.rcfg
+        step_fn, _, _ = zen_spmd.make_device_step(
+            self.model, zcfg, self.rules, segs=self.segs,
+            codec=self.channel)
+        steady_fn, _, _ = zen_spmd.make_device_step(
+            self.model, zcfg, self.rules, segs=self.segs,
+            with_pending=False, codec=self.channel)
+        land_fn = zen_spmd.make_land_pending(self.segs)
+        donate = rcfg.donate
         if self._coalesce:
-            pend_spec = coalesce.plan(
-                zen_spmd.pending_specs(segs, model.param_specs()))
-            self._pending_spec = pend_spec
+            pend_spec = self._pending_spec
             base_step, base_steady, base_land = step_fn, steady_fn, land_fn
             cell = self  # PackSpec cell written at trace time (static)
 
@@ -316,18 +376,31 @@ class ZenFlowRuntime:
         # params-shaped output
         self._land = jax.jit(land_fn,
                              donate_argnums=(0,) if donate else ())
+        # the worker reads these attributes at call time, so the swap is
+        # safe against in-flight accumulates: an old-wire payload decoded
+        # by the new program still round-trips (decode is
+        # payload-polymorphic — core/wire.py)
         self.host_accumulate, self.host_apply = \
             zen_spmd.make_host_programs(zcfg, codec=self.channel)
-        self.worker: Optional[_HostWorker] = None
-        self.params = None
-        self.dstate = None
-        self.pending = None               # None = steady state (no landing)
-        self._apply_future: Optional[_Future] = None
-        self._t = 0                       # Python-side step counter
-        self._steps_in_window = 0
-        self._s_eff = zcfg.update_interval
-        self.stall_log: list[float] = []
-        self.window_extensions = 0
+
+    def _rebind_wire(self, wire_dtype: str) -> None:
+        """Apply a wire-dtype escalation requested by the transport's
+        window-boundary decision (adaptive channel): update the config,
+        swap the channel codec, rebuild every traced program, and
+        reconcile the device-side error-feedback residual (int8 installs
+        a zero residual — same bounded impact as a scheduled refresh).
+        Boundary-path only; never on a steady-state step."""
+        from repro.core import wire
+        self.zcfg = dataclasses.replace(self.zcfg, wire_dtype=wire_dtype)
+        set_wire = getattr(self.channel, "set_wire", None)
+        if set_wire is not None:
+            set_wire(wire_dtype)
+        self._build_programs()
+        if self.dstate is not None:
+            self.dstate = wire.reconcile_residual(
+                dict(self.dstate),
+                lambda: zen_spmd.zen_device_state_init(
+                    self.model.param_specs(), self.zcfg, self.segs))
 
     # ------------------------------------------------------------------
     def init(self, key):
@@ -345,20 +418,25 @@ class ZenFlowRuntime:
         self.worker = _HostWorker(host_state)
         self.pending = None
         self._t = 0
+        self._window_t0 = time.perf_counter()
         return self
 
     # ------------------------------------------------------------------
-    def _accumulate_staged(self, st, handle):
+    def _accumulate_staged(self, st, handle, spec=None):
         """Worker-side consumption of one staged host_bound payload:
         fetch, (for coalesced payloads) rebuild the leaves as zero-copy
         views of the packed buffer, accumulate. Runs on the host-worker
         thread — blocking here is the pipeline's consumer-side wait, not
-        a driver stall."""
+        a driver stall. `spec` is the payload's OWN PackSpec, snapshotted
+        by step() at submit time: a wire rebind retraces the device
+        program and overwrites the shared `_hb_spec` cell, so an
+        in-flight old-layout payload must carry its layout with it."""
         payload = self.channel.fetch(handle)
         scratch = None
         if self._coalesce and coalesce.is_packed(payload):
             buf = payload[coalesce.PACKED_KEY]
-            payload = coalesce.unpack_tree_host(buf, self._hb_spec)
+            payload = coalesce.unpack_tree_host(
+                buf, self._hb_spec if spec is None else spec)
             if isinstance(buf, np.ndarray):
                 scratch = buf     # pooled reassembly scratch (striped)
         st2 = self.host_accumulate(st, payload)
@@ -470,9 +548,14 @@ class ZenFlowRuntime:
         # the channel spilled it) and consumes host-resident bytes
         staged = self.channel.stage(host_bound, tag="host_bound")
 
-        # async host accumulate (ordered behind any in-flight apply)
+        # async host accumulate (ordered behind any in-flight apply).
+        # The payload's PackSpec is snapshotted HERE: the shared
+        # `_hb_spec` cell is overwritten by any retrace (wire rebind),
+        # so each staged payload must travel with its own layout
+        hb_spec = self._hb_spec
         self.worker.submit(
-            lambda st, hb=staged: (self._accumulate_staged(st, hb), None))
+            lambda st, hb=staged, sp=hb_spec:
+            (self._accumulate_staged(st, hb, sp), None))
 
         t = self._t
         warm = t <= self.zcfg.warmup_steps
@@ -521,6 +604,31 @@ class ZenFlowRuntime:
                                            tag="warmup_land")
                 self._push_pending(rows, idx)
                 self._apply_future = None
+            # window-boundary transport control hook (ISSUE 8): channels
+            # exposing `on_window_boundary(ctx)` (the adaptive transport)
+            # get the measured window wall time and may reweight their
+            # stripes / budgets internally and REQUEST a wire escalation,
+            # which the runtime applies by rebinding the traced programs.
+            # Mirrors how `autotune.next_interval` adapts S: pure Python
+            # over already-collected measurements — no device reads, no
+            # syncs, and a channel without the hook costs one getattr
+            now = time.perf_counter()
+            hook = getattr(self.channel, "on_window_boundary", None)
+            if hook is not None:
+                # wire changes retrace against the residual layout, which
+                # the mesh path pins via placements.dstate; warmup windows
+                # are 1-step (not a representative measurement)
+                allow_wire = self.placements is None and not warm
+                decision = hook({
+                    "step": t,
+                    "window_time_s": now - self._window_t0,
+                    "s_eff": self._s_eff,
+                    "allow_wire": allow_wire,
+                }) or {}
+                nw = decision.get("wire_dtype")
+                if nw and nw != self.zcfg.wire_dtype and allow_wire:
+                    self._rebind_wire(nw)
+            self._window_t0 = now
 
         out = dict(metrics)
         if self.rcfg.blocking_metrics:
@@ -586,6 +694,11 @@ class ZenFlowRuntime:
             # back to the configured S and forget absorbed stragglers
             "s_eff": self._s_eff,
             "window_extensions": self.window_extensions,
+            # what the runtime actually ran with — the mesh path
+            # downgrades a requested coalesce=True to per-leaf streams
+            # (warned once at construction); recorded so telemetry and
+            # checkpoint consumers never have to re-derive the rule
+            "coalesce_effective": self._coalesce,
         }
 
     def load_state_dict(self, sd: dict):

@@ -1,6 +1,8 @@
-from repro.telemetry import (costmodel, hlo_stats, metrics_drain, roofline,
-                             simulator, syncwatch, trafficwatch)
+from repro.telemetry import (bandwidth, costmodel, hlo_stats, metrics_drain,
+                             roofline, simulator, syncwatch, trafficwatch)
+from repro.telemetry.bandwidth import BandwidthProbe
 from repro.telemetry.metrics_drain import MetricsDrain
 
-__all__ = ["costmodel", "hlo_stats", "metrics_drain", "roofline",
-           "simulator", "syncwatch", "trafficwatch", "MetricsDrain"]
+__all__ = ["bandwidth", "costmodel", "hlo_stats", "metrics_drain",
+           "roofline", "simulator", "syncwatch", "trafficwatch",
+           "BandwidthProbe", "MetricsDrain"]

@@ -1,0 +1,140 @@
+"""Per-path offload bandwidth probe (ISSUE 8): EMA bytes/sec of every
+observed sub-channel, sampled OFF the hot path.
+
+The adaptive transport (`repro.transport.adaptive`) needs measured
+per-path bandwidth to reweight stripes / grow spill budgets / escalate
+the wire — but ZenFlow's zero-sync contract forbids paying for the
+measurement with blocking host reads on the driver thread. The probe
+therefore splits the problem in two:
+
+  * **Measurement** (timing-dependent, this module): `track(path,
+    nbytes, ready_fn, t0)` registers an in-flight transfer and returns
+    immediately. A single daemon *sampler thread* polls each transfer's
+    `ready_fn()` (e.g. `jax.Array.is_ready` — a non-blocking query) and,
+    on completion, folds `nbytes / (t_done - t0)` into the path's EMA
+    and attributes the wall-clock seconds to the channel in
+    `telemetry.trafficwatch` (`seconds_by_channel`). Nothing here ever
+    blocks the driver or the host worker, and nothing routes through
+    `telemetry.syncwatch` — the steady-state sync count stays 0 with the
+    probe enabled (tests/test_adaptive.py).
+  * **Decision** (deterministic, `transport/adaptive.py`): the
+    controller consumes `snapshot()` — a pure-data dict — so its
+    decisions are a deterministic function of the measurement trace and
+    can be unit-tested from canned traces.
+
+`observe(path, nbytes, seconds)` is the pure recording half (the sampler
+calls it; tests and simulations may call it directly to replay a canned
+trace). EMA weighting favors recent windows so the controller reacts to
+bandwidth shifts within a few windows without chasing noise.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+from repro.telemetry import trafficwatch
+
+# sampler sweep period: fine enough to time millisecond transfers,
+# coarse enough that an idle probe thread costs nothing measurable
+_POLL_S = 0.0005
+
+
+class BandwidthProbe:
+    """EMA bytes/sec per offload path, fed off-path by a sampler thread.
+
+    Thread-safety: `track` is called from the driver thread, `observe`
+    from the sampler (or a test), `snapshot`/`bandwidth` from anywhere —
+    all counters are lock-guarded. The sampler thread is a daemon,
+    started lazily on the first `track`, stopped by `close()`.
+    """
+
+    def __init__(self, alpha: float = 0.4, name: str = "bandwidth"):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"EMA alpha must be in (0, 1], got {alpha}")
+        self.name = name
+        self.alpha = float(alpha)
+        self._lock = threading.Lock()
+        self._ema: dict[str, float] = {}        # path -> EMA bytes/sec
+        self._samples: dict[str, int] = {}      # path -> completed count
+        self._inflight: list[tuple] = []        # (path, nbytes, ready, t0)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- measurement ----------------------------------------------------
+    def track(self, path: str, nbytes: int,
+              ready_fn: Callable[[], bool],
+              t0: Optional[float] = None) -> None:
+        """Register one in-flight transfer of `nbytes` on `path`; the
+        sampler thread times its completion via `ready_fn()` (which must
+        be cheap, non-blocking, and callable from another thread).
+        Never blocks the caller."""
+        t0 = time.perf_counter() if t0 is None else t0
+        with self._lock:
+            self._inflight.append((path, int(nbytes), ready_fn, t0))
+            if self._thread is None:
+                self._stop.clear()
+                self._thread = threading.Thread(
+                    target=self._sample_loop, daemon=True,
+                    name=f"{self.name}-sampler")
+                self._thread.start()
+
+    def observe(self, path: str, nbytes: int, seconds: float) -> None:
+        """Pure recording half: fold one completed transfer into the
+        path's EMA. Deterministic — tests replay canned traces here."""
+        seconds = max(float(seconds), 1e-9)
+        bps = float(nbytes) / seconds
+        with self._lock:
+            prev = self._ema.get(path)
+            self._ema[path] = bps if prev is None \
+                else self.alpha * bps + (1.0 - self.alpha) * prev
+            self._samples[path] = self._samples.get(path, 0) + 1
+
+    def _sample_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                pending = list(self._inflight)
+            if not pending:
+                time.sleep(_POLL_S)
+                continue
+            done, still = [], []
+            for item in pending:
+                path, nbytes, ready_fn, t0 = item
+                try:
+                    ok = bool(ready_fn())
+                except Exception:
+                    ok = True          # a dead handle stops being timed
+                (done if ok else still).append(item)
+            now = time.perf_counter()
+            with self._lock:
+                # new tracks may have arrived mid-sweep: keep them
+                fresh = self._inflight[len(pending):]
+                self._inflight = still + fresh
+            for path, nbytes, _, t0 in done:
+                dt = max(now - t0, 1e-9)
+                self.observe(path, nbytes, dt)
+                trafficwatch.record_seconds(path, dt)
+            time.sleep(_POLL_S)
+
+    # -- consumers ------------------------------------------------------
+    def bandwidth(self, path: str) -> Optional[float]:
+        """EMA bytes/sec of `path`, or None before any completed
+        sample."""
+        with self._lock:
+            return self._ema.get(path)
+
+    def snapshot(self) -> dict:
+        """Pure-data measurement snapshot: ``{path: {"bps", "samples"}}``
+        — the controller's (deterministic) input."""
+        with self._lock:
+            return {p: {"bps": bps, "samples": self._samples.get(p, 0)}
+                    for p, bps in self._ema.items()}
+
+    def close(self) -> None:
+        """Stop the sampler thread (channel drain/close)."""
+        self._stop.set()
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join(timeout=2)
+        with self._lock:
+            self._inflight.clear()

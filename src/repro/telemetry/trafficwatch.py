@@ -66,6 +66,7 @@ _tier_bytes: Counter = Counter()
 _unattributed: Counter = Counter()   # bytes recorded without channel / tier
 _allocs: Counter = Counter()         # fresh host-buffer allocations / channel
 _alloc_bytes: Counter = Counter()
+_channel_seconds: Counter = Counter()  # measured wall-clock per channel/path
 
 
 def reset() -> None:
@@ -79,6 +80,7 @@ def reset() -> None:
         _unattributed.clear()
         _allocs.clear()
         _alloc_bytes.clear()
+        _channel_seconds.clear()
 
 
 def record(tag: str, nbytes: int, transfers: int = 1,
@@ -98,6 +100,17 @@ def record(tag: str, nbytes: int, transfers: int = 1,
             _tier_bytes[tier] += int(nbytes)
         else:
             _unattributed["tier"] += int(nbytes)
+
+
+def record_seconds(channel: str, seconds: float) -> None:
+    """Attribute measured transfer wall-clock to a channel/path (ISSUE 8
+    timing attribution — producer: `telemetry.bandwidth.BandwidthProbe`,
+    which times completions OFF the hot path). Seconds accumulate per
+    channel so `counts()["seconds_by_channel"]` mirrors the byte
+    attribution with a wall-clock axis; recording itself never touches
+    device values."""
+    with _lock:
+        _channel_seconds[channel] += float(seconds)
 
 
 def alloc(nbytes: int, channel: Optional[str] = None) -> None:
@@ -161,4 +174,5 @@ def counts() -> dict:
             "allocations": sum(_allocs.values()),
             "alloc_bytes": sum(_alloc_bytes.values()),
             "allocations_by_channel": dict(_allocs),
+            "seconds_by_channel": dict(_channel_seconds),
         }

@@ -23,6 +23,15 @@ tiers:
              sub-channels (MLP-Offload's multi-path story: several
              independent links instead of one saturated PCIe path); the
              union of the stripes is the full payload, bit for bit.
+  "adaptive" `AdaptiveChannel` — a measured-path controller over striped
+             sub-channels (ISSUE 8): a `telemetry.bandwidth` probe times
+             each path off the critical path, and at every window
+             boundary the runtime lets the channel reweight its stripes
+             bandwidth-proportionally, move any spill stripe's DRAM
+             budget, and request a wire-dtype escalation (fp32->bf16->
+             int8) when the measured offload path falls behind the
+             measured step time. Deterministic given the measurement
+             trace; decision log in `stats()["decisions"]`.
 
 Channel contract (duck-typed; `OffloadChannel` is the Protocol)
 ---------------------------------------------------------------
@@ -176,8 +185,18 @@ register_transport("host", HostChannel)
 register_transport("spill", SpillChannel)
 register_transport("striped", StripedChannel)
 
+# imported after the registry exists (adaptive composes the stock tiers
+# via their submodules, so there is no import cycle back into this one)
+from repro.transport.adaptive import (AdaptiveChannel, AdaptiveController,
+                                      ControllerConfig, ProbedChannel,
+                                      ThrottledChannel)
+
+register_transport("adaptive", AdaptiveChannel)
+
 __all__ = [
     "OffloadChannel", "HostChannel", "SpillChannel", "StripedChannel",
+    "AdaptiveChannel", "AdaptiveController", "ControllerConfig",
+    "ProbedChannel", "ThrottledChannel",
     "BufferPool", "coalesce",
     "register_transport", "available_transports", "make_transport",
 ]

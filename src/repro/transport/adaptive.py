@@ -1,0 +1,518 @@
+"""Bandwidth-aware adaptive transport (ISSUE 8): a measured-path
+controller for stripe weights, spill budgets, and the wire dtype.
+
+ZenFlow's stall-free contract only holds while the offload path keeps up
+with compute, but the stock `StripedChannel` round-robins blindly and
+`SpillChannel` evicts on cold-commit order regardless of how fast each
+tier actually is. MLP-Offload and Deep Optimizer States (PAPERS.md) both
+drive multi-level, multi-path offload from *measured* per-path
+bandwidth; this module closes that measurement→decision loop at the
+transport seam:
+
+  `AdaptiveChannel`   an `OffloadChannel` wrapper (registered as
+                      ``--transport adaptive``) around a striped inner
+                      channel whose sub-channels are wrapped in
+                      `ProbedChannel`s feeding a
+                      `telemetry.bandwidth.BandwidthProbe`. At every
+                      window boundary the runtime calls
+                      `on_window_boundary(ctx)` (mirroring how
+                      `core/autotune.next_interval` adapts S) and the
+                      channel applies the controller's decision.
+  `AdaptiveController` the PURE decision half. Its only input is a
+                      measurement snapshot (probe EMAs + channel stats +
+                      window timing), so decisions are a deterministic
+                      function of the measurement trace — replayable in
+                      tests from canned snapshots, logged in
+                      `stats()["decisions"]` so the parity and
+                      regression gates stay meaningful. It adjusts:
+                        (a) stripe weights → bandwidth-proportional
+                            byte-range splits (`StripedChannel.
+                            set_weights`), quantized by a deadband so
+                            noise never churns the split;
+                        (b) any spill sub-channel's `budget_bytes`
+                            within a configured band
+                            (`SpillChannel.set_budget`);
+                        (c) `wire_dtype` escalation fp32→bf16→int8 when
+                            the measured offload path falls behind the
+                            measured window time for `wire_patience`
+                            consecutive windows (escalate-only — never
+                            oscillates — reusing the error-feedback
+                            residual machinery via the runtime's
+                            `_rebind_wire`).
+  `ProbedChannel`     transparent per-path wrapper timing each staged
+                      payload's completion OFF-path (the probe's sampler
+                      thread polls `is_ready()`-style callables) — the
+                      zero-sync steady state is untouched: `syncwatch`
+                      stays at 0 (tests/test_adaptive.py).
+  `ThrottledChannel`  a deterministic bandwidth simulator for benches
+                      and tests: stage returns immediately with a
+                      `ready_at` deadline modeling a serial link at
+                      `bytes_per_sec`; the consumer-side `fetch` (host
+                      worker) waits out the deadline. The driver thread
+                      never blocks, exactly like a genuinely slow link.
+
+Zero-sync / parity contract
+---------------------------
+Measurement is sampled off-path (no driver/worker blocking, nothing
+routed through syncwatch). Stripe reweighting and budget moves only
+change WHERE bytes travel, never their values — `fetch` rebuilds from
+each handle's own recorded bounds — so with symmetric paths the adaptive
+channel is bit-identical to the static "host" transport (gated in
+benchmarks/bench_traffic.py --skewed). Only a wire escalation changes
+numerics, and it is conservative (headroom x patience), monotone, and
+fully recorded in the decision log.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+
+from repro.core import wire
+from repro.telemetry import trafficwatch
+from repro.telemetry.bandwidth import BandwidthProbe
+from repro.transport.host import CodecHooks, HostChannel
+from repro.transport.striped import StripedChannel
+
+
+# ---------------------------------------------------------------------------
+# Deterministic bandwidth simulation (benches / tests)
+
+
+class _ThrottledHandle:
+    __slots__ = ("inner", "ready_at")
+
+    def __init__(self, inner, ready_at: float):
+        self.inner = inner
+        self.ready_at = ready_at
+
+
+class ThrottledChannel:
+    """Wrap any channel behind a simulated serial link of
+    `bytes_per_sec`: `stage` returns immediately (driver never blocks)
+    with a completion deadline `now_or_backlog + nbytes/bps`; `fetch`
+    (the host worker's consumer-side wait — not a counted sync) sleeps
+    until the deadline before materializing. Models one saturated PCIe
+    path for the skewed-bandwidth bench scenario. Stage-direction only:
+    uploads pass straight through (boundary-path, not the contended
+    down-link)."""
+
+    def __init__(self, inner, bytes_per_sec: float):
+        if bytes_per_sec <= 0:
+            raise ValueError(f"bytes_per_sec must be > 0: {bytes_per_sec}")
+        self.inner = inner
+        self.bytes_per_sec = float(bytes_per_sec)
+        self._link_free_at = 0.0
+
+    # delegation -------------------------------------------------------
+    name = property(lambda self: self.inner.name)
+    tier = property(lambda self: self.inner.tier)
+    pool = property(lambda self: self.inner.pool)
+    codec = property(lambda self: self.inner.codec)
+    error_feedback = property(lambda self: self.inner.error_feedback)
+
+    def encode(self, rows):
+        return self.inner.encode(rows)
+
+    def decode(self, payload):
+        return self.inner.decode(payload)
+
+    def stage(self, tree, tag: str = "stage_to_host",
+              account: bool = True):
+        nbytes = trafficwatch.tree_bytes(tree)
+        h = self.inner.stage(tree, tag, account=account)
+        now = time.perf_counter()
+        start = max(now, self._link_free_at)    # serial link backlog
+        self._link_free_at = start + nbytes / self.bytes_per_sec
+        return _ThrottledHandle(h, self._link_free_at)
+
+    def fetch(self, handle):
+        if isinstance(handle, _ThrottledHandle):
+            delay = handle.ready_at - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            return self.inner.fetch(handle.inner)
+        return self.inner.fetch(handle)
+
+    def upload(self, tree, sharding=None, tag: str = "upload",
+               account: bool = True):
+        return self.inner.upload(tree, sharding, tag, account=account)
+
+    def drain(self) -> None:
+        self.inner.drain()
+
+    def stats(self) -> dict:
+        out = dict(self.inner.stats())
+        out["throttle_bytes_per_sec"] = self.bytes_per_sec
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Per-path probing
+
+
+def _ready_fn_for(handle) -> Callable[[], bool]:
+    """A cheap, thread-safe completion predicate for a staged handle:
+    throttled handles expose their deadline; plain staged trees are done
+    when every array leaf reports `is_ready()` (non-blocking query)."""
+    if isinstance(handle, _ThrottledHandle):
+        deadline = handle.ready_at
+        return lambda: time.perf_counter() >= deadline
+    leaves = [x for x in jax.tree.leaves(handle) if hasattr(x, "is_ready")]
+    if not leaves:
+        return lambda: True
+    return lambda: all(x.is_ready() for x in leaves)
+
+
+class ProbedChannel:
+    """Transparent wrapper timing each staged payload's completion into
+    a `BandwidthProbe` under this path's name — measurement only, fully
+    off-path (the probe's sampler thread does the waiting). Everything
+    else delegates verbatim to the wrapped channel (which remains the
+    payload's single accounting point)."""
+
+    def __init__(self, inner, path: str, probe: BandwidthProbe):
+        self.inner = inner
+        self.path = path
+        self.probe = probe
+
+    name = property(lambda self: self.inner.name)
+    tier = property(lambda self: self.inner.tier)
+    pool = property(lambda self: self.inner.pool)
+    codec = property(lambda self: self.inner.codec)
+    error_feedback = property(lambda self: self.inner.error_feedback)
+
+    def encode(self, rows):
+        return self.inner.encode(rows)
+
+    def decode(self, payload):
+        return self.inner.decode(payload)
+
+    def stage(self, tree, tag: str = "stage_to_host",
+              account: bool = True):
+        nbytes = trafficwatch.tree_bytes(tree)
+        t0 = time.perf_counter()
+        h = self.inner.stage(tree, tag, account=account)
+        self.probe.track(self.path, nbytes, _ready_fn_for(h), t0)
+        return h
+
+    def fetch(self, handle):
+        return self.inner.fetch(handle)
+
+    def upload(self, tree, sharding=None, tag: str = "upload",
+               account: bool = True):
+        return self.inner.upload(tree, sharding, tag, account=account)
+
+    def drain(self) -> None:
+        self.inner.drain()
+
+    def stats(self) -> dict:
+        return dict(self.inner.stats())
+
+
+# ---------------------------------------------------------------------------
+# Pure decision half
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    """Knobs of the adaptive controller (all decisions deterministic
+    given the measurement trace)."""
+    # (a) stripe weights: adopt bandwidth-proportional weights only when
+    # some weight moves by more than `deadband` (relative), and never
+    # starve a path below `min_weight`
+    deadband: float = 0.10
+    min_weight: float = 0.05
+    # (b) spill budget: keep budget_bytes inside [band_lo, band_hi],
+    # stepping by `budget_step` x band width when resident occupancy
+    # crosses the water marks. None disables budget control.
+    budget_band: Optional[tuple[int, int]] = None
+    budget_step: float = 0.25
+    budget_high_water: float = 0.75
+    budget_low_water: float = 0.25
+    # (c) wire escalation: when estimated window transfer time x
+    # `wire_headroom` exceeds the measured window wall time for
+    # `wire_patience` CONSECUTIVE windows, escalate one rung along
+    # `wire_ladder` (monotone — never de-escalates; each rung retraces
+    # the device programs once and, for int8, installs the
+    # error-feedback residual)
+    wire_ladder: tuple = ("fp32", "bf16", "int8")
+    wire_patience: int = 2
+    wire_headroom: float = 1.25
+
+
+class AdaptiveController:
+    """The pure decision half: `decide(snapshot) -> decision`.
+
+    A snapshot is plain data (see `AdaptiveChannel._snapshot`):
+
+        {"window_time_s": float, "window_bytes": int,
+         "path_bw": [bytes_per_sec | None, ...],   # stripe order
+         "spill": {"resident_bytes", "budget_bytes"} | None,
+         "wire_dtype": str, "allow_wire": bool}
+
+    and a decision is
+
+        {"window": int, "weights": [...] | None, "budget": int | None,
+         "wire_dtype": str, "reasons": [str, ...]}
+
+    `weights`/`budget` are None when unchanged. Every decision is
+    appended to `self.log` (exposed via channel `stats()["decisions"]`).
+    Given the same sequence of snapshots the controller produces the
+    same sequence of decisions — no clocks, no randomness in here.
+    """
+
+    def __init__(self, ways: int, cfg: Optional[ControllerConfig] = None):
+        self.cfg = ControllerConfig() if cfg is None else cfg
+        self.ways = ways
+        self.weights = [1.0 / ways] * ways
+        self.log: list[dict] = []
+        self._window = 0
+        self._wire_lag = 0
+
+    # -- decision pieces -------------------------------------------------
+    def _decide_weights(self, path_bw, reasons):
+        cfg = self.cfg
+        if len(path_bw) != self.ways or any(b is None or b <= 0
+                                            for b in path_bw):
+            reasons.append("weights: keep (insufficient measurements)")
+            return None
+        total = float(sum(path_bw))
+        # proportional split with an EXACT post-normalization floor: a
+        # starved path gets min_weight verbatim (not min_weight/sum) so
+        # it keeps carrying enough bytes to stay measurable
+        floor = min(cfg.min_weight, 1.0 / self.ways)
+        new = [b / total for b in path_bw]
+        for _ in range(self.ways):
+            low = [w < floor for w in new]
+            if not any(low):
+                break
+            rest = 1.0 - floor * sum(low)
+            rest_sum = sum(w for w, lo in zip(new, low) if not lo) or 1.0
+            new = [floor if lo else w * rest / rest_sum
+                   for w, lo in zip(new, low)]
+        delta = max(abs(n - o) / max(o, 1e-12)
+                    for n, o in zip(new, self.weights))
+        if delta < cfg.deadband:
+            reasons.append(f"weights: keep (max delta {delta:.3f} < "
+                           f"deadband {cfg.deadband})")
+            return None
+        self.weights = new
+        reasons.append("weights: adopt bandwidth-proportional "
+                       + "/".join(f"{w:.3f}" for w in new))
+        return list(new)
+
+    def _decide_budget(self, spill, reasons):
+        cfg = self.cfg
+        if cfg.budget_band is None or not spill:
+            return None
+        lo, hi = cfg.budget_band
+        budget = int(spill["budget_bytes"])
+        resident = int(spill.get("resident_bytes", 0))
+        occupancy = resident / max(budget, 1)
+        step = int(cfg.budget_step * (hi - lo))
+        new = None
+        if occupancy > cfg.budget_high_water and budget < hi:
+            new = min(hi, budget + step)
+            reasons.append(f"budget: grow to {new} "
+                           f"(occupancy {occupancy:.2f})")
+        elif occupancy < cfg.budget_low_water and budget > lo:
+            new = max(lo, budget - step)
+            reasons.append(f"budget: shrink to {new} "
+                           f"(occupancy {occupancy:.2f})")
+        return new
+
+    def _decide_wire(self, snap, reasons):
+        cfg = self.cfg
+        current = snap["wire_dtype"]
+        if not snap.get("allow_wire", True):
+            self._wire_lag = 0
+            return current
+        path_bw = snap.get("path_bw") or []
+        measured = [b for b in path_bw if b]
+        window_t = snap.get("window_time_s") or 0.0
+        if not measured or window_t <= 0:
+            return current
+        est = snap.get("window_bytes", 0) / sum(measured)
+        if est * cfg.wire_headroom > window_t:
+            self._wire_lag += 1
+        else:
+            self._wire_lag = 0
+            return current
+        if self._wire_lag < cfg.wire_patience:
+            reasons.append(f"wire: lagging {self._wire_lag}/"
+                           f"{cfg.wire_patience} (est {est * 1e3:.1f} ms "
+                           f"vs window {window_t * 1e3:.1f} ms)")
+            return current
+        try:
+            rung = cfg.wire_ladder.index(current)
+        except ValueError:
+            return current
+        if rung + 1 >= len(cfg.wire_ladder):
+            return current              # already at the last rung
+        self._wire_lag = 0
+        new = cfg.wire_ladder[rung + 1]
+        reasons.append(f"wire: escalate {current} -> {new} "
+                       f"(offload est {est * 1e3:.1f} ms behind window "
+                       f"{window_t * 1e3:.1f} ms)")
+        return new
+
+    # -- the decision ----------------------------------------------------
+    def decide(self, snap: dict) -> dict:
+        reasons: list[str] = []
+        weights = self._decide_weights(snap.get("path_bw") or [], reasons)
+        budget = self._decide_budget(snap.get("spill"), reasons)
+        wire_dtype = self._decide_wire(snap, reasons)
+        decision = {"window": self._window, "weights": weights,
+                    "budget": budget, "wire_dtype": wire_dtype,
+                    "reasons": reasons}
+        self._window += 1
+        self.log.append(decision)
+        return decision
+
+
+# ---------------------------------------------------------------------------
+# The channel
+
+
+class AdaptiveChannel(CodecHooks):
+    """Bandwidth-adaptive multi-path offload channel (module docstring).
+
+    Default topology: a `StripedChannel` of `ways` `HostChannel` stripes,
+    each wrapped in a `ProbedChannel` (paths "<name>/0"..). Pass
+    `sub_factory(i) -> channel` to build stripes from any tier (a
+    `SpillChannel` stripe makes the budget knob live), `throttle_bps`
+    (per-path bytes/sec or None) to simulate skewed links, and
+    `ctrl_cfg`/`controller` to tune or replace the decision half.
+
+    The runtime drives adaptation via `on_window_boundary(ctx)`; a
+    standalone channel that is never called simply behaves as a blind
+    equal-split striped channel. Wire escalation is applied by the
+    RUNTIME (`ZenFlowRuntime._rebind_wire` calls `set_wire` and rebuilds
+    the traced programs) — the decision dict only requests it; on
+    single-program backends the hook is never invoked, so the wire stays
+    pinned at its configured dtype.
+    """
+
+    tier = "host"
+
+    def __init__(self, zcfg=None, *, ways: int = 2,
+                 sub_factory: Optional[Callable[[int], object]] = None,
+                 throttle_bps: Optional[Sequence[Optional[float]]] = None,
+                 probe: Optional[BandwidthProbe] = None,
+                 controller: Optional[AdaptiveController] = None,
+                 ctrl_cfg: Optional[ControllerConfig] = None,
+                 name: str = "adaptive", **kw):
+        if throttle_bps is not None and len(throttle_bps) != ways:
+            raise ValueError(f"throttle_bps needs {ways} entries, got "
+                             f"{len(throttle_bps)}")
+        self.name = name
+        self.codec = wire.codec_for(zcfg) if zcfg is not None \
+            else wire.WireCodec()
+        self.probe = BandwidthProbe(name=name) if probe is None else probe
+        self.controller = AdaptiveController(ways, ctrl_cfg) \
+            if controller is None else controller
+        self._paths = [f"{name}/{i}" for i in range(ways)]
+        base_factory = sub_factory if sub_factory is not None \
+            else (lambda i: HostChannel(zcfg, name=f"{name}/{i}", **kw))
+
+        def _probed(i: int):
+            ch = base_factory(i)
+            if throttle_bps is not None and throttle_bps[i]:
+                ch = ThrottledChannel(ch, throttle_bps[i])
+            return ProbedChannel(ch, self._paths[i], self.probe)
+
+        self.inner = StripedChannel(zcfg, ways=ways, sub_factory=_probed,
+                                    name=name)
+        self._window_bytes = 0
+
+    # the runtime's pooled-scratch contract reaches the striped pool
+    pool = property(lambda self: self.inner.pool)
+
+    @property
+    def ways(self) -> int:
+        return self.inner.ways
+
+    # -- transfers (codec hooks inherited from CodecHooks) ---------------
+    def stage(self, tree, tag: str = "stage_to_host",
+              account: bool = True):
+        self._window_bytes += trafficwatch.tree_bytes(tree)
+        return self.inner.stage(tree, tag, account=account)
+
+    def fetch(self, handle):
+        return self.inner.fetch(handle)
+
+    def upload(self, tree, sharding=None, tag: str = "upload",
+               account: bool = True):
+        self._window_bytes += trafficwatch.tree_bytes(tree)
+        return self.inner.upload(tree, sharding, tag, account=account)
+
+    # -- adaptation ------------------------------------------------------
+    def set_wire(self, wire_dtype: str) -> None:
+        """Swap the wire codec (called by the runtime's `_rebind_wire`
+        BEFORE retracing the device/host programs — never mid-trace; a
+        silent swap would desync the jit cache, which is why only the
+        runtime may call this)."""
+        if wire_dtype not in wire.WIRE_DTYPES:
+            raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
+        self.codec = wire.WireCodec(wire_dtype, self.codec.use_kernels)
+
+    def _spill_subs(self) -> list:
+        out = []
+        for sub in self.inner.subs:
+            ch = sub.inner if isinstance(sub, ProbedChannel) else sub
+            if isinstance(ch, ThrottledChannel):
+                ch = ch.inner
+            if hasattr(ch, "set_budget"):
+                out.append(ch)
+        return out
+
+    def _snapshot(self, ctx: dict) -> dict:
+        """Assemble the controller's pure-data measurement snapshot."""
+        spill = None
+        for ch in self._spill_subs():
+            st = ch.stats()
+            spill = {"budget_bytes": st.get("budget_bytes", 0),
+                     "resident_bytes": st.get("resident_bytes", 0)}
+            break
+        return {
+            "window_time_s": float(ctx.get("window_time_s") or 0.0),
+            "window_bytes": self._window_bytes,
+            "path_bw": [self.probe.bandwidth(p) for p in self._paths],
+            "spill": spill,
+            "wire_dtype": self.codec.wire_dtype,
+            "allow_wire": bool(ctx.get("allow_wire", True)),
+        }
+
+    def on_window_boundary(self, ctx: dict) -> dict:
+        """The runtime's window-boundary control hook (mirrors
+        `autotune.next_interval`): snapshot measurements, decide, apply
+        stripe weights / spill budgets locally, and return the decision
+        (the runtime applies a requested wire change via
+        `_rebind_wire`). Runs on the driver thread between steps — pure
+        Python over already-collected measurements, no device reads."""
+        decision = self.controller.decide(self._snapshot(ctx))
+        self._window_bytes = 0
+        if decision.get("weights") is not None:
+            self.inner.set_weights(decision["weights"])
+        if decision.get("budget") is not None:
+            for ch in self._spill_subs():
+                ch.set_budget(decision["budget"])
+        return decision
+
+    # -- lifecycle / stats ----------------------------------------------
+    def drain(self) -> None:
+        self.inner.drain()
+        self.probe.close()
+
+    def stats(self) -> dict:
+        return {
+            "name": self.name, "tier": self.tier,
+            "wire_dtype": self.codec.wire_dtype,
+            "weights": self.inner.weights(),
+            "decisions": list(self.controller.log),
+            "probe": self.probe.snapshot(),
+            "inner": self.inner.stats(),
+        }

@@ -231,3 +231,36 @@ def byte_stripes(total: int, ways: int) -> list[tuple[int, int]]:
         bounds.append((start, stop))
         start = stop
     return bounds
+
+
+def weighted_byte_stripes(total: int,
+                          weights: Sequence[float]) -> list[tuple[int, int]]:
+    """Split [0, total) into contiguous byte ranges sized proportionally
+    to `weights` (the adaptive transport's bandwidth-proportional
+    striping, ISSUE 8). Integer sizes come from floor + largest-remainder
+    (ties broken by lower index), so sizes always sum to `total`; with
+    all-equal weights the result is BIT-IDENTICAL to
+    ``byte_stripes(total, len(weights))`` — the blind default stays the
+    exact legacy split."""
+    ways = len(weights)
+    if ways < 1:
+        raise ValueError("weighted_byte_stripes needs >= 1 weight")
+    if any(w < 0 for w in weights):
+        raise ValueError(f"stripe weights must be >= 0: {list(weights)}")
+    wsum = float(sum(weights))
+    if wsum <= 0:
+        raise ValueError("stripe weights must sum > 0")
+    if len(set(float(w) for w in weights)) <= 1:
+        return byte_stripes(total, ways)    # exact legacy split
+    targets = [total * (float(w) / wsum) for w in weights]
+    sizes = [int(t) for t in targets]
+    remainder = total - sum(sizes)
+    order = sorted(range(ways),
+                   key=lambda i: (-(targets[i] - sizes[i]), i))
+    for j in range(remainder):              # remainder < ways by floor
+        sizes[order[j % ways]] += 1
+    bounds, start = [], 0
+    for sz in sizes:
+        bounds.append((start, start + sz))
+        start += sz
+    return bounds

@@ -94,6 +94,20 @@ class SpillChannel(HostChannel):
         self._wq: Optional[queue.Queue] = None    # lazily-started writer
         self._writer: Optional[threading.Thread] = None
 
+    # -- adaptive budget hook ------------------------------------------
+    def set_budget(self, budget_bytes: int) -> None:
+        """Adjust the resident-DRAM budget online (ISSUE 8: the adaptive
+        controller widens it when the host path keeps up and shrinks it
+        when backlog builds). Shrinking triggers the usual non-blocking
+        cold-commit eviction; growing simply stops future evictions —
+        nothing is restored eagerly."""
+        budget_bytes = int(budget_bytes)
+        if budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0: {budget_bytes}")
+        with self._lock:
+            self.budget_bytes = budget_bytes
+        self._evict_cold()
+
     # ------------------------------------------------------------------
     def _spill_path(self, seq: int) -> str:
         if self._dir is None:

@@ -21,6 +21,16 @@ own range; `fetch` reassembles into a pooled scratch buffer
 (`self.pool`, zero fresh allocations in steady state) that the caller
 recycles via `pool.maybe_release` once consumed.
 
+Striping defaults to the blind equal split above; `set_weights()`
+switches to bandwidth-proportional splits (ISSUE 8): packed payloads
+split into byte ranges sized by the weights (range i pinned to
+sub-channel i), per-leaf payloads assign by deterministic byte-credit
+deficit round-robin. The adaptive controller
+(`repro.transport.adaptive`) drives this from measured per-path
+bandwidth; reweighting only moves bytes between paths — fetch rebuilds
+from each handle's own recorded bounds, so values are unchanged bit for
+bit and all-equal weights restore the exact legacy behavior.
+
 Sub-channels default to `HostChannel`s; pass `sub_factory` to build the
 stripes from any other tier (e.g. spill-backed stripes = multi-path AND
 multi-level, the full MLP-Offload picture). The codec is the striped
@@ -40,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import wire
+from repro.telemetry import trafficwatch
 from repro.transport import coalesce
 from repro.transport.host import CodecHooks, HostChannel
 from repro.transport.pool import BufferPool
@@ -80,6 +91,56 @@ class StripedChannel(CodecHooks):
         self.subs = [sub_factory(i) for i in range(ways)]
         self.pool = BufferPool(name=name)   # packed-reassembly scratch
         self._rr = 0
+        # bandwidth-proportional stripe weights (ISSUE 8): None = the
+        # blind equal-split legacy behavior, bit-identical to pre-weight
+        # code. `set_weights` switches packed payloads to proportional
+        # byte ranges and per-leaf payloads to byte-credit deficit
+        # round-robin. Reweighting moves the SAME bytes (fetch rebuilds
+        # from the handle's own bounds), so it can never change values.
+        self._weights: Optional[list[float]] = None
+        self._credit: Optional[list[float]] = None   # deficit-RR state
+
+    # -- adaptive reweighting hook ---------------------------------------
+    def set_weights(self, weights) -> None:
+        """Install bandwidth-proportional stripe weights (one per sub-
+        channel, >= 0, sum > 0; normalized here). All-equal weights
+        restore the exact legacy round-robin/equal-split behavior.
+        Takes effect on the NEXT stage/upload; in-flight handles carry
+        their own byte bounds so fetch is unaffected."""
+        w = [float(x) for x in weights]
+        if len(w) != self.ways:
+            raise ValueError(f"need {self.ways} weights, got {len(w)}")
+        if any(x < 0 for x in w) or sum(w) <= 0:
+            raise ValueError(f"weights must be >= 0 and sum > 0: {w}")
+        if len(set(w)) <= 1:
+            self._weights = None           # exact legacy path
+            self._credit = None
+            return
+        s = sum(w)
+        self._weights = [x / s for x in w]
+        self._credit = [0.0] * self.ways
+
+    def weights(self) -> list[float]:
+        """Current stripe weights (equal split when unweighted)."""
+        if self._weights is None:
+            return [1.0 / self.ways] * self.ways
+        return list(self._weights)
+
+    def _bounds(self, total: int) -> list[tuple[int, int]]:
+        if self._weights is None:
+            return coalesce.byte_stripes(total, self.ways)
+        return coalesce.weighted_byte_stripes(total, self._weights)
+
+    def _pick(self, nbytes: int) -> int:
+        """Deficit round-robin: per-leaf stripe choice whose long-run
+        byte share tracks the weights (deterministic; weighted mode
+        only)."""
+        w, credit = self._weights, self._credit
+        for i in range(self.ways):
+            credit[i] += w[i] * nbytes
+        k = max(range(self.ways), key=lambda i: (credit[i], -i))
+        credit[k] -= nbytes
+        return k
 
     # -- transfers (codec hooks inherited from CodecHooks) ---------------
     def _stage_packed(self, tree, tag: str, account: bool):
@@ -88,15 +149,20 @@ class StripedChannel(CodecHooks):
         (rr + i) % ways. Slicing is an async device op — never a read."""
         buf = tree[coalesce.PACKED_KEY]
         total = int(buf.shape[0])
-        bounds = coalesce.byte_stripes(total, self.ways)
+        bounds = self._bounds(total)
+        # weighted mode pins byte range i to sub-channel i (the range
+        # SIZES carry the proportionality); the blind default keeps the
+        # legacy rotating cursor, bit-identical to pre-weight code
+        weighted = self._weights is not None
         rr = self._rr
         parts = []
         for i, (start, stop) in enumerate(bounds):
-            k = (rr + i) % self.ways
+            k = i if weighted else (rr + i) % self.ways
             stripe = jax.lax.slice(buf, (start,), (stop,))
             parts.append((k, self.subs[k].stage(
                 {coalesce.PACKED_KEY: stripe}, tag, account=account)))
-        self._rr = (rr + len(bounds)) % self.ways
+        if not weighted:
+            self._rr = (rr + len(bounds)) % self.ways
         return _StripedHandle(None, parts, packed=(total, bounds))
 
     def stage(self, tree, tag: str = "stage_to_host",
@@ -108,6 +174,12 @@ class StripedChannel(CodecHooks):
             return self._stage_packed(tree, tag, account)
         leaves, treedef = jax.tree_util.tree_flatten(tree)
         parts = []
+        if self._weights is not None:
+            for leaf in leaves:
+                k = self._pick(trafficwatch.tree_bytes(leaf))
+                parts.append((k, self.subs[k].stage(leaf, tag,
+                                                    account=account)))
+            return _StripedHandle(treedef, parts)
         rr = self._rr
         for i, leaf in enumerate(leaves):
             k = (rr + i) % self.ways
@@ -138,14 +210,16 @@ class StripedChannel(CodecHooks):
         concatenate (the packed layout must arrive contiguous)."""
         buf = tree[coalesce.PACKED_KEY]
         total = int(buf.shape[0] if hasattr(buf, "shape") else len(buf))
-        bounds = coalesce.byte_stripes(total, self.ways)
+        bounds = self._bounds(total)
+        weighted = self._weights is not None
         rr = self._rr
         stripes = []
         for i, (start, stop) in enumerate(bounds):
-            k = (rr + i) % self.ways
+            k = i if weighted else (rr + i) % self.ways
             stripes.append(self.subs[k].upload(buf[start:stop], None, tag,
                                                account=account))
-        self._rr = (rr + len(bounds)) % self.ways
+        if not weighted:
+            self._rr = (rr + len(bounds)) % self.ways
         return {coalesce.PACKED_KEY:
                 jnp.concatenate([jnp.asarray(s) for s in stripes])}
 
@@ -166,6 +240,11 @@ class StripedChannel(CodecHooks):
                 raise ValueError(
                     f"upload sharding must match tree leaf-for-leaf: "
                     f"{len(shards)} shardings for {len(leaves)} leaves")
+        if self._weights is not None:
+            out = [self.subs[self._pick(trafficwatch.tree_bytes(x))]
+                   .upload(x, s, tag, account=account)
+                   for x, s in zip(leaves, shards)]
+            return jax.tree_util.tree_unflatten(treedef, out)
         rr = self._rr
         out = [self.subs[(rr + i) % self.ways].upload(x, s, tag,
                                                       account=account)
@@ -182,6 +261,7 @@ class StripedChannel(CodecHooks):
         subs = [sub.stats() for sub in self.subs]
         return {
             "name": self.name, "tier": self.tier, "ways": self.ways,
+            "weights": self.weights(),
             "staged_bytes": sum(s.get("staged_bytes", 0) for s in subs),
             "uploaded_bytes": sum(s.get("uploaded_bytes", 0) for s in subs),
             "pool": self.pool.stats(),

@@ -1,0 +1,476 @@
+"""Adaptive transport (ISSUE 8): weighted byte striping, the
+deterministic measurement->decision split (BandwidthProbe feeding a pure
+AdaptiveController), reweighted-stripe bit-parity, engine-level parity /
+zero-sync / attribution on the adaptive tier, mid-run wire escalation,
+and the mesh-path coalesce warning (satellite 3)."""
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.data import make_train_stream
+from repro.engine import Engine
+from repro.telemetry import syncwatch, trafficwatch
+from repro.telemetry.bandwidth import BandwidthProbe
+from repro.transport import (AdaptiveChannel, AdaptiveController,
+                             ControllerConfig, StripedChannel,
+                             ThrottledChannel, available_transports,
+                             coalesce, make_transport)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return reduced_config(get_config("llama2-7b"))
+
+
+@pytest.fixture(scope="module")
+def zcfg():
+    return ZenFlowConfig(topk_ratio=0.1, update_interval=2,
+                         refresh_interval=4, lr=1e-3, use_kernels="never")
+
+
+def _batches(cfg, n, seed=0):
+    loader = make_train_stream(cfg.vocab, 32, 8, seed=seed)
+    return [{k: jnp.asarray(v) for k, v in loader.next_batch().items()}
+            for _ in range(n)]
+
+
+def _tree(i: int):
+    return {"g": jnp.full((4, 8), float(i), jnp.bfloat16),
+            "idx": jnp.arange(i, i + 5, dtype=jnp.int32),
+            "flag": jnp.asarray(i % 2 == 0)}
+
+
+def _assert_trees_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        ax, ay = np.asarray(x), np.asarray(y)
+        assert ax.dtype == ay.dtype
+        np.testing.assert_array_equal(ax, ay)
+
+
+# ---------------------------------------------------------------------------
+# weighted_byte_stripes: proportional splits that always cover the buffer
+
+
+def test_weighted_stripes_cover_contiguously_and_sum_exactly():
+    for total in (0, 1, 7, 1024, 999983):
+        for w in ([1.0], [0.8, 0.2], [0.5, 0.3, 0.2], [3, 1, 1, 1]):
+            bounds = coalesce.weighted_byte_stripes(total, w)
+            assert bounds[0][0] == 0 and bounds[-1][1] == total
+            for (a0, a1), (b0, b1) in zip(bounds, bounds[1:]):
+                assert a1 == b0                    # contiguous, no gaps
+            assert sum(b - a for a, b in bounds) == total
+
+
+def test_weighted_stripes_equal_weights_bit_identical_to_legacy():
+    """The blind default must stay the EXACT legacy split — engine runs
+    that never adapt stay bitwise on the pre-ISSUE-8 byte layout."""
+    for total in (0, 5, 17, 4096):
+        for ways in (1, 2, 3, 5):
+            assert coalesce.weighted_byte_stripes(total, [1.0] * ways) \
+                == coalesce.byte_stripes(total, ways)
+            assert coalesce.weighted_byte_stripes(total, [0.25] * ways) \
+                == coalesce.byte_stripes(total, ways)
+
+
+def test_weighted_stripes_proportionality_and_validation():
+    bounds = coalesce.weighted_byte_stripes(1000, [0.8, 0.2])
+    sizes = [b - a for a, b in bounds]
+    assert sizes == [800, 200]
+    with pytest.raises(ValueError, match=">= 1 weight"):
+        coalesce.weighted_byte_stripes(10, [])
+    with pytest.raises(ValueError, match=">= 0"):
+        coalesce.weighted_byte_stripes(10, [0.5, -0.1])
+    with pytest.raises(ValueError, match="sum > 0"):
+        coalesce.weighted_byte_stripes(10, [0.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# BandwidthProbe: off-path measurement, deterministic recording half
+
+
+def test_probe_observe_replay_is_deterministic():
+    trace = [("a", 1000, 0.001), ("b", 1000, 0.004),
+             ("a", 2000, 0.001), ("b", 500, 0.002)]
+    p1, p2 = BandwidthProbe(), BandwidthProbe()
+    for probe in (p1, p2):
+        for path, nbytes, sec in trace:
+            probe.observe(path, nbytes, sec)
+    assert p1.snapshot() == p2.snapshot()
+    snap = p1.snapshot()
+    assert snap["a"]["samples"] == 2 and snap["b"]["samples"] == 2
+    assert snap["a"]["bps"] > snap["b"]["bps"]
+
+
+def test_probe_sampler_times_completion_off_path():
+    probe = BandwidthProbe(name="t")
+    try:
+        probe.track("p0", 4096, lambda: True)
+        deadline = time.perf_counter() + 2.0
+        while probe.bandwidth("p0") is None:
+            assert time.perf_counter() < deadline, "sampler never fired"
+            time.sleep(0.001)
+        assert probe.bandwidth("p0") > 0
+        # attribution of measurement seconds, not syncs
+        assert trafficwatch.counts()["seconds_by_channel"].get("p0", 0) > 0
+    finally:
+        probe.close()
+    # close() is idempotent and a later track restarts the sampler
+    probe.close()
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveController: pure decisions, deterministic given the trace
+
+
+def _snap(bw, window_t=0.1, window_bytes=1_000_000, spill=None,
+          wire="fp32", allow_wire=True):
+    return {"window_time_s": window_t, "window_bytes": window_bytes,
+            "path_bw": bw, "spill": spill, "wire_dtype": wire,
+            "allow_wire": allow_wire}
+
+
+def test_controller_identical_trace_identical_decisions():
+    """The decision half has no clocks and no randomness: replaying one
+    measurement trace into two controllers yields identical logs."""
+    trace = [
+        _snap([None, 4e6]),                       # unmeasured path: keep
+        _snap([16e6, 4e6]),                       # skew: adopt 0.8/0.2
+        _snap([15e6, 4.2e6]),                     # within deadband: keep
+        _snap([4e6, 16e6]),                       # flipped: re-adopt
+        _snap([1e3, 1e3], window_t=0.001,
+              window_bytes=10_000_000),           # lagging: wire pressure
+        _snap([1e3, 1e3], window_t=0.001,
+              window_bytes=10_000_000),
+    ]
+    c1 = AdaptiveController(ways=2)
+    c2 = AdaptiveController(ways=2)
+    for s in trace:
+        c1.decide(dict(s))
+        c2.decide(dict(s))
+    assert c1.log == c2.log
+    assert c1.log[0]["weights"] is None
+    w = c1.log[1]["weights"]
+    assert w is not None and abs(w[0] - 0.8) < 1e-6
+    assert c1.log[2]["weights"] is None           # deadband held
+    assert c1.log[3]["weights"][1] > 0.7          # flipped split adopted
+    assert c1.log[5]["wire_dtype"] == "bf16"      # patience=2 reached
+
+
+def test_controller_deadband_and_min_weight():
+    c = AdaptiveController(2, ControllerConfig(deadband=0.10,
+                                               min_weight=0.05))
+    d = c.decide(_snap([1e9, 1.0]))               # pathological skew
+    assert min(d["weights"]) >= 0.05 - 1e-9       # never starves a path
+    # a tiny wiggle after adoption stays inside the deadband
+    d2 = c.decide(_snap([1e9 * 1.01, 1.0]))
+    assert d2["weights"] is None
+
+
+def test_controller_budget_band_water_marks():
+    ctl = AdaptiveController(1, ControllerConfig(
+        budget_band=(100, 500), budget_step=0.25,
+        budget_high_water=0.75, budget_low_water=0.25))
+    grow = ctl.decide(_snap([1e6], spill={"budget_bytes": 100,
+                                          "resident_bytes": 90}))
+    assert grow["budget"] == 200                  # +0.25 * band width
+    shrink = ctl.decide(_snap([1e6], spill={"budget_bytes": 500,
+                                            "resident_bytes": 50}))
+    assert shrink["budget"] == 400
+    hold = ctl.decide(_snap([1e6], spill={"budget_bytes": 300,
+                                          "resident_bytes": 150}))
+    assert hold["budget"] is None                 # inside the band: keep
+    off = AdaptiveController(1)                   # band unset: disabled
+    assert off.decide(_snap([1e6], spill={"budget_bytes": 100,
+                                          "resident_bytes": 90}))["budget"] \
+        is None
+
+
+def test_controller_wire_patience_monotone_and_gating():
+    lag = _snap([1e3], window_t=0.001, window_bytes=10_000_000)
+    ok = _snap([1e9], window_t=0.1, window_bytes=1000)
+    c = AdaptiveController(1, ControllerConfig(wire_patience=2))
+    assert c.decide(dict(lag))["wire_dtype"] == "fp32"   # 1/2: hold
+    assert c.decide(dict(lag))["wire_dtype"] == "bf16"   # 2/2: escalate
+    assert c.decide(dict(lag, wire_dtype="bf16"))["wire_dtype"] == "bf16"
+    assert c.decide(dict(lag, wire_dtype="bf16"))["wire_dtype"] == "int8"
+    # last rung: lagging forever never de-escalates or overruns
+    for _ in range(3):
+        assert c.decide(dict(lag, wire_dtype="int8"))["wire_dtype"] == "int8"
+    # catching up resets the patience counter
+    c2 = AdaptiveController(1, ControllerConfig(wire_patience=2))
+    c2.decide(dict(lag))
+    c2.decide(dict(ok))                                  # reset
+    assert c2.decide(dict(lag))["wire_dtype"] == "fp32"  # back to 1/2
+    # allow_wire=False (mesh path / straggler-warm window) hard-gates
+    c3 = AdaptiveController(1, ControllerConfig(wire_patience=1))
+    assert c3.decide(dict(lag, allow_wire=False))["wire_dtype"] == "fp32"
+    assert c3.decide(dict(lag, allow_wire=False))["wire_dtype"] == "fp32"
+
+
+# ---------------------------------------------------------------------------
+# Reweighted striping: same bytes, different paths — bitwise + attributed
+
+
+def test_reweighted_striping_bitwise_roundtrip(zcfg):
+    ch = StripedChannel(zcfg, ways=2)
+    ch.set_weights([0.8, 0.2])
+    trees = [_tree(i) for i in range(6)]
+    handles = [ch.stage(t, tag="host_bound") for t in trees]
+    for t, h in zip(trees, handles):
+        _assert_trees_bitwise(ch.fetch(h), t)
+    packed, spec = coalesce.pack_tree(_tree(9))
+    got = ch.fetch(ch.stage(packed, tag="host_bound"))
+    _assert_trees_bitwise(
+        coalesce.unpack_tree_host(np.asarray(got[coalesce.PACKED_KEY]),
+                                  spec), _tree(9))
+    out = ch.upload(packed, tag="pending_upload")
+    _assert_trees_bitwise(
+        coalesce.unpack_tree(jnp.asarray(out[coalesce.PACKED_KEY]), spec),
+        _tree(9))
+    ch.drain()
+
+
+def test_reweighted_packed_stripes_attributed_proportionally(zcfg):
+    """Under non-uniform weights every byte still lands on exactly one
+    sub-channel and the split follows the weights (floor + largest
+    remainder, so +-1 byte)."""
+    trafficwatch.reset()
+    ch = StripedChannel(zcfg, ways=2)
+    ch.set_weights([0.75, 0.25])
+    packed, spec = coalesce.pack_tree(_tree(4))
+    total = spec.total_bytes
+    ch.stage(packed, tag="host_bound")
+    by_ch = trafficwatch.counts()["by_channel"]
+    per_sub = [by_ch.get(f"striped/{i}", 0) for i in range(2)]
+    assert sum(per_sub) == total == trafficwatch.counts()["total_bytes"]
+    assert abs(per_sub[0] - 0.75 * total) <= 1
+    ch.drain()
+
+
+def test_set_weights_validation(zcfg):
+    ch = StripedChannel(zcfg, ways=2)
+    with pytest.raises(ValueError, match="need 2 weights"):
+        ch.set_weights([1.0])
+    with pytest.raises(ValueError, match="sum > 0"):
+        ch.set_weights([0.0, 0.0])
+    ch.set_weights([0.3, 0.3])            # all-equal: exact legacy path
+    assert ch.weights() == [0.5, 0.5]
+    ch.drain()
+
+
+# ---------------------------------------------------------------------------
+# ThrottledChannel: deterministic serial-link model
+
+
+def test_throttled_channel_serial_link_backlog(zcfg):
+    base = make_transport("host", zcfg)
+    ch = ThrottledChannel(base, bytes_per_sec=1e6)
+    t0, t1 = _tree(0), _tree(1)
+    nbytes = trafficwatch.tree_bytes(t0)
+    before = time.perf_counter()
+    h0 = ch.stage(t0, tag="host_bound")
+    h1 = ch.stage(t1, tag="host_bound")
+    # serial link: the second transfer queues behind the first
+    assert h0.ready_at >= before + nbytes / 1e6
+    assert h1.ready_at >= h0.ready_at + nbytes / 1e6
+    _assert_trees_bitwise(ch.fetch(h0), t0)       # waits out the deadline
+    _assert_trees_bitwise(ch.fetch(h1), t1)
+    assert time.perf_counter() >= h1.ready_at
+    with pytest.raises(ValueError, match="bytes_per_sec"):
+        ThrottledChannel(base, 0)
+    ch.drain()
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveChannel: registry + engine integration
+
+
+def test_registry_has_adaptive_tier(zcfg):
+    assert "adaptive" in available_transports()
+    ch = make_transport("adaptive", zcfg)
+    assert isinstance(ch, AdaptiveChannel)
+    assert ch.ways == 2 and ch.tier == "host"
+    assert ch.codec.wire_dtype == zcfg.wire_dtype
+    ch.drain()
+
+
+def test_adaptive_channel_applies_decisions(zcfg):
+    """on_window_boundary snapshots measurements, decides, and applies
+    stripe weights locally — deterministically replayable from the probe
+    trace it saw."""
+    ch = AdaptiveChannel(zcfg, ways=2)
+    ch.probe.observe("adaptive/0", 1_000_000, 0.001)   # 1e9 B/s
+    ch.probe.observe("adaptive/1", 1_000_000, 0.004)   # 2.5e8 B/s
+    d = ch.on_window_boundary({"window_time_s": 0.1, "allow_wire": True})
+    assert d["weights"] is not None
+    assert ch.inner.weights() == d["weights"]
+    assert d["weights"][0] > 0.7
+    st = ch.stats()
+    assert st["decisions"] == [d]
+    assert st["weights"] == d["weights"]
+    # window byte counter resets at the boundary
+    d2 = ch.on_window_boundary({"window_time_s": 0.1})
+    assert d2["window"] == 1
+    ch.drain()
+
+
+def test_adaptive_set_wire_swaps_codec(zcfg):
+    ch = AdaptiveChannel(zcfg, ways=2)
+    ch.set_wire("int8")
+    assert ch.codec.wire_dtype == "int8"
+    assert ch.error_feedback is True
+    with pytest.raises(ValueError, match="unknown wire_dtype"):
+        ch.set_wire("fp7")
+    with pytest.raises(ValueError, match="throttle_bps"):
+        AdaptiveChannel(zcfg, ways=2, throttle_bps=[1e6])
+    ch.drain()
+
+
+@pytest.fixture(scope="module")
+def host_reference(cfg, zcfg):
+    """Final params + losses of the async engine on the stock host tier."""
+    batches = _batches(cfg, 8)
+    eng = Engine.from_config(cfg, zcfg, backend="async", transport="host")
+    eng.init(jax.random.PRNGKey(0))
+    losses = [float(eng.step(b)["loss"]) for b in batches]
+    eng.flush()
+    params = [np.asarray(p) for p in
+              jax.tree.leaves(eng.state_dict()["backend"]["params"])]
+    eng.close()
+    return batches, losses, params
+
+
+def test_adaptive_engine_bit_parity_on_symmetric_paths(cfg, zcfg,
+                                                       host_reference):
+    """With symmetric paths the adaptive tier may reweight on measurement
+    noise, but reweighting only moves WHERE bytes travel — params and
+    losses must stay bit-identical to the static host tier."""
+    batches, ref_losses, ref_params = host_reference
+    eng = Engine.from_config(cfg, zcfg, backend="async",
+                             transport="adaptive")
+    eng.init(jax.random.PRNGKey(0))
+    losses = [float(eng.step(b)["loss"]) for b in batches]
+    eng.flush()
+    got = [np.asarray(p) for p in
+           jax.tree.leaves(eng.state_dict()["backend"]["params"])]
+    eng.close()
+    assert losses == ref_losses
+    assert len(got) == len(ref_params)
+    for a, b in zip(ref_params, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_adaptive_zero_steady_state_syncs(cfg):
+    """The probe's sampler thread does all the timing: steady-state steps
+    stay at ZERO blocking host syncs with measurement enabled."""
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=8,
+                         refresh_interval=8, lr=1e-3, use_kernels="never")
+    eng = Engine.from_config(cfg, zcfg, backend="async",
+                             transport="adaptive")
+    eng.init(jax.random.PRNGKey(0))
+    batches = _batches(cfg, 7)
+    for b in batches[:3]:                  # compile + settle (t<S)
+        eng.step(b)
+    syncwatch.reset()
+    for b in batches[3:]:                  # t=4..7: all steady-state
+        m = eng.step(b)
+        assert m["boundary"] is False
+    assert syncwatch.total() == 0, syncwatch.counts()
+    eng.flush()
+    eng.close()
+
+
+def test_adaptive_traffic_fully_attributed_under_reweighting(cfg, zcfg):
+    """100% byte attribution survives adaptation: force a skewed split
+    up-front, run the engine (boundaries keep re-deciding), and every
+    byte still names a channel and a tier."""
+    trafficwatch.reset()
+    eng = Engine.from_config(cfg, zcfg, backend="async",
+                             transport="adaptive")
+    eng.backend.rt.channel.inner.set_weights([0.75, 0.25])
+    eng.init(jax.random.PRNGKey(0))
+    for b in _batches(cfg, 5):
+        eng.step(b)
+    eng.flush()
+    eng.close()
+    tc = trafficwatch.counts()
+    assert tc["total_bytes"] > 0
+    assert tc["unattributed_bytes"] == 0, tc
+    assert sum(tc["by_channel"].values()) == tc["total_bytes"]
+    assert sum(tc["by_tier"].values()) == tc["total_bytes"]
+    assert tc["by_tag"].get("host_bound", 0) > 0
+
+
+def test_wire_escalation_rebinds_runtime_mid_run(cfg):
+    """An aggressive controller (infinite headroom, patience 1) must walk
+    the wire ladder mid-run: the runtime retraces its programs via
+    _rebind_wire, training continues with finite losses, and the
+    decision log records every escalation."""
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=2,
+                         refresh_interval=4, lr=1e-3, use_kernels="never",
+                         wire_dtype="fp32")
+    ch = AdaptiveChannel(zcfg, ways=2,
+                         ctrl_cfg=ControllerConfig(wire_headroom=1e9,
+                                                   wire_patience=1))
+    eng = Engine.from_config(cfg, zcfg, backend="async", transport=ch)
+    eng.init(jax.random.PRNGKey(0))
+    losses = [float(eng.step(b)["loss"]) for b in _batches(cfg, 12)]
+    eng.flush()
+    rt = eng.backend.rt
+    assert all(np.isfinite(losses))
+    assert rt.zcfg.wire_dtype != "fp32", ch.stats()["decisions"]
+    assert ch.codec.wire_dtype == rt.zcfg.wire_dtype
+    reasons = [r for d in ch.stats()["decisions"] for r in d["reasons"]]
+    assert any("escalate" in r for r in reasons), reasons
+    if rt.zcfg.wire_dtype == "int8":
+        # error-feedback residual installed by the rebind
+        assert "wire_residual" in rt.dstate
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: mesh path records (and warns about) the coalesce downgrade
+
+
+def test_mesh_coalesce_warns_once_and_records_effective(cfg):
+    from repro.distributed.sharding import rules_for_mesh
+    from repro.launch.mesh import make_mesh
+    from repro.models import build_model
+    from repro.runtime import RuntimeConfig, ZenFlowRuntime
+
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=2,
+                         refresh_interval=4, lr=1e-3, use_kernels="never")
+    model = build_model(cfg)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = rules_for_mesh(mesh)
+    ZenFlowRuntime._warned_mesh_coalesce = False
+    with pytest.warns(RuntimeWarning, match="coalesce_effective=False"):
+        rt = ZenFlowRuntime(model, zcfg, rules,
+                            RuntimeConfig(coalesce=True),
+                            place_sharded=True)
+    rt.init(jax.random.PRNGKey(0))
+    assert rt.state_dict()["coalesce_effective"] is False
+    rt.close()
+    # once per process: a second runtime stays quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        rt2 = ZenFlowRuntime(model, zcfg, rules,
+                             RuntimeConfig(coalesce=True),
+                             place_sharded=True)
+    rt2.close()
+    # the single-host path keeps coalescing (and never warns)
+    from repro.distributed.sharding import DEFAULT_RULES
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        rt3 = ZenFlowRuntime(model, zcfg, DEFAULT_RULES,
+                             RuntimeConfig(coalesce=True))
+    assert rt3._coalesce is True
+    rt3.close()

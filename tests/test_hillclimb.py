@@ -1,0 +1,58 @@
+"""launch/hillclimb helpers (ISSUE 8 satellite): XLA_FLAGS merging must
+not clobber caller flags, and the HLO-collective delta must be
+degenerate-safe when the baseline cell has zero collective bytes."""
+import os
+
+import pytest
+
+
+@pytest.fixture()
+def hillclimb():
+    """Import the module with XLA_FLAGS snapshotted/restored (its import
+    intentionally writes the merged value back into the environment)."""
+    saved = os.environ.get("XLA_FLAGS")
+    try:
+        from repro.launch import hillclimb as hc
+        yield hc
+    finally:
+        if saved is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = saved
+
+
+def test_merge_xla_flags_appends_instead_of_clobbering(hillclimb):
+    """The old `os.environ["XLA_FLAGS"] = "--xla_force..."` assignment
+    silently discarded anything the caller exported (e.g. a dump dir)."""
+    merged = hillclimb._merge_xla_flags("--xla_dump_to=/tmp/d")
+    assert "--xla_dump_to=/tmp/d" in merged
+    assert "--xla_force_host_platform_device_count=512" in merged
+
+
+def test_merge_xla_flags_from_empty(hillclimb):
+    assert hillclimb._merge_xla_flags("") \
+        == "--xla_force_host_platform_device_count=512"
+
+
+def test_merge_xla_flags_respects_caller_device_count(hillclimb):
+    """A caller that already pinned the device count wins verbatim —
+    their topology choice must not be overridden or duplicated."""
+    pinned = "--xla_force_host_platform_device_count=8"
+    assert hillclimb._merge_xla_flags(pinned) == pinned
+    both = "--xla_dump_to=/d --xla_force_host_platform_device_count=16"
+    assert hillclimb._merge_xla_flags(both) == both
+
+
+def test_hlo_delta_frac_degenerate_zero_baseline(hillclimb):
+    """A cell with 0 collective GiB before the change has nothing to
+    reduce: the delta is 0.0 — the old expression divided by 1e-9 and
+    reported a billions-scale negative 'regression'."""
+    assert hillclimb._hlo_delta_frac(0.0, 0.0) == 0.0
+    assert hillclimb._hlo_delta_frac(0.0, 3.2) == 0.0
+    assert hillclimb._hlo_delta_frac(-0.0, 1.0) == 0.0
+
+
+def test_hlo_delta_frac_normal_cases(hillclimb):
+    assert hillclimb._hlo_delta_frac(10.0, 5.0) == pytest.approx(0.5)
+    assert hillclimb._hlo_delta_frac(10.0, 10.0) == pytest.approx(0.0)
+    assert hillclimb._hlo_delta_frac(10.0, 12.0) == pytest.approx(-0.2)

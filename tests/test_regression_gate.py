@@ -30,6 +30,21 @@ def _traffic(ratio=2.5, loss_diff=0.001, syncs=0.0, rtol=0.05):
                          "int8_steady_syncs_per_step": syncs}}
 
 
+def _skewed(recovered=0.6, asyncs=0.0, unattributed=0, bitwise=True,
+            bytes_ratio=1.0, transfers=4.0, **kw):
+    """A traffic report carrying the --skewed adaptive scenario."""
+    rep = _traffic(**kw)
+    rep["headline"].update({
+        "skew_recovered_frac": recovered,
+        "adaptive_steady_syncs_per_step": asyncs,
+        "adaptive_unattributed_bytes": unattributed,
+        "adaptive_sym_loss_bitwise_vs_host": bitwise,
+        "adaptive_bytes_ratio_vs_host": bytes_ratio,
+        "adaptive_transfers_per_step": transfers,
+    })
+    return rep
+
+
 def test_gate_passes_on_equal_numbers():
     assert check_report("dispatch", _dispatch(), _dispatch(), 0.10) == []
     assert check_report("traffic", _traffic(), _traffic(), 0.10) == []
@@ -146,6 +161,62 @@ def test_gate_improvements_always_pass():
     assert check_report("dispatch", cur, _dispatch(), 0.10) == []
     cur = _traffic(ratio=4.0, loss_diff=0.0)
     assert check_report("traffic", cur, _traffic(), 0.10) == []
+
+
+def test_gate_adaptive_hard_invariants():
+    """ISSUE 8: when the skewed scenario is present, sub-50% recovery,
+    any steady-state sync, unattributed bytes, or a symmetric-path
+    divergence each hard-fail — baseline-independent."""
+    assert check_report("traffic", _skewed(), _skewed(), 0.10) == []
+    errs = check_report("traffic", _skewed(recovered=0.3),
+                        _skewed(recovered=0.3), 0.10)
+    assert any("recovered" in e for e in errs)
+    errs = check_report("traffic", _skewed(recovered=float("nan")),
+                        _skewed(), 0.10)
+    assert any("recovered" in e for e in errs)       # NaN-safe
+    errs = check_report("traffic", _skewed(asyncs=1.0),
+                        _skewed(asyncs=1.0), 0.10)
+    assert any("adaptive steady-state syncs" in e for e in errs)
+    errs = check_report("traffic", _skewed(unattributed=512),
+                        _skewed(), 0.10)
+    assert any("unattributed" in e for e in errs)
+    errs = check_report("traffic", _skewed(bitwise=False),
+                        _skewed(), 0.10)
+    assert any("symmetric" in e for e in errs)
+
+
+def test_gate_adaptive_ceiling_do_no_harm():
+    """Adaptivity may never COST traffic: bytes ratio and transfers/step
+    are gated as ceilings (cur <= base * 1.1), unlike the floor-gated
+    ratios."""
+    # growth within tolerance passes; beyond it fails
+    assert check_report("traffic", _skewed(bytes_ratio=1.05),
+                        _skewed(bytes_ratio=1.0), 0.10) == []
+    errs = check_report("traffic", _skewed(bytes_ratio=1.3),
+                        _skewed(bytes_ratio=1.0), 0.10)
+    assert any("adaptive_bytes_ratio_vs_host" in e and "grew" in e
+               for e in errs)
+    errs = check_report("traffic", _skewed(transfers=8.0),
+                        _skewed(transfers=4.0), 0.10)
+    assert any("adaptive_transfers_per_step" in e for e in errs)
+    # improvements (fewer bytes, fewer transfers) always pass
+    assert check_report("traffic", _skewed(bytes_ratio=0.8, transfers=2.0),
+                        _skewed(), 0.10) == []
+    # NaN must fail, not slip past the ceiling comparison
+    errs = check_report("traffic", _skewed(bytes_ratio=float("nan")),
+                        _skewed(), 0.10)
+    assert any("adaptive_bytes_ratio_vs_host" in e for e in errs)
+
+
+def test_gate_adaptive_ceiling_missing_key_handling():
+    """Skipped only when the scenario is absent from BOTH reports (a
+    never-baselined repo); dropping it from CI while the baseline still
+    carries it fails loudly."""
+    assert check_report("traffic", _traffic(), _traffic(), 0.10) == []
+    errs = check_report("traffic", _traffic(), _skewed(), 0.10)
+    assert any("dropped" in e for e in errs)
+    errs = check_report("traffic", _skewed(), _traffic(), 0.10)
+    assert any("missing from" in e and "baseline" in e for e in errs)
 
 
 def test_committed_baselines_exist_and_pass_their_own_gate():

@@ -149,6 +149,42 @@ def test_autotune_adapts_interval(params):
     assert 1 <= s_eff <= 8
 
 
+def test_autotune_ratio_accepts_rank1_accumulator_leaves():
+    """acc_vs_important indexed `shape[-2]` on every accumulator leaf, so
+    a bias/norm-scale accumulator (rank 1) raised IndexError (fixed in
+    ISSUE 8): a rank-1 leaf is a single channel. Checked eagerly and
+    under jit (the traced autotune path)."""
+    from repro.core.autotune import acc_vs_important
+    host = {"count": jnp.asarray(2, jnp.int32),
+            "acc": {"w": jnp.ones((4, 8), jnp.float32),
+                    "b": jnp.ones((8,), jnp.float32)}}
+    imp = {"w": jnp.asarray(1.0, jnp.float32),
+           "b": jnp.asarray(1.0, jnp.float32)}
+    # w: sum((1/2)^2)*32 / 4 channels = 2; b: 0.25*8 / 1 channel = 2
+    # -> (2 + 2) / (1 + 1) = 2
+    ratio = acc_vs_important(host, {}, imp)
+    np.testing.assert_allclose(np.asarray(ratio), 2.0, rtol=1e-6)
+    jitted = jax.jit(lambda h, i: acc_vs_important(h, {}, i))(host, imp)
+    np.testing.assert_allclose(np.asarray(jitted), 2.0, rtol=1e-6)
+
+
+def test_autotune_adapts_interval_with_bias_bearing_model(params):
+    """End-to-end autotune on a model whose params include rank-1 leaves
+    (the `b` bias in the fixture): the S-adaptation loop must run through
+    windows without the rank-1 IndexError and land on a valid S."""
+    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=2,
+                         refresh_interval=8, auto_tune=True, s_max=8,
+                         lr=1e-3, pipeline="sync", use_kernels="never")
+    zs = zenflow_init(params, zcfg)
+    assert any(a.ndim == 1 for a in jax.tree.leaves(params))
+    p = params
+    for i in range(10):
+        p, zs, met = zenflow_step(p, _grads(params, i), zs, zcfg)
+        assert np.isfinite(float(met["rho"]))
+    assert 1 <= int(zs["host"]["s_eff"]) <= 8
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(p))
+
+
 def test_refresh_must_align_with_window():
     with pytest.raises(ValueError):
         ZenFlowConfig(update_interval=4, refresh_interval=6)
