@@ -56,7 +56,7 @@ def run_backend(backend: str, cfg, zcfg, steps: int, seq: int, batch: int,
     "async_uncoalesced" for per-leaf (uncoalesced) transfers.
     """
     from repro.data import make_train_stream
-    from repro.engine import Engine
+    from repro.engine import Engine, JobSpec
     from repro.runtime import RuntimeConfig
     from repro.telemetry import syncwatch, trafficwatch
 
@@ -68,7 +68,8 @@ def run_backend(backend: str, cfg, zcfg, steps: int, seq: int, batch: int,
     elif backend == "async_uncoalesced":
         name = "async"
         rcfg = RuntimeConfig(coalesce=False)
-    eng = Engine.from_config(cfg, zcfg, backend=name, rcfg=rcfg)
+    eng = Engine.from_spec(JobSpec(arch=cfg, zcfg=zcfg, backend=name,
+                                   rcfg=rcfg))
     eng.init(jax.random.PRNGKey(seed))
     loader = make_train_stream(cfg.vocab, seq, batch, seed=seed, prefetch=2)
 
@@ -162,12 +163,12 @@ def parity_losses(coalesce: bool, cfg, zcfg, steps: int, seq: int,
     timing). Bitwise parity of the coalesced wire means the coalesce=True
     and coalesce=False lists are identical floats."""
     from repro.data import make_train_stream
-    from repro.engine import Engine
+    from repro.engine import Engine, JobSpec
     from repro.runtime import RuntimeConfig
 
     rcfg = RuntimeConfig(coalesce=coalesce,
                          straggler_window_extension=False)
-    eng = Engine.from_config(cfg, zcfg, backend="async", rcfg=rcfg)
+    eng = Engine.from_spec(JobSpec(arch=cfg, zcfg=zcfg, rcfg=rcfg))
     eng.init(jax.random.PRNGKey(seed))
     loader = make_train_stream(cfg.vocab, seq, batch, seed=seed)
     losses = [float(eng.step(loader.next_batch())["loss"])

@@ -60,7 +60,7 @@ def run_wire(wire_dtype: str, cfg, zcfg_base, steps: int, seq: int,
     scenario's custom topologies); return byte/timing statistics from
     trafficwatch/syncwatch."""
     from repro.data import make_train_stream
-    from repro.engine import Engine
+    from repro.engine import Engine, JobSpec
     from repro.runtime import RuntimeConfig
     from repro.telemetry import syncwatch, trafficwatch
 
@@ -73,8 +73,10 @@ def run_wire(wire_dtype: str, cfg, zcfg_base, steps: int, seq: int,
     # dependent — this bench's contract is DETERMINISTIC bytes, so every
     # boundary lands on schedule (stalling if the apply is late)
     rcfg = RuntimeConfig(straggler_window_extension=False)
-    eng = Engine.from_config(cfg, zcfg, backend="async",
-                             transport=transport, rcfg=rcfg)
+    # a live channel instance can't ride the (serializable) spec — it
+    # goes through from_spec's transport override instead
+    eng = Engine.from_spec(JobSpec(arch=cfg, zcfg=zcfg, rcfg=rcfg),
+                           transport=transport)
     eng.init(jax.random.PRNGKey(seed))
     loader = make_train_stream(cfg.vocab, seq, batch, seed=seed, prefetch=2)
 

@@ -6,6 +6,7 @@ benchmark and re-measured on every CI run:
 
   BENCH_dispatch.json  zero-sync runtime   (benchmarks/bench_dispatch.py)
   BENCH_traffic.json   compressed wire     (benchmarks/bench_traffic.py)
+  BENCH_service.json   multi-tenant service (benchmarks/bench_service.py)
 
 This gate fails the build when:
 
@@ -31,7 +32,13 @@ This gate fails the build when:
     unattributed, or diverges bitwise from the static host transport
     on symmetric paths (hard invariants) — or its traffic grows above
     its baseline CEILING (CEIL_GATES: adaptivity may never cost bytes
-    or dispatches).
+    or dispatches);
+  * the multi-tenant service (ISSUE 9) spreads per-job throughput more
+    than MAX_FAIRNESS_RATIO max/min, lets any tenant record a
+    steady-state sync, or leaves any transferred byte unattributed to
+    a job (hard invariants) — or its concurrent-vs-serial aggregate
+    speedup regresses below the baseline floor (wall-clock-derived, so
+    gated at TIMING_NOISE_TOLERANCE).
 
 Baselines live in `benchmarks/baselines/` (quick-mode runs, same shapes
 CI measures); refresh them deliberately with --update-baselines when a
@@ -39,6 +46,7 @@ PR moves a headline on purpose, so drift is always an explicit diff.
 
     PYTHONPATH=src python benchmarks/check_regression.py \
         --dispatch BENCH_dispatch.json --traffic BENCH_traffic.json \
+        --service BENCH_service.json \
         [--baseline-dir benchmarks/baselines] [--tolerance 0.10]
 """
 from __future__ import annotations
@@ -57,6 +65,7 @@ RATIO_GATES = {
     "dispatch": ["step_time_speedup_vs_blocking",
                  "transfer_coalescing_factor"],
     "traffic": ["compression_ratio_int8_vs_fp32"],
+    "service": ["concurrent_speedup_vs_serial"],
 }
 
 # headline metrics gated as CEILINGS (cur <= base * (1 + tolerance)) —
@@ -84,8 +93,14 @@ MAX_STEADY_TRANSFERS = 2.0
 # floor that still catches a genuine pipeline collapse. Byte-count
 # ratios (traffic) are deterministic and keep the tight tolerance; the
 # hard zero-sync invariant above is the dispatch contract that matters.
-TIMING_GATES = {"step_time_speedup_vs_blocking"}
+TIMING_GATES = {"step_time_speedup_vs_blocking",
+                "concurrent_speedup_vs_serial"}
 TIMING_NOISE_TOLERANCE = 0.25
+
+# the multi-tenant service's fairness contract: max/min per-job
+# throughput with all tenants training concurrently (hard ceiling,
+# baseline-independent — mirrors bench_service.MAX_FAIRNESS_RATIO)
+MAX_FAIRNESS_RATIO = 1.5
 
 
 def _load(path: str) -> dict:
@@ -163,6 +178,24 @@ def check_report(kind: str, current: dict, baseline: dict,
                 errs.append("traffic: adaptive transport on symmetric "
                             "paths diverged from the static host "
                             "transport (must be bit-identical)")
+    if kind == "service":
+        # multi-tenant contracts (ISSUE 9). `not (<=)` so a missing/NaN
+        # value fails instead of slipping past a `>` comparison.
+        fr = cur_h.get("fairness_ratio")
+        if fr is None or not (fr <= MAX_FAIRNESS_RATIO):
+            errs.append(f"service: per-job throughput spread {fr}x "
+                        f"(must be <= {MAX_FAIRNESS_RATIO}x)")
+        syncs = cur_h.get("max_steady_syncs_per_job")
+        if syncs is None or syncs != 0:
+            errs.append(f"service: a tenant recorded {syncs} steady-state "
+                        f"syncs (must be 0 per job)")
+        ub = cur_h.get("job_unattributed_bytes")
+        if ub is None or ub != 0:
+            errs.append(f"service: {ub} transferred bytes belong to no "
+                        f"job (must be 0)")
+        if cur_h.get("all_bytes_match_channels") is not True:
+            errs.append("service: a tenant's by_job byte total diverged "
+                        "from its job:<name> channel total")
 
     # ratio gates vs the committed baseline
     for key in RATIO_GATES.get(kind, []):
@@ -211,6 +244,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dispatch", default="BENCH_dispatch.json")
     ap.add_argument("--traffic", default="BENCH_traffic.json")
+    ap.add_argument("--service", default="BENCH_service.json")
     ap.add_argument("--baseline-dir", default=BASELINE_DIR)
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed relative regression of ratio headlines")
@@ -219,7 +253,8 @@ def main() -> None:
                          "baselines instead of gating")
     args = ap.parse_args()
 
-    reports = {"dispatch": args.dispatch, "traffic": args.traffic}
+    reports = {"dispatch": args.dispatch, "traffic": args.traffic,
+               "service": args.service}
     if args.update_baselines:
         os.makedirs(args.baseline_dir, exist_ok=True)
         for kind, path in reports.items():

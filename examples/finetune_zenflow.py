@@ -13,9 +13,8 @@ import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, reduced_config
-from repro.core.zen_optimizer import ZenFlowConfig
 from repro.data import make_train_stream
-from repro.engine import CheckpointCallback, Engine, TelemetryCallback
+from repro.engine import CheckpointCallback, Engine, JobSpec, TelemetryCallback
 from repro.optim import cosine_with_warmup
 
 
@@ -39,25 +38,30 @@ def main():
                          "(repro/transport/)")
     args = ap.parse_args()
 
-    cfg = build_100m()
-    zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
-                         refresh_interval=16, warmup_steps=10,
-                         lr=cosine_with_warmup(1e-3, args.steps))
-    backend = "baseline" if args.baseline else "async"
-    loader = make_train_stream(cfg.vocab, args.seq, args.batch)
+    # One JobSpec is the whole run description; live ArchConfig objects
+    # are accepted for custom shapes like this 100M variant
+    spec = JobSpec(
+        name="finetune-100m", arch=build_100m(),
+        zcfg=dict(topk_ratio=0.1, update_interval=4, refresh_interval=16,
+                  warmup_steps=10, lr=cosine_with_warmup(1e-3, args.steps)),
+        backend="baseline" if args.baseline else "async",
+        transport=args.transport,
+        batch_size=args.batch, seq_len=args.seq)
+    cfg = spec.resolve_arch()
+    loader = make_train_stream(cfg.vocab, spec.seq_len, spec.batch_size)
 
-    callbacks = [TelemetryCallback(every=50, prefix=backend)]
+    callbacks = [TelemetryCallback(every=50, prefix=spec.backend)]
     if not args.baseline:
         ckpt = CheckpointManager(args.ckpt_dir, keep=2)
         callbacks.append(CheckpointCallback(ckpt, every=50, loader=loader))
 
-    eng = Engine.from_config(cfg, zcfg, backend=backend, callbacks=callbacks,
-                             transport=args.transport)
-    n = sum(np.prod(x.shape) for x in jax.tree.leaves(eng.model.param_specs()))
-    print(f"[finetune] {cfg.name}: {n/1e6:.1f}M params ({backend} backend)")
-    eng.init(jax.random.PRNGKey(0))
-    eng.run(loader, args.steps)
-    eng.close()
+    with Engine.from_spec(spec, callbacks=callbacks) as eng:
+        n = sum(np.prod(x.shape)
+                for x in jax.tree.leaves(eng.model.param_specs()))
+        print(f"[finetune] {cfg.name}: {n/1e6:.1f}M params "
+              f"({spec.backend} backend)")
+        eng.init(jax.random.PRNGKey(spec.seed))
+        eng.run(loader, args.steps)
     if not args.baseline:
         print(f"[zenflow] finished; checkpoints in {args.ckpt_dir}")
 

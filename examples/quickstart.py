@@ -8,45 +8,44 @@ the channel every device<->host byte moves through.
 import sys
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config, reduced_config
-from repro.core.zen_optimizer import ZenFlowConfig
 from repro.data import make_train_stream
-from repro.engine import Engine
+from repro.engine import Engine, JobSpec
 
 
 def main(transport: str = "host"):
-    # a tiny llama-family model (CPU-runnable); swap for any of the 13
-    # registered configs on real hardware
-    cfg = reduced_config(get_config("llama2-7b"))
-
-    zcfg = ZenFlowConfig(
-        topk_ratio=0.1,        # top 10% of input channels update on-device
-        update_interval=4,     # complement rows: host-applied every S=4
-        refresh_interval=16,   # selection refresh cadence
-        lr=2e-3,
-    )
+    # One JobSpec describes the whole run: a tiny llama-family model
+    # (CPU-runnable; swap arch= for any of the 13 registered configs on
+    # real hardware), the ZenFlow schedule, backend, and transport.
     # backend="async" is the paper's zero-stall two-program pipeline;
     # "sync" / "fused" / "baseline" run behind the same API. transport=
     # picks the offload channel tier ("host" DRAM, "spill" bounded DRAM
-    # + simulated-NVMe, "striped" multi-path) — same training math
-    eng = Engine.from_config(cfg, zcfg, backend="async",
-                             transport=transport)
-    eng.init(jax.random.PRNGKey(0))
+    # + simulated-NVMe, "striped" multi-path) — same training math.
+    # The same spec object is what repro.service's submit() takes.
+    spec = JobSpec(
+        name="quickstart", arch="llama2-7b", reduced=True,
+        zcfg=dict(
+            topk_ratio=0.1,        # top 10% of input channels on-device
+            update_interval=4,     # complement rows: host-applied every S=4
+            refresh_interval=16,   # selection refresh cadence
+            lr=2e-3,
+        ),
+        transport=transport, batch_size=8, seq_len=64)
 
+    cfg = spec.resolve_arch()
     # prefetch=2: batch construction + h2d overlap device compute
-    loader = make_train_stream(cfg.vocab, seq_len=64, global_batch=8,
-                               prefetch=2)
-    for step in range(40):
-        m = eng.step(loader.next_batch())
-        # loss/rho are device arrays (zero-sync contract); printing them
-        # here blocks deliberately — see MetricsDrainCallback otherwise
-        if (step + 1) % 10 == 0:
-            print(f"step {step+1:3d}  loss {m['loss']:.4f}  "
-                  f"rho {m['rho']:.3f}  stall {m['stall']*1e3:.1f} ms  "
-                  f"boundary {m['boundary']}")
-    eng.close()
+    loader = make_train_stream(cfg.vocab, seq_len=spec.seq_len,
+                               global_batch=spec.batch_size, prefetch=2)
+    with Engine.from_spec(spec) as eng:
+        eng.init(jax.random.PRNGKey(spec.seed))
+        for step in range(40):
+            m = eng.step(loader.next_batch())
+            # loss/rho are device arrays (zero-sync contract); printing
+            # them here blocks deliberately — see MetricsDrainCallback
+            if (step + 1) % 10 == 0:
+                print(f"step {step+1:3d}  loss {m['loss']:.4f}  "
+                      f"rho {m['rho']:.3f}  stall {m['stall']*1e3:.1f} ms  "
+                      f"boundary {m['boundary']}")
     loader.close()
     print("done — GPU(device) never waited on the host optimizer.")
 

@@ -8,10 +8,13 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
+import threading
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
 _REGISTRY: dict[str, "ArchConfig"] = {}
+_LOAD_LOCK = threading.Lock()
+_LOADED = False
 
 _ARCH_MODULES = [
     "whisper_small", "gemma_7b", "phi4_mini_3p8b", "gemma_2b", "qwen3_4b",
@@ -122,22 +125,32 @@ def register(cfg: ArchConfig) -> ArchConfig:
 
 
 def get_config(name: str) -> ArchConfig:
-    if not _REGISTRY:
-        _load_all()
+    _load_all()
     if name not in _REGISTRY:
         raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[name]
 
 
 def list_configs() -> list[str]:
-    if not _REGISTRY:
-        _load_all()
+    _load_all()
     return sorted(_REGISTRY)
 
 
 def _load_all() -> None:
-    for mod in _ARCH_MODULES:
-        importlib.import_module(f"repro.configs.{mod}")
+    # thread-safe lazy load: the multi-tenant service resolves arch
+    # configs from many job driver threads at once, and "registry
+    # non-empty" is NOT "registry fully loaded" — a second thread must
+    # block until the full module list has registered, not race past a
+    # partial registry
+    global _LOADED
+    if _LOADED:
+        return
+    with _LOAD_LOCK:
+        if _LOADED:
+            return
+        for mod in _ARCH_MODULES:
+            importlib.import_module(f"repro.configs.{mod}")
+        _LOADED = True
 
 
 def reduced_config(cfg: ArchConfig, *, n_layers: int = 2, d_model: int = 64,

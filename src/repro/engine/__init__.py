@@ -19,9 +19,10 @@ from repro.engine.callbacks import (
     TelemetryCallback,
 )
 from repro.engine.engine import Engine, default_rules
+from repro.engine.spec import JobSpec
 
 __all__ = [
-    "Engine", "default_rules",
+    "Engine", "JobSpec", "default_rules",
     "ExecutionBackend", "SyncBackend", "AsyncBackend", "SpmdBackend",
     "FusedBackend", "BaselineBackend", "BackendUnavailable",
     "register_backend", "make_backend", "available_backends",

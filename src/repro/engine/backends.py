@@ -146,9 +146,9 @@ class SyncBackend:
         # single-program mode has no separate transfer legs; the
         # transport contributes only its wire-codec hook (None keeps the
         # stock wire.codec_for(zcfg) — bit-identical)
-        if isinstance(transport, str):
-            from repro.transport import make_transport
-            transport = make_transport(transport, zcfg)
+        if transport is not None:
+            from repro.transport import resolve as resolve_transport
+            transport = resolve_transport(transport, zcfg)
         codec = transport
 
         def _step(params, zstate, batch):
@@ -203,9 +203,16 @@ class AsyncBackend:
 
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
                  rcfg: Optional[RuntimeConfig] = None,
-                 segs: Optional[dict] = None, transport=None):
+                 segs: Optional[dict] = None, transport=None,
+                 host_executor=None, program_cache: Optional[dict] = None):
+        # host_executor / program_cache are the multi-tenant service's
+        # sharing hooks (repro.service): a fair host-apply scheduler in
+        # place of the private worker thread, and cross-job reuse of the
+        # traced/jitted programs (zen_runtime._build_programs)
         self.rt = ZenFlowRuntime(model, zcfg, rules, rcfg, segs=segs,
-                                 transport=transport)
+                                 transport=transport,
+                                 host_executor=host_executor,
+                                 program_cache=program_cache)
 
     def init(self, key):
         self.rt.init(key)
@@ -260,7 +267,8 @@ class SpmdBackend(AsyncBackend):
 
     def __init__(self, model, zcfg: ZenFlowConfig, rules: MeshRules,
                  rcfg: Optional[RuntimeConfig] = None,
-                 segs: Optional[dict] = None, transport=None):
+                 segs: Optional[dict] = None, transport=None,
+                 host_executor=None, program_cache: Optional[dict] = None):
         if rules.mesh is None:
             import dataclasses
             from repro.launch.mesh import make_mesh_for
@@ -271,7 +279,9 @@ class SpmdBackend(AsyncBackend):
         self.rules = rules
         self.mesh = rules.mesh
         self.rt = ZenFlowRuntime(model, zcfg, rules, rcfg, segs=segs,
-                                 place_sharded=True, transport=transport)
+                                 place_sharded=True, transport=transport,
+                                 host_executor=host_executor,
+                                 program_cache=program_cache)
         self._batch_ax = rules.axis("batch")
         self._batch_n = _axis_size(self.mesh, self._batch_ax)
         self._batch_shardings: dict = {}      # (key, ndim, dim0) -> sharding

@@ -26,6 +26,11 @@ class Callback:
     def on_close(self, engine) -> None:
         pass
 
+    def detach(self, engine) -> None:
+        """Unhook from `engine`; idempotent (detaching twice, or from an
+        engine that never attached this callback, is a no-op)."""
+        engine.remove_callback(self)
+
 
 class MetricsDrainCallback(Callback):
     """Zero-sync metrics collection: pushes each step's metrics (device
@@ -42,6 +47,7 @@ class MetricsDrainCallback(Callback):
         from repro.telemetry import MetricsDrain
         self.drain = MetricsDrain(capacity=capacity, on_metrics=on_metrics,
                                   keep_history=keep_history)
+        self._closed = False
 
     @property
     def history(self) -> list:
@@ -54,6 +60,11 @@ class MetricsDrainCallback(Callback):
         self.drain.drain()
 
     def on_close(self, engine) -> None:
+        # idempotent: Engine.close() is a no-op the second time, but a
+        # caller may also fire on_close directly before detaching
+        if self._closed:
+            return
+        self._closed = True
         self.drain.drain()
 
 

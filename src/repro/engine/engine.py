@@ -1,16 +1,22 @@
 """`Engine`: the single training facade over every execution backend.
 
-    from repro.engine import Engine
-    eng = Engine.from_config("llama2-7b", zcfg, backend="async",
-                             callbacks=[TelemetryCallback(every=10)])
-    eng.init(jax.random.PRNGKey(0))
-    for _ in range(steps):
-        metrics = eng.step(loader_batch())
-    eng.close()
+    from repro.engine import Engine, JobSpec
+    spec = JobSpec(arch="llama2-7b", backend="async")
+    with Engine.from_spec(spec,
+                          callbacks=[TelemetryCallback(every=10)]) as eng:
+        eng.init(jax.random.PRNGKey(spec.seed))
+        for _ in range(steps):
+            metrics = eng.step(loader_batch())
 
 or, with the shared loop (checkpointing/telemetry via callbacks):
 
     eng.run(loader, steps)
+
+`JobSpec` (engine/spec.py) is the single construction path — the same
+frozen, serializable object the multi-tenant service's `submit()`
+takes. The legacy `Engine.from_config(cfg, zcfg, backend=, ...)` kwarg
+form still works as a thin shim that builds a `JobSpec` and emits a
+`DeprecationWarning` (bit-identical construction, parity-tested).
 
 One facade, five stock backends (sync / async / spmd / fused / baseline
 — see engine/backends.py), pluggable offload transports
@@ -26,16 +32,17 @@ it without accelerators.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.distributed.sharding import DEFAULT_RULES, MeshRules, rules_for_mesh
 from repro.engine.backends import ExecutionBackend, make_backend
 from repro.engine.callbacks import Callback
+from repro.engine.spec import JobSpec
 from repro.models import build_model
 from repro.runtime.zen_runtime import OPTIONAL_CKPT_KEYS
 
@@ -61,38 +68,77 @@ class Engine:
         self.zcfg = zcfg
         self.backend = backend
         self.callbacks = list(callbacks)
+        self.spec: Optional[JobSpec] = None
         self._step = 0
+        self._closed = False
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_spec(cls, spec: JobSpec, *, model=None,
+                  rules: Optional[MeshRules] = None,
+                  callbacks: Sequence[Callback] = (),
+                  transport=None, **backend_kw) -> "Engine":
+        """THE construction path: build an engine from a `JobSpec`
+        (engine/spec.py — the same frozen object the multi-tenant
+        service's `submit()` takes).
+
+        Keyword overrides exist for the build-time concerns a
+        serializable spec cannot carry: `model` substitutes a pre-built
+        (shared) model instance, `rules` the mesh rules, `callbacks`
+        extends `spec.callbacks`, `transport` overrides the spec's
+        channel (the service wraps it in a per-job `QuotaChannel`), and
+        extra keywords reach the backend factory on top of
+        `spec.backend_kw`.
+        """
+        cfg = spec.resolve_arch()
+        model = build_model(cfg) if model is None else model
+        zcfg = spec.resolve_zcfg()
+        if rules is None:
+            rules = spec.rules if spec.rules is not None else default_rules()
+        kw = dict(spec.backend_kw)
+        kw.update(backend_kw)
+        transport = spec.transport if transport is None else transport
+        if transport is not None:
+            kw["transport"] = transport
+        backend = spec.backend
+        if isinstance(backend, str):
+            backend = make_backend(backend, model, zcfg, rules,
+                                   rcfg=spec.rcfg, **kw)
+        eng = cls(model, zcfg, backend,
+                  tuple(spec.callbacks) + tuple(callbacks))
+        eng.spec = spec
+        return eng
+
     @classmethod
     def from_config(cls, cfg, zcfg: Optional[ZenFlowConfig] = None,
                     backend: Union[str, ExecutionBackend] = "async",
                     rules: Optional[MeshRules] = None,
                     callbacks: Sequence[Callback] = (),
                     rcfg=None, transport=None, **backend_kw) -> "Engine":
-        """Build an engine from an ArchConfig (or registered config name).
+        """DEPRECATED kwarg-sprawl shim: builds the equivalent `JobSpec`
+        and defers to `from_spec` (bit-identical construction —
+        tests/test_service.py parity-gates it). Prefer
+
+            Engine.from_spec(JobSpec(arch=cfg, zcfg=..., backend=...))
 
         `backend` is a registry name ("sync" | "async" | "spmd" |
         "fused" | "baseline" | anything passed to `register_backend`) or
         an already constructed ExecutionBackend. `transport` selects the
         offload channel every device<->host byte moves through
-        (`repro.transport` registry name — "host" | "spill" | "striped"
-        — or an OffloadChannel instance; None = the behavior-identical
-        "host" tier). Extra keyword arguments reach the backend factory
-        (e.g. `segs=...` pins a custom channel segmentation on the
-        async/spmd runtimes).
+        (`repro.transport` registry name, a `TransportSpec`, or an
+        OffloadChannel instance; None = the behavior-identical "host"
+        tier). Extra keyword arguments reach the backend factory (e.g.
+        `segs=...` pins a custom channel segmentation on the async/spmd
+        runtimes).
         """
-        if isinstance(cfg, str):
-            cfg = get_config(cfg)
-        model = build_model(cfg)
-        zcfg = ZenFlowConfig() if zcfg is None else zcfg
-        rules = default_rules() if rules is None else rules
-        if transport is not None:
-            backend_kw["transport"] = transport
-        if isinstance(backend, str):
-            backend = make_backend(backend, model, zcfg, rules,
-                                   rcfg=rcfg, **backend_kw)
-        return cls(model, zcfg, backend, callbacks)
+        warnings.warn(
+            "Engine.from_config(...) is deprecated; build a "
+            "repro.engine.JobSpec and use Engine.from_spec(spec)",
+            DeprecationWarning, stacklevel=2)
+        spec = JobSpec(arch=cfg, zcfg=zcfg, backend=backend,
+                       rcfg=rcfg, transport=transport, rules=rules,
+                       backend_kw=backend_kw)
+        return cls.from_spec(spec, callbacks=callbacks)
 
     # ------------------------------------------------------------------
     @property
@@ -101,6 +147,15 @@ class Engine:
 
     def add_callback(self, cb: Callback) -> "Engine":
         self.callbacks.append(cb)
+        return self
+
+    def remove_callback(self, cb: Callback) -> "Engine":
+        """Detach `cb`; detaching twice (or one never attached) is a
+        no-op — symmetric with the idempotent `close()`."""
+        try:
+            self.callbacks.remove(cb)
+        except ValueError:
+            pass
         return self
 
     def init(self, key) -> "Engine":
@@ -181,6 +236,23 @@ class Engine:
         self.backend.flush()
 
     def close(self) -> None:
+        """Release the backend (worker threads, transport, pools) and
+        fire callback `on_close` hooks. Idempotent: a second close — or
+        a close reached through `__exit__` after a failed init — is a
+        no-op, so `with` blocks and service teardown paths can always
+        call it unconditionally."""
+        if self._closed:
+            return
+        self._closed = True
         for cb in self.callbacks:
             cb.on_close(self)
         self.backend.close()
+
+    # engines are context managers: `with Engine.from_spec(spec) as eng:`
+    # guarantees the host worker / transport teardown on every exit path
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False

@@ -1,0 +1,195 @@
+"""`JobSpec`: one frozen value object describing a fine-tuning job
+(ISSUE 9 — replaces `Engine.from_config`'s kwarg sprawl as the single
+construction path).
+
+The same object serves three callers:
+
+  * `Engine.from_spec(spec)` — single-job training (launch/train.py,
+    examples/*);
+  * `service.ZenService.submit(spec)` — a tenant of the multi-job
+    service, including its transport quota (`quota_bytes`);
+  * `--jobs jobs.json` (launch/serve.py) — each entry is a JobSpec
+    `state_dict()`, so a service deployment is fully declarative.
+
+Declarative fields (arch name, zcfg/rcfg overrides, backend name,
+`TransportSpec`, wire dtype, seed, quota) round-trip through
+`state_dict()` / JSON. Live objects (an `ArchConfig`, a constructed
+channel or backend, `rules`, `callbacks`, exotic `backend_kw`) are
+accepted for programmatic use but make the spec unserializable —
+`state_dict()` raises with a pointed message rather than silently
+dropping them.
+
+    spec = JobSpec(name="tenant-a", arch="llama2-7b", reduced=True,
+                   zcfg={"topk_ratio": 0.05, "update_interval": 4},
+                   transport=TransportSpec("spill",
+                                           {"budget_bytes": 64 << 20}),
+                   seed=7)
+    with Engine.from_spec(spec) as eng:
+        eng.run(loader, steps)
+    JobSpec.from_state_dict(spec.state_dict()) == spec        # True
+
+`zcfg` / `rcfg` accept a full config object OR a mapping of overrides
+(applied over the dataclass defaults at construction, so a spec always
+holds the resolved config and compares by value). `wire_dtype` is a
+convenience override applied on top of whatever `zcfg` says —
+jobs.json can flip a tenant to int8 wire without restating the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.runtime.zen_runtime import RuntimeConfig
+from repro.transport.spec import TransportSpec, _check_jsonable
+
+
+def _as_pairs(value: Any, field: str) -> tuple:
+    """Normalize a mapping / pair-iterable to a sorted pair tuple so the
+    frozen spec compares and hashes by value."""
+    if value is None:
+        return ()
+    items = value.items() if isinstance(value, Mapping) else value
+    try:
+        pairs = [(str(k), v) for k, v in items]
+    except (TypeError, ValueError):
+        raise TypeError(f"JobSpec.{field} must be a mapping or an "
+                        f"iterable of (key, value) pairs, got {value!r}")
+    return tuple(sorted(pairs, key=lambda kv: kv[0]))
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """Everything needed to build (and admit) one training job."""
+
+    name: str = "job"
+    # architecture: registered config name (serializable) or a live
+    # ArchConfig; `reduced=True` applies `configs.reduced_config` with
+    # `arch_kw` overrides (otherwise arch_kw is dataclasses.replace'd in)
+    arch: Any = "llama2-7b"
+    reduced: bool = False
+    arch_kw: Any = ()
+    # optimizer / runtime configuration (object or overrides mapping)
+    zcfg: Any = None
+    rcfg: Any = None
+    wire_dtype: Optional[str] = None
+    # execution / transfer paths
+    backend: Any = "async"
+    transport: Any = None          # None | str | TransportSpec | channel
+    # data stream shape (the service builds each tenant's loader from
+    # the spec alone: data.synthetic.make_train_stream over the arch's
+    # vocab, seeded per job)
+    batch_size: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    # multi-tenant admission: cap on this job's offload-channel bytes
+    # (None = unmetered); enforced by transport.QuotaChannel
+    quota_bytes: Optional[int] = None
+    # live-object escape hatches (not serialized)
+    rules: Any = None
+    callbacks: Any = ()
+    backend_kw: Any = ()
+
+    def __post_init__(self):
+        set_ = object.__setattr__
+        set_(self, "arch_kw", _as_pairs(self.arch_kw, "arch_kw"))
+        set_(self, "backend_kw", _as_pairs(self.backend_kw, "backend_kw"))
+        set_(self, "callbacks", tuple(self.callbacks or ()))
+        if isinstance(self.zcfg, Mapping):
+            set_(self, "zcfg", ZenFlowConfig(**self.zcfg))
+        if isinstance(self.rcfg, Mapping):
+            set_(self, "rcfg", RuntimeConfig(**self.rcfg))
+        if isinstance(self.transport, Mapping):
+            set_(self, "transport",
+                 TransportSpec.from_state_dict(self.transport))
+
+    # -- resolution ------------------------------------------------------
+    def resolve_arch(self):
+        """The concrete ArchConfig this job trains."""
+        from repro.configs import get_config, reduced_config
+        cfg = get_config(self.arch) if isinstance(self.arch, str) \
+            else self.arch
+        kw = dict(self.arch_kw)
+        if self.reduced:
+            return reduced_config(cfg, **kw)
+        return dataclasses.replace(cfg, **kw) if kw else cfg
+
+    def resolve_zcfg(self) -> ZenFlowConfig:
+        zcfg = self.zcfg if self.zcfg is not None else ZenFlowConfig()
+        if self.wire_dtype is not None and \
+                zcfg.wire_dtype != self.wire_dtype:
+            zcfg = dataclasses.replace(zcfg, wire_dtype=self.wire_dtype)
+        return zcfg
+
+    def replace(self, **kw) -> "JobSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- serialization ---------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-ready dict (jobs.json entry). Raises TypeError when the
+        spec carries live objects that cannot round-trip."""
+        def refuse(field, value, hint):
+            raise TypeError(
+                f"JobSpec.{field} = {value!r} is not serializable — {hint}")
+        if not isinstance(self.arch, str):
+            refuse("arch", self.arch,
+                   "use a registered config name (repro.configs)")
+        if not isinstance(self.backend, str):
+            refuse("backend", self.backend, "use a registry name")
+        if self.rules is not None:
+            refuse("rules", self.rules,
+                   "mesh rules are process-local; rebuild them on load")
+        if self.callbacks:
+            refuse("callbacks", self.callbacks,
+                   "attach callbacks at build time (from_spec/submit)")
+        if self.transport is not None and \
+                not isinstance(self.transport, (str, TransportSpec)):
+            refuse("transport", self.transport,
+                   "describe the channel with a TransportSpec")
+        zcfg = self.zcfg
+        if zcfg is not None:
+            if callable(zcfg.lr):
+                refuse("zcfg.lr", zcfg.lr,
+                       "serialize the schedule's parameters, not the "
+                       "callable")
+            zcfg = dataclasses.asdict(zcfg)
+        transport = self.transport
+        if isinstance(transport, TransportSpec):
+            transport = transport.state_dict()
+        for k, v in self.arch_kw:
+            _check_jsonable(f"arch_kw.{k}", v)
+        for k, v in self.backend_kw:
+            _check_jsonable(f"backend_kw.{k}", v)
+        return {
+            "name": self.name,
+            "arch": self.arch,
+            "reduced": self.reduced,
+            "arch_kw": dict(self.arch_kw),
+            "zcfg": zcfg,
+            "rcfg": None if self.rcfg is None
+            else dataclasses.asdict(self.rcfg),
+            "wire_dtype": self.wire_dtype,
+            "backend": self.backend,
+            "transport": transport,
+            "batch_size": self.batch_size,
+            "seq_len": self.seq_len,
+            "seed": self.seed,
+            "quota_bytes": self.quota_bytes,
+            "backend_kw": dict(self.backend_kw),
+        }
+
+    @classmethod
+    def from_state_dict(cls, sd: Mapping) -> "JobSpec":
+        sd = dict(sd)
+        sd.pop("rules", None)
+        sd.pop("callbacks", None)
+        return cls(**sd)
+
+    def to_json(self) -> str:
+        import json
+        return json.dumps(self.state_dict())
+
+    @classmethod
+    def from_json(cls, text: str) -> "JobSpec":
+        import json
+        return cls.from_state_dict(json.loads(text))

@@ -1,12 +1,25 @@
-"""Batched decode serving loop: continuous batching over a request queue
-with prefill + incremental decode on a shared KV cache.
+"""Serving entrypoint: decode serving (default) or the multi-tenant
+fine-tuning service (`--jobs`).
+
+Decode mode — continuous batching over a request queue with prefill +
+incremental decode on a shared KV cache:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
         --requests 8 --prompt-len 16 --gen-len 24
+
+Service mode — multiplex N concurrent fine-tuning jobs over one shared
+mesh (`repro.service.ZenService`):
+
+    PYTHONPATH=src python -m repro.launch.serve --jobs jobs.json --steps 32
+
+`jobs.json` is either a JSON array of `JobSpec.state_dict()` entries, or
+an object `{"service": {...ServiceConfig kwargs...}, "jobs": [...]}`.
+Each job entry may carry a non-spec `"steps"` key overriding --steps.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from dataclasses import dataclass, field
 
@@ -106,6 +119,48 @@ def _splice(c, c1, slot):
     return c
 
 
+def serve_jobs(path: str, default_steps: int = 32) -> dict:
+    """Run the multi-tenant fine-tuning service over a jobs file.
+
+    Submits every job, trains them concurrently, and reports per-job
+    results plus the service-wide transport/scheduler stats."""
+    from repro.engine import JobSpec
+    from repro.service import ServiceConfig, ZenService
+
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, list):
+        svc_kw, entries = {}, doc
+    else:
+        svc_kw, entries = dict(doc.get("service", {})), doc.get("jobs", [])
+    if not entries:
+        raise SystemExit(f"[serve] no jobs in {path}")
+
+    results = {}
+    t0 = time.time()
+    with ZenService(ServiceConfig(**svc_kw)) as svc:
+        pending = []
+        for entry in entries:
+            entry = dict(entry)
+            steps = int(entry.pop("steps", default_steps))
+            handle = svc.submit(JobSpec.from_state_dict(entry))
+            pending.append((handle, handle.train(steps)))
+        for handle, fut in pending:
+            res = fut.get()
+            results[handle.name] = res
+            print(f"[serve] job {handle.name}: {res['steps']} steps, "
+                  f"final loss {res['losses'][-1]:.4f}, "
+                  f"steady syncs {res['steady_syncs']}")
+        svc.drain()
+        stats = svc.stats()
+    dt = time.time() - t0
+    total_steps = sum(r["steps"] for r in results.values())
+    print(f"[serve] {len(results)} jobs, {total_steps} total steps in "
+          f"{dt:.1f}s ({total_steps / max(dt, 1e-9):.2f} steps/s aggregate)")
+    return {"jobs": results, "elapsed_s": dt, "total_steps": total_steps,
+            "service": stats}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
@@ -116,7 +171,16 @@ def main() -> None:
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--jobs", default="",
+                    help="path to a jobs JSON file; switches from decode "
+                         "serving to the multi-tenant fine-tuning service")
+    ap.add_argument("--steps", type=int, default=32,
+                    help="default train steps per job in --jobs mode")
     args = ap.parse_args()
+
+    if args.jobs:
+        serve_jobs(args.jobs, args.steps)
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

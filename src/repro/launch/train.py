@@ -10,9 +10,11 @@ latest checkpoint in --ckpt-dir. --backend selects the execution mode
 ("async" two-program pipeline by default, "sync" functional spec, "fused"
 lowering-checked pinned-host mode, "baseline" dense AdamW — the
 "ZeRO-Offload semantics" reference); --baseline adamw is kept as an alias
-for --backend baseline. --transport selects the offload channel
-("host" | "spill" | "striped", repro/transport/). All modes share the one
-Engine loop.
+for --backend baseline. --transport selects the offload channel and
+parses the `name[:key=value,...]` form into a `TransportSpec` (e.g.
+`--transport spill:budget_bytes=67108864`). The driver builds ONE
+`JobSpec` — the same object `repro.service`'s `submit()` takes — and
+runs it through `Engine.from_spec`.
 """
 from __future__ import annotations
 
@@ -22,45 +24,50 @@ import json
 import jax
 
 from repro.checkpoint import CheckpointManager
-from repro.configs import get_config, reduced_config
-from repro.core.zen_optimizer import ZenFlowConfig
 from repro.data import make_train_stream
-from repro.engine import (CheckpointCallback, Engine, StragglerWatchdog,
-                          TelemetryCallback)
+from repro.engine import (CheckpointCallback, Engine, JobSpec,
+                          StragglerWatchdog, TelemetryCallback)
 from repro.optim import cosine_with_warmup
+from repro.transport import TransportSpec
+
+
+def job_spec(args) -> JobSpec:
+    """The driver's single construction point: CLI args -> JobSpec."""
+    backend = "baseline" if args.baseline else args.backend
+    lr = cosine_with_warmup(args.lr, args.steps) if args.cosine else args.lr
+    return JobSpec(
+        name=f"train-{args.arch}",
+        arch=args.arch, reduced=args.reduced,
+        zcfg=dict(topk_ratio=args.topk, update_interval=args.interval,
+                  refresh_interval=args.interval * 4,
+                  warmup_steps=args.warmup, lr=lr,
+                  weight_decay=args.weight_decay, use_kernels="never",
+                  auto_tune=args.auto_tune),
+        wire_dtype=args.wire_dtype,
+        backend=backend,
+        transport=TransportSpec.parse(args.transport),
+        batch_size=args.batch, seq_len=args.seq, seed=args.seed)
 
 
 def train(args) -> dict:
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced_config(cfg)
-    backend = "baseline" if args.baseline else args.backend
-    zcfg = ZenFlowConfig(
-        topk_ratio=args.topk, update_interval=args.interval,
-        refresh_interval=args.interval * 4,
-        warmup_steps=args.warmup,
-        lr=cosine_with_warmup(args.lr, args.steps) if args.cosine else args.lr,
-        weight_decay=args.weight_decay, use_kernels="never",
-        auto_tune=args.auto_tune, wire_dtype=args.wire_dtype)
-
-    loader = make_train_stream(cfg.vocab, args.seq, args.batch,
-                               seed=args.seed)
-    callbacks = [TelemetryCallback(every=args.log_every, prefix=backend),
+    spec = job_spec(args)
+    cfg = spec.resolve_arch()
+    loader = make_train_stream(cfg.vocab, spec.seq_len, spec.batch_size,
+                               seed=spec.seed)
+    callbacks = [TelemetryCallback(every=args.log_every, prefix=spec.backend),
                  StragglerWatchdog()]
     ckpt = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
     if ckpt:
         callbacks.append(CheckpointCallback(ckpt, every=args.ckpt_every,
                                             loader=loader))
 
-    eng = Engine.from_config(cfg, zcfg, backend=backend, callbacks=callbacks,
-                             transport=args.transport or None)
-    eng.init(jax.random.PRNGKey(args.seed))
-    if ckpt:
-        start = eng.restore_latest(ckpt, loader)
-        if start:
-            print(f"[train] resumed from step {start}")
-    res = eng.run(loader, args.steps)
-    eng.close()
+    with Engine.from_spec(spec, callbacks=callbacks) as eng:
+        eng.init(jax.random.PRNGKey(spec.seed))
+        if ckpt:
+            start = eng.restore_latest(ckpt, loader)
+            if start:
+                print(f"[train] resumed from step {start}")
+        res = eng.run(loader, args.steps)
     return res
 
 
@@ -86,15 +93,16 @@ def main() -> None:
     ap.add_argument("--backend", default="async",
                     choices=["sync", "async", "spmd", "fused", "baseline"])
     ap.add_argument("--transport", default="",
-                    choices=["", "host", "spill", "striped", "adaptive"],
                     help="offload channel every device<->host byte moves "
-                         "through (repro.transport registry; default "
+                         "through, as `name[:key=value,...]` parsed into "
+                         "a TransportSpec (repro.transport registry; "
                          "\"host\" = the stock DRAM tier, \"spill\" adds "
-                         "a bounded-budget simulated-NVMe file tier, "
-                         "\"striped\" round-robins multi-path stripes, "
-                         "\"adaptive\" measures per-path bandwidth and "
-                         "retunes stripe weights / spill budgets / the "
-                         "wire dtype at window boundaries)")
+                         "a bounded-budget simulated-NVMe file tier "
+                         "(e.g. spill:budget_bytes=67108864), \"striped\" "
+                         "round-robins multi-path stripes, \"adaptive\" "
+                         "measures per-path bandwidth and retunes stripe "
+                         "weights / spill budgets / the wire dtype at "
+                         "window boundaries)")
     ap.add_argument("--baseline", default="", choices=["", "adamw"],
                     help="deprecated alias for --backend baseline")
     ap.add_argument("--ckpt-dir", default="")

@@ -135,6 +135,7 @@ import numpy as np
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.distributed.sharding import MeshRules
 from repro.distributed import zen_spmd
+from repro.telemetry import jobs as jobscope
 from repro.telemetry import syncwatch
 from repro.transport import coalesce
 from repro.transport.pool import BufferPool
@@ -189,34 +190,76 @@ class _Future:
 
 
 class _HostWorker:
-    """Background thread that owns the host-side ZenFlow state.
+    """Host-side state owner: a per-runtime FIFO of state transitions.
 
     Every host operation is a queued transition `state -> (state, output)`;
     the queue order serializes accumulates and applies exactly like the
     paper's dedicated CPU optimizer processes with shared-memory buffers.
+
+    Two execution modes, same FIFO/state-ownership contract:
+
+      * private thread (default) — one daemon thread per runtime drains
+        the queue, exactly the pre-ISSUE-9 behavior;
+      * `executor` — no thread is spawned; the worker registers with a
+        shared scheduler (`repro.service.FairHostScheduler`) whose
+        threads call `run_one()` to process ONE queued item at a time.
+        The scheduler's busy-flagging guarantees a single consumer per
+        worker at any moment, so state ownership stays single-threaded
+        and the queue order is preserved — it only interleaves *between*
+        workers (fair host-apply scheduling across tenant jobs).
+
+    The worker captures the `telemetry.jobs` scope active at
+    construction and re-enters it around every item, so host-side work
+    (spill restores, forced reads) attributes to the owning job no
+    matter which thread runs it.
     """
 
-    def __init__(self, state):
+    def __init__(self, state, executor=None):
         self._state = state
         self._q: queue.Queue = queue.Queue()
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self._thread.start()
+        self._job = jobscope.current()
+        self._executor = executor
+        if executor is None:
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+        else:
+            self._thread = None
+            executor.register(self)
 
     def _run(self):
         while True:
             item = self._q.get()
             if item is None:
                 return
-            fn, fut = item
+            self._process(item)
+
+    def _process(self, item):
+        fn, fut = item
+        with jobscope.scope(self._job):
             try:
                 self._state, fut.value = fn(self._state)
             except BaseException as e:
                 fut.error = e
-            fut.event.set()
+        fut.event.set()
+
+    def run_one(self) -> bool:
+        """Executor mode: process one queued item if any (returns whether
+        one was processed). Caller must guarantee exclusivity."""
+        try:
+            item = self._q.get_nowait()
+        except queue.Empty:
+            return False
+        self._process(item)
+        return True
+
+    def pending(self) -> bool:
+        return not self._q.empty()
 
     def submit(self, fn: Callable) -> _Future:
         fut = _Future()
         self._q.put((fn, fut))
+        if self._executor is not None:
+            self._executor.notify()
         return fut
 
     def snapshot(self):
@@ -226,8 +269,30 @@ class _HostWorker:
         self.submit(lambda _: (state, None)).get()
 
     def stop(self):
+        if self._executor is not None:
+            # drains any queued transitions, then leaves the rotation
+            self._executor.unregister(self)
+            return
         self._q.put(None)
         self._thread.join(timeout=5)
+
+
+# serializes shared-program-cache lookups/builds across tenant threads
+# (see `_build_programs`); a global lock is fine — only the service
+# injects a cache, and the guarded section is one trace per shape
+_PROGRAM_CACHE_LOCK = threading.Lock()
+
+
+class _SpecCell:
+    """Trace-time mailbox for the host_bound payload's PackSpec: the
+    coalesced device programs write `.spec` when traced. Shared across
+    every runtime that shares those programs (the service's program
+    cache), so whichever runtime traced first publishes the layout for
+    all of them — `step()` snapshots it per payload either way."""
+    __slots__ = ("spec",)
+
+    def __init__(self):
+        self.spec = None
 
 
 class ZenFlowRuntime:
@@ -241,21 +306,30 @@ class ZenFlowRuntime:
                  rcfg: Optional[RuntimeConfig] = None,
                  segs: Optional[dict] = None,
                  place_sharded: Optional[bool] = None,
-                 transport=None):
+                 transport=None,
+                 host_executor=None,
+                 program_cache: Optional[dict] = None):
         self.model = model
         self.zcfg = zcfg
         self.rules = rules
         self.rcfg = rcfg = RuntimeConfig() if rcfg is None else rcfg
         # every device<->host byte moves through ONE transport channel
-        # (registry name or OffloadChannel instance; module docstring).
-        # A channel instance keeps its own staging config —
-        # rcfg.stage_host_bound only parameterizes registry-built ones
-        if transport is None or isinstance(transport, str):
-            from repro.transport import make_transport
-            transport = make_transport(
-                transport or "host", zcfg,
-                stage_payloads=rcfg.stage_host_bound)
-        self.channel = transport
+        # (registry name, TransportSpec, or OffloadChannel instance;
+        # module docstring). A channel instance keeps its own staging
+        # config — rcfg.stage_host_bound only parameterizes
+        # registry/spec-built ones
+        from repro.transport import resolve as _resolve_transport
+        self.channel = _resolve_transport(
+            transport, zcfg, stage_payloads=rcfg.stage_host_bound)
+        # multi-tenant hooks (repro.service): `host_executor` replaces
+        # the private host-worker thread with a shared fair scheduler;
+        # `program_cache` shares the traced/jitted programs across
+        # runtimes whose (model, rules, zcfg, ...) key matches — the
+        # dominant per-job cost on a shared mesh is re-tracing identical
+        # programs, not running them. Caller-pinned segmentations opt
+        # out (the key cannot see inside a custom segs dict).
+        self._host_executor = host_executor
+        self._program_cache = program_cache if segs is None else None
         # segmentation + partition are wire-independent: resolve them
         # once here; the traced programs themselves are (re)built by
         # _build_programs so a mid-run wire escalation can rebind them
@@ -293,9 +367,10 @@ class ZenFlowRuntime:
                     "per-leaf so each shard's bytes cross its own link); "
                     "running with coalesce_effective=False",
                     RuntimeWarning, stacklevel=2)
-        self._hb_spec = None     # latest host_bound PackSpec (trace-time
-        #   cell; step() snapshots it per payload before handing it to
-        #   the worker, so a wire rebind mid-run can never cross specs)
+        self._hb_cell = _SpecCell()   # latest host_bound PackSpec
+        #   (trace-time cell, shared on a program-cache hit; step()
+        #   snapshots it per payload before handing it to the worker, so
+        #   a wire rebind mid-run can never cross specs)
         self._pending_spec = coalesce.plan(
             zen_spmd.pending_specs(segs, model.param_specs())) \
             if self._coalesce else None
@@ -321,6 +396,23 @@ class ZenFlowRuntime:
         self._window_t0 = time.perf_counter()   # boundary-hook timing
         self.stall_log: list[float] = []
         self.window_extensions = 0
+        self._closed = False
+
+    @property
+    def _hb_spec(self):
+        return self._hb_cell.spec
+
+    def _program_key(self) -> tuple:
+        """Program-cache key: everything the traced programs close over.
+        Model/rules by identity (the service shares the instances);
+        zcfg by value (callable lr by identity); plus the donate /
+        coalesce / codec-feedback switches."""
+        zkey = tuple(
+            (f.name, id(v) if callable(v) else v)
+            for f in dataclasses.fields(self.zcfg)
+            for v in (getattr(self.zcfg, f.name),))
+        return (id(self.model), id(self.rules), zkey, self.rcfg.donate,
+                self._coalesce, bool(self.channel.error_feedback))
 
     def _build_programs(self) -> None:
         """(Re)build the jitted device/host programs from the CURRENT
@@ -329,7 +421,47 @@ class ZenFlowRuntime:
         the wire dtype mid-run — the jit cache keys on the new function
         objects, so the old programs (and any in-flight staged payloads
         in their old layout) are never silently reused with the new
-        codec."""
+        codec.
+
+        With a service-injected `program_cache`, runtimes whose
+        `_program_key` matches share ONE set of jitted programs (and the
+        PackSpec cell they write at trace time) — the N-th same-shape
+        tenant job pays zero trace/compile cost. The lookup+build is
+        serialized under a lock: N tenants submitted together all reach
+        their first build at once, and a simultaneous miss must trace
+        ONCE with N-1 adopters, not N times (the whole point of the
+        cache is paying trace/compile once per shape)."""
+        cache = self._program_cache
+        if cache is None:
+            self._build_programs_fresh()
+            return
+        with _PROGRAM_CACHE_LOCK:
+            key = self._program_key()
+            entry = cache.get(key)
+            if entry is not None:
+                self._hb_cell = entry["hb_cell"]
+                self.device_step = entry["device_step"]
+                self.device_step_steady = entry["device_step_steady"]
+                self._land = entry["land"]
+                self.host_accumulate = entry["host_accumulate"]
+                self.host_apply = entry["host_apply"]
+                return
+            self._build_programs_fresh()
+            cache[key] = {
+                "hb_cell": self._hb_cell,
+                "device_step": self.device_step,
+                "device_step_steady": self.device_step_steady,
+                "land": self._land,
+                "host_accumulate": self.host_accumulate,
+                "host_apply": self.host_apply,
+            }
+
+    def _build_programs_fresh(self) -> None:
+        # a real (re)build traces fresh programs: give them a fresh
+        # PackSpec cell so a wire rebind never overwrites a cell still
+        # shared with other runtimes' cached programs (in-flight payloads
+        # carry their own snapshotted spec regardless)
+        self._hb_cell = _SpecCell()
         zcfg, rcfg = self.zcfg, self.rcfg
         step_fn, _, _ = zen_spmd.make_device_step(
             self.model, zcfg, self.rules, segs=self.segs,
@@ -342,20 +474,22 @@ class ZenFlowRuntime:
         if self._coalesce:
             pend_spec = self._pending_spec
             base_step, base_steady, base_land = step_fn, steady_fn, land_fn
-            cell = self  # PackSpec cell written at trace time (static)
+            cell = self._hb_cell  # PackSpec written at trace time (static);
+            #   deliberately NOT `self` so cached programs never pin a
+            #   runtime instance
 
             def step_fn(params, dstate, packed_pending, batch):
                 pending = coalesce.unpack_tree(
                     packed_pending[coalesce.PACKED_KEY], pend_spec)
                 params, dstate, hb, metrics = base_step(
                     params, dstate, pending, batch)
-                packed_hb, cell._hb_spec = coalesce.pack_tree(hb)
+                packed_hb, cell.spec = coalesce.pack_tree(hb)
                 return params, dstate, packed_hb, metrics
 
             def steady_fn(params, dstate, batch):
                 params, dstate, hb, metrics = base_steady(
                     params, dstate, batch)
-                packed_hb, cell._hb_spec = coalesce.pack_tree(hb)
+                packed_hb, cell.spec = coalesce.pack_tree(hb)
                 return params, dstate, packed_hb, metrics
 
             def land_fn(params, packed_pending):
@@ -415,7 +549,7 @@ class ZenFlowRuntime:
             self.params = jax.device_put(self.params, self.placements.params)
             self.dstate = jax.device_put(self.dstate, self.placements.dstate)
             host_state = jax.device_put(host_state, self.placements.host)
-        self.worker = _HostWorker(host_state)
+        self.worker = _HostWorker(host_state, executor=self._host_executor)
         self.pending = None
         self._t = 0
         self._window_t0 = time.perf_counter()
@@ -738,7 +872,8 @@ class ZenFlowRuntime:
         self._s_eff = int(sd.get("s_eff", self.zcfg.update_interval))
         self.window_extensions = int(sd.get("window_extensions", 0))
         if self.worker is None:
-            self.worker = _HostWorker(host_state)
+            self.worker = _HostWorker(host_state,
+                                      executor=self._host_executor)
         else:
             self.worker.set_state(host_state)
         # drop any in-flight apply from the pre-restore run: its rows were
@@ -749,6 +884,13 @@ class ZenFlowRuntime:
         return self
 
     def close(self):
+        """Idempotent teardown: stop the worker, settle the transport,
+        drain the pools. A second close — or one after a failed init —
+        is a no-op (a drained channel must not be drained again: spill
+        tiers release their file backing on the first drain)."""
+        if self._closed:
+            return
+        self._closed = True
         if self.worker is not None:
             self.worker.stop()
         # hand held upload buffers back before draining (see flush())

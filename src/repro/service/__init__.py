@@ -1,0 +1,17 @@
+"""Multi-tenant fine-tuning service: many concurrent jobs, one shared
+mesh (ISSUE 9). See `repro.service.service` for the full story.
+
+    from repro.engine import JobSpec
+    from repro.service import ServiceConfig, ZenService
+
+    with ZenService(ServiceConfig(max_jobs=4)) as svc:
+        h = svc.submit(JobSpec(name="tenant-a", arch="llama2-7b",
+                               reduced=True, quota_bytes=64 << 20))
+        print(h.train(32).get()["losses"][-1])
+"""
+from repro.service.scheduler import FairHostScheduler
+from repro.service.service import (AdmissionError, JobFuture, JobHandle,
+                                   ServiceConfig, ZenService)
+
+__all__ = ["AdmissionError", "FairHostScheduler", "JobFuture", "JobHandle",
+           "ServiceConfig", "ZenService"]

@@ -1,0 +1,124 @@
+"""`FairHostScheduler`: round-robin execution of many jobs' host-side
+work on a shared thread pool (ISSUE 9).
+
+Each `ZenFlowRuntime` owns a `_HostWorker` — a FIFO of host-state
+transitions (accumulates, applies). Stand-alone runtimes give the
+worker a private thread; under the multi-tenant service N jobs on one
+machine would mean N threads contending unpredictably, letting one
+job's long apply starve another's window boundary into repeated
+extensions. This scheduler replaces the private threads with a fixed
+pool that drains all registered workers ONE task at a time, round-robin:
+
+  * fairness — after worker i runs one task, every other worker with
+    queued work runs before i runs again, so per-job host-apply latency
+    is bounded by (jobs x max task time) regardless of how chatty a
+    tenant's queue is (bench_service gates max/min per-job throughput);
+  * state ownership — a worker is marked busy while one of its tasks
+    runs and is never picked twice concurrently, so the runtime's
+    single-consumer FIFO contract (host state owned by exactly one
+    thread at a time) is preserved; order *within* a worker is the
+    queue order, exactly as with a private thread;
+  * attribution — the worker re-enters its job's `telemetry.jobs`
+    scope around every task (see `_HostWorker._process`), so spill
+    restores and forced reads land in the right tenant's counters no
+    matter which pool thread ran them.
+
+`unregister` removes the worker from the rotation, waits out any
+in-flight task, then drains its remaining queue inline on the calling
+thread — shutdown never drops a queued accumulate (the runtime's
+no-apply-ever-dropped contract extends to teardown).
+"""
+from __future__ import annotations
+
+import threading
+
+
+class FairHostScheduler:
+    """Round-robin, one-task-per-turn executor for `_HostWorker`s."""
+
+    def __init__(self, threads: int = 1, name: str = "zenservice"):
+        self._cv = threading.Condition()
+        self._workers: list = []         # rotation order
+        self._busy: set = set()          # ids of workers mid-task
+        self._next = 0                   # rotation cursor
+        self._stopped = False
+        self._threads = [
+            threading.Thread(target=self._run, daemon=True,
+                             name=f"{name}-host-{i}")
+            for i in range(max(1, threads))]
+        for t in self._threads:
+            t.start()
+
+    # -- worker-facing API ----------------------------------------------
+    def register(self, worker) -> None:
+        with self._cv:
+            if self._stopped:
+                raise RuntimeError("FairHostScheduler is shut down")
+            self._workers.append(worker)
+            self._cv.notify_all()
+
+    def notify(self) -> None:
+        """A registered worker enqueued a task."""
+        with self._cv:
+            self._cv.notify_all()
+
+    def unregister(self, worker) -> None:
+        """Remove `worker` from the rotation and drain its queue inline
+        (blocks until any in-flight task of this worker finished)."""
+        with self._cv:
+            if worker in self._workers:
+                self._workers.remove(worker)
+            while id(worker) in self._busy:
+                self._cv.wait(timeout=0.1)
+        # out of the rotation and not busy: this thread is now the
+        # worker's only consumer
+        while worker.run_one():
+            pass
+
+    # -- pool -----------------------------------------------------------
+    def _pick(self):
+        """Next worker (round-robin) with queued work and no task in
+        flight; None if nothing is runnable. Caller holds the lock."""
+        n = len(self._workers)
+        for off in range(n):
+            i = (self._next + off) % n
+            w = self._workers[i]
+            if id(w) not in self._busy and w.pending():
+                self._next = (i + 1) % n
+                return w
+        return None
+
+    def _run(self):
+        while True:
+            with self._cv:
+                w = None
+                while not self._stopped:
+                    w = self._pick()
+                    if w is not None:
+                        break
+                    self._cv.wait()
+                if self._stopped:
+                    return
+                self._busy.add(id(w))
+            try:
+                w.run_one()
+            finally:
+                with self._cv:
+                    self._busy.discard(id(w))
+                    self._cv.notify_all()
+
+    def shutdown(self) -> None:
+        """Stop the pool threads. Workers still registered keep their
+        queues; `unregister` drains them inline afterwards."""
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+        for t in self._threads:
+            t.join(timeout=5)
+
+    def stats(self) -> dict:
+        with self._cv:
+            return {"workers": len(self._workers),
+                    "busy": len(self._busy),
+                    "threads": len(self._threads),
+                    "stopped": self._stopped}

@@ -1,0 +1,423 @@
+"""`ZenService`: a long-lived multi-tenant fine-tuning service — many
+concurrent jobs multiplexed over one shared device mesh (ISSUE 9).
+
+ZenFlow makes ONE training run stall-free; a fine-tuning service runs
+MANY. Spinning up a fresh `Engine` per request pays the full
+trace/compile cost every time and lets tenants contend blindly for the
+host-offload link and the host CPU. The service makes the sharing
+explicit and governed:
+
+  * **job API** — `submit(JobSpec) -> JobHandle`; the handle owns a
+    per-job driver thread with a FIFO command queue (`train`,
+    `checkpoint`, `restore`, `close`), every command returning a
+    `JobFuture`. `drain()` barriers all jobs; `shutdown()` closes
+    everything. Service and handles are context managers.
+  * **shared programs** — jobs with the same (model, rules, zcfg, ...)
+    shape share one model instance and one set of traced/jitted
+    programs (`ZenFlowRuntime`'s `program_cache`), so the N-th tenant
+    pays ~zero compile cost. This is where the aggregate speedup over
+    serial fresh engines comes from (benchmarks/bench_service.py).
+  * **per-job transport quotas** — each job's channel is wrapped in a
+    `transport.QuotaChannel` charging a shared `QuotaLedger`; admission
+    control checks aggregate reservations against
+    `ServiceConfig.total_quota_bytes` up front (typed
+    `AdmissionError`), the channel enforces the per-job budget at
+    transfer time (typed `transport.QuotaExceededError`), and every
+    byte attributes to its tenant (`trafficwatch.counts()["by_job"]`
+    sums exactly to the channel totals).
+  * **fair host scheduling** — all jobs' host applies run on one
+    `FairHostScheduler` pool, round-robin one task per turn, so the
+    zero-sync steady-state contract holds *per tenant, concurrently*
+    (`syncwatch.counts()["by_job"]` — gated in tests/test_service.py
+    and bench_service).
+
+    with ZenService(ServiceConfig(max_jobs=4)) as svc:
+        a = svc.submit(JobSpec(name="a", arch="llama2-7b", reduced=True,
+                               seed=0))
+        b = svc.submit(JobSpec(name="b", arch="llama2-7b", reduced=True,
+                               seed=1))
+        ra, rb = a.train(32), b.train(32)      # run concurrently
+        print(ra.get()["losses"][-1], rb.get()["losses"][-1])
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# imported eagerly: job driver THREADS resolve arch configs and build
+# loaders, and a first-touch package import from two threads at once can
+# observe a partially-populated registry (Python puts a module in
+# sys.modules before its body finished running)
+import repro.configs               # noqa: F401  (arch registry)
+from repro.data import make_train_stream
+from repro.engine import Engine, JobSpec, default_rules
+from repro.models import build_model
+from repro.service.scheduler import FairHostScheduler
+from repro.telemetry import jobs as jobscope
+from repro.telemetry import syncwatch
+from repro.transport import QuotaChannel, QuotaLedger
+from repro.transport import resolve as resolve_transport
+
+
+class AdmissionError(RuntimeError):
+    """`submit()` rejected the job (capacity, aggregate quota, duplicate
+    name, or shutdown) — typed so callers can distinguish a full service
+    from a failed job."""
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    # admission: max concurrently-active jobs; further submits raise
+    # AdmissionError (queue_jobs=False) or block for a slot
+    max_jobs: int = 4
+    queue_jobs: bool = False
+    # aggregate transport budget: when set, every job must declare
+    # quota_bytes and the sum of open reservations may not exceed it
+    total_quota_bytes: Optional[int] = None
+    # FairHostScheduler pool size for all jobs' host applies
+    scheduler_threads: int = 1
+    # share traced/jitted programs + model instances across same-shape
+    # jobs (the aggregate-throughput win; disable for strict isolation)
+    share_programs: bool = True
+
+
+class JobFuture:
+    """Result of one queued job command (thread-safe, single-shot)."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def _finish(self, value=None, error=None):
+        self._value, self._error = value, error
+        self._event.set()
+
+    def ready(self) -> bool:
+        return self._event.is_set()
+
+    def get(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("job command still pending")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class JobHandle:
+    """One tenant job: a driver thread executing FIFO commands under the
+    job's `telemetry.jobs` scope. Created by `ZenService.submit` only."""
+
+    def __init__(self, spec: JobSpec, service: "ZenService",
+                 callbacks: Sequence = ()):
+        self.spec = spec
+        self.name = spec.name
+        self.state = "building"       # building|running|failed|closed
+        self.error: Optional[BaseException] = None
+        self._service = service
+        self._callbacks = tuple(callbacks)
+        self._engine: Optional[Engine] = None
+        self._loader = None
+        self._cmd: queue.Queue = queue.Queue()
+        self._ready = threading.Event()
+        self._close_fut: Optional[JobFuture] = None
+        self._close_lock = threading.Lock()
+        self._thread = threading.Thread(
+            target=self._drive, daemon=True, name=f"zenjob-{spec.name}")
+
+    def _start(self):
+        self._thread.start()
+        return self
+
+    # -- public API ------------------------------------------------------
+    def wait_ready(self, timeout: Optional[float] = None) -> "JobHandle":
+        """Block until the engine is built (or the build failed)."""
+        self._ready.wait(timeout)
+        if self.error is not None:
+            raise self.error
+        return self
+
+    def train(self, steps: int) -> JobFuture:
+        """Queue `steps` training steps; the future resolves to
+        {"losses", "steps", "steady_steps", "steady_syncs"}. Does NOT
+        flush — the pipeline stays hot across train calls (flushing is
+        `checkpoint()`'s job)."""
+        return self._enqueue("train", int(steps))
+
+    def checkpoint(self) -> JobFuture:
+        """Queue a flush + `state_dict()` snapshot."""
+        return self._enqueue("checkpoint", None)
+
+    def restore(self, sd: dict) -> JobFuture:
+        """Queue a `load_state_dict(sd)`."""
+        return self._enqueue("restore", sd)
+
+    def barrier(self) -> JobFuture:
+        """Future that resolves once every previously queued command
+        finished (never fails — resolves to the job state)."""
+        return self._enqueue("barrier", None)
+
+    def close(self, wait: bool = True) -> JobFuture:
+        """Queue teardown (idempotent; the job slot frees on completion)."""
+        with self._close_lock:
+            if self._close_fut is None:
+                self._close_fut = JobFuture()
+                self._cmd.put(("close", None, self._close_fut))
+        if wait:
+            self._close_fut.get()
+            self._thread.join(timeout=10)
+        return self._close_fut
+
+    @property
+    def closed(self) -> bool:
+        return self.state == "closed"
+
+    def __enter__(self) -> "JobHandle":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
+
+    # -- driver thread ---------------------------------------------------
+    def _enqueue(self, cmd: str, arg) -> JobFuture:
+        fut = JobFuture()
+        if self.closed:
+            fut._finish(error=RuntimeError(
+                f"job {self.name!r} is closed"))
+            return fut
+        self._cmd.put((cmd, arg, fut))
+        return fut
+
+    def _drive(self):
+        with jobscope.scope(self.name):
+            try:
+                self._build()
+                self.state = "running"
+            except BaseException as e:
+                self.error = e
+                self.state = "failed"
+            finally:
+                self._ready.set()
+            while True:
+                cmd, arg, fut = self._cmd.get()
+                if cmd == "close":
+                    try:
+                        self._teardown()
+                        fut._finish(value=None)
+                    except BaseException as e:
+                        fut._finish(error=e)
+                    return
+                if cmd == "barrier":
+                    fut._finish(value=self.state)
+                    continue
+                if self.error is not None:
+                    fut._finish(error=self.error)
+                    continue
+                try:
+                    fut._finish(value=self._execute(cmd, arg))
+                except BaseException as e:
+                    # a failed transfer (e.g. QuotaExceededError) leaves
+                    # the pipeline undefined: fail the job, keep close()
+                    # working
+                    self.error = e
+                    self.state = "failed"
+                    fut._finish(error=e)
+
+    def _build(self):
+        spec, svc = self.spec, self._service
+        cfg = spec.resolve_arch()
+        zcfg = spec.resolve_zcfg()
+        model = svc._model_for(spec, cfg)
+        rcfg = spec.rcfg
+        inner = resolve_transport(
+            spec.transport, zcfg,
+            stage_payloads=rcfg.stage_host_bound if rcfg else True)
+        channel = QuotaChannel(inner, job=self.name, ledger=svc.ledger,
+                               quota_bytes=spec.quota_bytes)
+        extra = {}
+        if isinstance(spec.backend, str) and \
+                spec.backend in ("async", "spmd"):
+            extra["host_executor"] = svc.scheduler
+            if svc.config.share_programs:
+                extra["program_cache"] = svc._program_cache
+        self._engine = Engine.from_spec(
+            spec, model=model, rules=svc.rules,
+            callbacks=self._callbacks, transport=channel, **extra)
+        self._engine.init(jax.random.PRNGKey(spec.seed))
+        self._loader = make_train_stream(cfg.vocab, spec.seq_len,
+                                         spec.batch_size, seed=spec.seed)
+
+    def _execute(self, cmd: str, arg):
+        if cmd == "train":
+            return self._cmd_train(arg)
+        if cmd == "checkpoint":
+            self._engine.flush()
+            # snapshot to HOST memory: state_dict returns the live
+            # device buffers, which the job's next training step donates
+            # — a caller-held snapshot must survive that (d2h reads are
+            # fine here: checkpoint is never the hot path)
+            return jax.tree.map(np.asarray, self._engine.state_dict())
+        if cmd == "restore":
+            self._engine.load_state_dict(arg)
+            return None
+        raise ValueError(f"unknown job command {cmd!r}")
+
+    def _cmd_train(self, steps: int) -> dict:
+        eng = self._engine
+        losses = []
+        steady_steps = steady_syncs = 0
+        for _ in range(steps):
+            before = syncwatch.counts()["by_job"].get(self.name, 0)
+            batch = {k: jnp.asarray(v)
+                     for k, v in self._loader.next_batch().items()}
+            m = eng.step(batch)
+            if not m.get("boundary", False):
+                # the per-tenant zero-sync contract: non-boundary steps
+                # record NO forced host syncs for this job, even with
+                # every other tenant training concurrently
+                steady_steps += 1
+                steady_syncs += \
+                    syncwatch.counts()["by_job"].get(self.name, 0) - before
+            if "loss" in m:
+                losses.append(m["loss"])
+        # materialize once, after the burst (plain block_until_ready —
+        # the arrays are long committed by the time a caller reads the
+        # future, and run()'s contract does the same)
+        losses = [float(l) for l in jax.block_until_ready(losses)]
+        return {"losses": losses, "steps": eng.step_count,
+                "steady_steps": steady_steps, "steady_syncs": steady_syncs}
+
+    def _teardown(self):
+        try:
+            if self._engine is not None:
+                self._engine.close()      # idempotent
+        finally:
+            self._service.ledger.close(self.name)
+            self.state = "closed"
+            self._service._release(self.name)
+
+
+class ZenService:
+    """The shared-mesh multi-tenant service (module docstring)."""
+
+    def __init__(self, config: Optional[ServiceConfig] = None, rules=None):
+        self.config = config or ServiceConfig()
+        self.rules = rules if rules is not None else default_rules()
+        self.scheduler = FairHostScheduler(
+            threads=self.config.scheduler_threads)
+        self.ledger = QuotaLedger(total_bytes=self.config.total_quota_bytes)
+        self._cv = threading.Condition()
+        self._handles: dict[str, JobHandle] = {}
+        self._models: dict = {}           # shape key -> shared model
+        self._program_cache: dict = {}    # ZenFlowRuntime._program_key -> ...
+        self._closed = False
+
+    # -- admission -------------------------------------------------------
+    def submit(self, spec, callbacks: Sequence = ()) -> JobHandle:
+        """Admit one job (a `JobSpec` or its `state_dict()` mapping) and
+        start building it asynchronously; returns immediately with the
+        handle. Raises typed `AdmissionError` on capacity / aggregate
+        quota / duplicate-name rejection (with
+        `ServiceConfig.queue_jobs`, capacity waits instead)."""
+        if isinstance(spec, Mapping):
+            spec = JobSpec.from_state_dict(spec)
+        with self._cv:
+            if self._closed:
+                raise AdmissionError("service is shut down")
+            if spec.name in self._handles:
+                raise AdmissionError(
+                    f"job name {spec.name!r} is already active")
+            while len(self._handles) >= self.config.max_jobs:
+                if not self.config.queue_jobs:
+                    raise AdmissionError(
+                        f"service full: {len(self._handles)}/"
+                        f"{self.config.max_jobs} job slots in use")
+                self._cv.wait()
+                if self._closed:
+                    raise AdmissionError("service is shut down")
+                if spec.name in self._handles:
+                    raise AdmissionError(
+                        f"job name {spec.name!r} is already active")
+            cap = self.config.total_quota_bytes
+            if cap is not None:
+                if spec.quota_bytes is None:
+                    raise AdmissionError(
+                        f"job {spec.name!r}: a quota-capped service "
+                        f"requires quota_bytes on every JobSpec")
+                reserved = self.ledger.reserved_bytes()
+                if reserved + spec.quota_bytes > cap:
+                    raise AdmissionError(
+                        f"job {spec.name!r}: aggregate transport quota "
+                        f"exhausted ({reserved} reserved + "
+                        f"{spec.quota_bytes} requested > {cap})")
+            # reserve at admission so concurrent submits see it; the
+            # job's QuotaChannel re-opens the same entry harmlessly
+            self.ledger.open(spec.name, spec.quota_bytes)
+            handle = JobHandle(spec, self, callbacks)
+            self._handles[spec.name] = handle
+        return handle._start()
+
+    def _release(self, name: str) -> None:
+        with self._cv:
+            self._handles.pop(name, None)
+            self._cv.notify_all()
+
+    def _model_for(self, spec: JobSpec, cfg):
+        """One shared model instance per architecture shape (id(model)
+        keys the program cache, so sharing the instance is what makes
+        cross-job program reuse possible)."""
+        if not self.config.share_programs:
+            return build_model(cfg)
+        key = (spec.arch, spec.reduced, spec.arch_kw) \
+            if isinstance(spec.arch, str) else id(spec.arch)
+        with self._cv:
+            model = self._models.get(key)
+            if model is None:
+                model = self._models[key] = build_model(cfg)
+            return model
+
+    # -- service-wide control -------------------------------------------
+    def jobs(self) -> dict:
+        with self._cv:
+            return dict(self._handles)
+
+    def drain(self) -> None:
+        """Barrier: wait until every active job finished its queued
+        commands."""
+        for h in self.jobs().values():
+            h.barrier().get()
+
+    def shutdown(self) -> None:
+        """Close every job (draining their queues), then stop the
+        shared scheduler. Idempotent."""
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._cv.notify_all()
+        for h in self.jobs().values():
+            h.close(wait=True)
+        self.scheduler.shutdown()
+
+    def stats(self) -> dict:
+        with self._cv:
+            handles = dict(self._handles)
+        return {"jobs": {n: h.state for n, h in handles.items()},
+                "ledger": self.ledger.stats(),
+                "scheduler": self.scheduler.stats(),
+                "programs_cached": len(self._program_cache),
+                "models_shared": len(self._models)}
+
+    def __enter__(self) -> "ZenService":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.shutdown()
+        return False

@@ -1,8 +1,9 @@
-from repro.telemetry import (bandwidth, costmodel, hlo_stats, metrics_drain,
-                             roofline, simulator, syncwatch, trafficwatch)
+from repro.telemetry import (bandwidth, costmodel, hlo_stats, jobs,
+                             metrics_drain, roofline, simulator, syncwatch,
+                             trafficwatch)
 from repro.telemetry.bandwidth import BandwidthProbe
 from repro.telemetry.metrics_drain import MetricsDrain
 
-__all__ = ["bandwidth", "costmodel", "hlo_stats", "metrics_drain",
+__all__ = ["bandwidth", "costmodel", "hlo_stats", "jobs", "metrics_drain",
            "roofline", "simulator", "syncwatch", "trafficwatch",
            "BandwidthProbe", "MetricsDrain"]

@@ -1,0 +1,58 @@
+"""Per-job attribution scope for the telemetry counters (ISSUE 9).
+
+The multi-tenant service (`repro.service`) multiplexes many fine-tuning
+jobs over one device mesh, so the process-global accounting in
+`telemetry.trafficwatch` (bytes) and `telemetry.syncwatch` (blocking
+host syncs) needs a third attribution axis alongside channel and tier:
+**which job** caused the event. This module is that axis — a
+thread-local *job scope* that both counters consult at record time:
+
+    with jobs.scope("tenant-a"):
+        ...                      # every record() in this thread (and
+                                 # only this thread) attributes to
+                                 # "tenant-a"
+
+Scopes are cheap, re-entrant (inner scopes shadow, restore on exit) and
+strictly thread-local: the service's per-job driver threads hold their
+job's scope for the whole training loop, the shared host-apply
+scheduler (`service.scheduler.FairHostScheduler`) re-enters the owning
+job's scope around every host task it runs, and `transport.quota.
+QuotaChannel` re-asserts it around channel calls — so driver-side
+staging, worker-side fetches/spills, and pending uploads all land in
+the same per-job bucket. Code outside any scope (single-job runs, the
+benchmarks' direct engines) records with job=None and the per-job view
+simply stays empty — zero cost, zero behavior change.
+
+The contract the service tests enforce (tests/test_service.py): during
+a service run, per-job trafficwatch bytes sum EXACTLY to the channel
+totals (no byte is unattributed to a job) and per-job syncwatch reads 0
+steady-state syncs for every job, concurrently.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Optional
+
+_tls = threading.local()
+
+
+def current() -> Optional[str]:
+    """The job name attributed in this thread (None outside any scope)."""
+    return getattr(_tls, "job", None)
+
+
+@contextlib.contextmanager
+def scope(job: Optional[str]) -> Iterator[None]:
+    """Attribute every counter record in this thread to `job` while the
+    scope is active. `scope(None)` is a no-op pass-through (so callers
+    can wrap unconditionally); nesting restores the outer job on exit."""
+    if job is None:
+        yield
+        return
+    prev = getattr(_tls, "job", None)
+    _tls.job = job
+    try:
+        yield
+    finally:
+        _tls.job = prev

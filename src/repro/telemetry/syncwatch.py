@@ -15,6 +15,15 @@ value are additionally counted under ``blocked`` — the hard-stall subset.
 
 Thread-safety: counters are guarded by a lock (the host worker thread and
 driver thread may both record).
+
+Per-job view (ISSUE 9): a record made inside a `telemetry.jobs.scope`
+additionally lands in a per-job counter — `counts()["by_job"]` /
+`blocked_by_job` — so the multi-tenant service can assert the
+steady-state contract *per tenant, concurrently*: every job's driver
+thread holds its job scope, the shared host-apply scheduler re-enters
+it per task, and tests/test_service.py reads 0 steady-state syncs for
+every job at once. Outside the service no scope exists and the job view
+stays empty.
 """
 from __future__ import annotations
 
@@ -22,9 +31,13 @@ import threading
 from collections import Counter
 from typing import Any
 
+from repro.telemetry import jobs as _jobs
+
 _lock = threading.Lock()
 _events: Counter = Counter()
 _blocked: Counter = Counter()
+_job_events: Counter = Counter()
+_job_blocked: Counter = Counter()
 
 
 def reset() -> None:
@@ -32,14 +45,22 @@ def reset() -> None:
     with _lock:
         _events.clear()
         _blocked.clear()
+        _job_events.clear()
+        _job_blocked.clear()
 
 
 def record(tag: str, n: int = 1, blocked: bool = False) -> None:
-    """Record `n` forced host syncs under `tag`."""
+    """Record `n` forced host syncs under `tag` (attributed to the
+    calling thread's active job scope, if any)."""
+    job = _jobs.current()
     with _lock:
         _events[tag] += n
         if blocked:
             _blocked[tag] += n
+        if job is not None:
+            _job_events[job] += n
+            if blocked:
+                _job_blocked[job] += n
 
 
 def total() -> int:
@@ -49,13 +70,17 @@ def total() -> int:
 
 
 def counts() -> dict:
-    """Snapshot: {"total", "blocked_total", "by_tag", "blocked_by_tag"}."""
+    """Snapshot: {"total", "blocked_total", "by_tag", "blocked_by_tag",
+    "by_job", "blocked_by_job"} (the job axes are empty outside a
+    `telemetry.jobs.scope` — i.e. outside the multi-tenant service)."""
     with _lock:
         return {
             "total": sum(_events.values()),
             "blocked_total": sum(_blocked.values()),
             "by_tag": dict(_events),
             "blocked_by_tag": dict(_blocked),
+            "by_job": dict(_job_events),
+            "blocked_by_job": dict(_job_blocked),
         }
 
 

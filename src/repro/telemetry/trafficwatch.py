@@ -45,6 +45,15 @@ Contract:
     `transport.pool.BufferPool` on a miss). On real hardware these are
     pinned (page-locked) allocations — the expensive, serializing kind —
     so `bench_dispatch` asserts allocations/step == 0 after warmup.
+  * **Jobs** are the fourth axis (ISSUE 9, the multi-tenant service):
+    every record made inside a `telemetry.jobs.scope(name)` additionally
+    attributes its bytes to that job — `counts()["by_job"]` /
+    `transfers_by_job` mirror the channel view per tenant, and
+    `job_unattributed_bytes` counts bytes recorded while ANY job scope
+    has ever been active in the process but outside one (the service
+    tests assert it stays 0: per-job bytes sum exactly to the channel
+    totals). Outside the service no scope is ever entered and the job
+    view stays empty at zero cost.
   * Counters are process-global and lock-guarded (driver + host worker
     threads both record); `reset()` zeroes them (benchmarks call it after
     warmup/compile).
@@ -57,6 +66,8 @@ from typing import Any, Optional
 
 import jax
 
+from repro.telemetry import jobs as _jobs
+
 _lock = threading.Lock()
 _bytes: Counter = Counter()
 _transfers: Counter = Counter()
@@ -67,10 +78,15 @@ _unattributed: Counter = Counter()   # bytes recorded without channel / tier
 _allocs: Counter = Counter()         # fresh host-buffer allocations / channel
 _alloc_bytes: Counter = Counter()
 _channel_seconds: Counter = Counter()  # measured wall-clock per channel/path
+_job_bytes: Counter = Counter()      # per-tenant mirror of _channel_bytes
+_job_transfers: Counter = Counter()
+_job_unattributed = 0                # bytes outside any job scope, counted
+_seen_job_scope = False              # ... only once a scope was ever active
 
 
 def reset() -> None:
     """Zero all counters (benchmarks call this after warmup/compile)."""
+    global _job_unattributed, _seen_job_scope
     with _lock:
         _bytes.clear()
         _transfers.clear()
@@ -81,13 +97,20 @@ def reset() -> None:
         _allocs.clear()
         _alloc_bytes.clear()
         _channel_seconds.clear()
+        _job_bytes.clear()
+        _job_transfers.clear()
+        _job_unattributed = 0
+        _seen_job_scope = False
 
 
 def record(tag: str, nbytes: int, transfers: int = 1,
            channel: Optional[str] = None, tier: Optional[str] = None) -> None:
     """Record one (or `transfers`) transfer(s) totalling `nbytes`,
-    attributed to the `OffloadChannel` that moved them and the storage
-    tier they landed in."""
+    attributed to the `OffloadChannel` that moved them, the storage
+    tier they landed in, and (when a `telemetry.jobs.scope` is active
+    in the calling thread) the tenant job that caused them."""
+    global _job_unattributed, _seen_job_scope
+    job = _jobs.current()
     with _lock:
         _bytes[tag] += int(nbytes)
         _transfers[tag] += transfers
@@ -100,6 +123,14 @@ def record(tag: str, nbytes: int, transfers: int = 1,
             _tier_bytes[tier] += int(nbytes)
         else:
             _unattributed["tier"] += int(nbytes)
+        if job is not None:
+            _seen_job_scope = True
+            _job_bytes[job] += int(nbytes)
+            _job_transfers[job] += transfers
+        elif _seen_job_scope:
+            # a service is running in this process but these bytes name
+            # no job — the leak the per-job accounting contract forbids
+            _job_unattributed += int(nbytes)
 
 
 def record_seconds(channel: str, seconds: float) -> None:
@@ -155,11 +186,16 @@ def counts() -> dict:
     """Snapshot: {"total_bytes", "transfers", "by_tag",
     "transfers_by_tag", "by_channel", "transfers_by_channel", "by_tier",
     "unattributed_bytes", "allocations", "alloc_bytes",
-    "allocations_by_channel"}.
+    "allocations_by_channel", "by_job", "transfers_by_job",
+    "job_unattributed_bytes"}.
 
     `unattributed_bytes` is the max of channel-less and tier-less bytes —
     0 means every recorded byte named both its channel and its tier (the
-    bench_traffic attribution contract)."""
+    bench_traffic attribution contract). `job_unattributed_bytes` is the
+    service-mode mirror: bytes recorded outside any job scope once one
+    was active (0 = per-job bytes sum exactly to the channel totals —
+    the bench_service / tests/test_service.py contract; stays 0 trivially
+    when no service ever ran)."""
     with _lock:
         return {
             "total_bytes": sum(_bytes.values()),
@@ -175,4 +211,7 @@ def counts() -> dict:
             "alloc_bytes": sum(_alloc_bytes.values()),
             "allocations_by_channel": dict(_allocs),
             "seconds_by_channel": dict(_channel_seconds),
+            "by_job": dict(_job_bytes),
+            "transfers_by_job": dict(_job_transfers),
+            "job_unattributed_bytes": _job_unattributed,
         }

@@ -193,10 +193,19 @@ from repro.transport.adaptive import (AdaptiveChannel, AdaptiveController,
 
 register_transport("adaptive", AdaptiveChannel)
 
+# declarative construction (TransportSpec validates against the registry
+# above, so it too imports after the registry exists) and the per-job
+# quota wrapper (ISSUE 9)
+from repro.transport.quota import (QuotaChannel, QuotaExceededError,
+                                   QuotaLedger)
+from repro.transport.spec import TransportSpec, resolve
+
 __all__ = [
     "OffloadChannel", "HostChannel", "SpillChannel", "StripedChannel",
     "AdaptiveChannel", "AdaptiveController", "ControllerConfig",
     "ProbedChannel", "ThrottledChannel",
+    "QuotaChannel", "QuotaExceededError", "QuotaLedger",
+    "TransportSpec", "resolve",
     "BufferPool", "coalesce",
     "register_transport", "available_transports", "make_transport",
 ]

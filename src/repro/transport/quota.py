@@ -1,0 +1,187 @@
+"""`QuotaChannel`: per-job byte quotas + per-job attribution at the
+channel boundary (ISSUE 9 — the transport half of the multi-tenant
+service).
+
+When many fine-tuning jobs share one device mesh, the offload link is
+the contended resource (MLP-Offload's premise made multi-tenant): a
+single chatty job can saturate the PCIe path every other job's
+stall-free contract depends on. `QuotaChannel` wraps any
+`OffloadChannel` per job and makes the channel the enforcement point:
+
+  * **accounting**: the wrapper is the payload's single accounting
+    point — it records bytes to `telemetry.trafficwatch` under its own
+    per-job channel name (``job:<name>``) and re-asserts the job's
+    `telemetry.jobs` scope around every call, then delegates with
+    ``account=False``. Driver-side stages, worker-side fetches (run
+    under the fair scheduler's scope) and pending uploads therefore all
+    attribute to the tenant, and per-job bytes sum exactly to the
+    channel totals (tests/test_service.py).
+  * **enforcement**: a byte budget charged on `stage`/`upload` BEFORE
+    the transfer starts; exhausting it raises the typed
+    `QuotaExceededError` (no bytes move, the job fails cleanly, other
+    tenants never see the overflow). Budgets live in a `QuotaLedger`
+    shared across a service so aggregate admission control
+    (`service.ZenService.submit`) and channel enforcement read one
+    source of truth.
+
+Enforcement is driver-thread-side and lock-guarded — it adds zero
+device reads and zero syncs to the hot path (the quota check is Python
+arithmetic on static payload metadata, same as the accounting).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional
+
+from repro.telemetry import jobs as jobscope
+from repro.telemetry import trafficwatch
+
+
+class QuotaExceededError(RuntimeError):
+    """A job tried to move bytes past its transport quota (typed so the
+    service can map it to a clean per-job failure — and tests can catch
+    exactly this, not a generic RuntimeError)."""
+
+    def __init__(self, job: str, requested: int, used: int, quota: int):
+        self.job = job
+        self.requested = int(requested)
+        self.used = int(used)
+        self.quota = int(quota)
+        super().__init__(
+            f"job {job!r}: transport quota exhausted — "
+            f"{used} bytes used + {requested} requested > {quota} quota")
+
+
+class QuotaLedger:
+    """Thread-safe per-job byte ledger shared by a service's quota
+    channels. `total_bytes` optionally caps the sum of all jobs'
+    budgets for admission control (None = uncapped)."""
+
+    def __init__(self, total_bytes: Optional[int] = None):
+        self.total_bytes = total_bytes
+        self._lock = threading.Lock()
+        self._quota: dict[str, Optional[int]] = {}
+        self._used: dict[str, int] = {}
+
+    def open(self, job: str, quota_bytes: Optional[int]) -> None:
+        with self._lock:
+            self._quota[job] = quota_bytes
+            self._used.setdefault(job, 0)
+
+    def close(self, job: str) -> None:
+        """Release the job's budget reservation (usage history stays
+        for reporting)."""
+        with self._lock:
+            self._quota.pop(job, None)
+
+    def reserved_bytes(self) -> int:
+        """Sum of the open (finite) budgets — what admission control
+        compares against `total_bytes`."""
+        with self._lock:
+            return sum(q for q in self._quota.values() if q is not None)
+
+    def charge(self, job: str, nbytes: int) -> None:
+        """Charge `nbytes` to `job`, raising `QuotaExceededError` (and
+        charging nothing) if it would exceed the job's budget."""
+        with self._lock:
+            used = self._used.get(job, 0)
+            quota = self._quota.get(job)
+            if quota is not None and used + nbytes > quota:
+                raise QuotaExceededError(job, nbytes, used, quota)
+            self._used[job] = used + int(nbytes)
+
+    def used(self, job: str) -> int:
+        with self._lock:
+            return self._used.get(job, 0)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"total_bytes": self.total_bytes,
+                    "quota": dict(self._quota),
+                    "used": dict(self._used)}
+
+
+class QuotaChannel:
+    """Per-job quota/attribution wrapper over any `OffloadChannel`
+    (full protocol delegation — composes with every stock tier)."""
+
+    def __init__(self, inner, job: str, ledger: Optional[QuotaLedger] = None,
+                 quota_bytes: Optional[int] = None):
+        self.inner = inner
+        self.job = job
+        self.name = f"job:{job}"
+        self.ledger = ledger if ledger is not None else QuotaLedger()
+        self.ledger.open(job, quota_bytes)
+
+    # -- protocol passthroughs ------------------------------------------
+    @property
+    def tier(self) -> str:
+        return self.inner.tier
+
+    @property
+    def pool(self):
+        return self.inner.pool
+
+    @property
+    def error_feedback(self) -> bool:
+        return self.inner.error_feedback
+
+    def encode(self, rows):
+        return self.inner.encode(rows)
+
+    def decode(self, payload):
+        return self.inner.decode(payload)
+
+    def set_wire(self, wire_dtype: str) -> None:
+        set_wire = getattr(self.inner, "set_wire", None)
+        if set_wire is not None:
+            set_wire(wire_dtype)
+
+    # -- quota-enforced, job-attributed transfers -----------------------
+    def _charge(self, tree, tag: str, account: bool):
+        nbytes = trafficwatch.tree_bytes(tree)
+        self.ledger.charge(self.job, nbytes)
+        if account:
+            trafficwatch.record(tag, nbytes,
+                                transfers=trafficwatch.tree_transfers(tree),
+                                channel=self.name, tier=self.inner.tier)
+
+    def stage(self, tree, tag: str = "stage_to_host", account: bool = True):
+        with jobscope.scope(self.job):
+            self._charge(tree, tag, account)
+            # the wrapper is the accounting point; the inner channel
+            # moves the bytes without re-counting them
+            return self.inner.stage(tree, tag=tag, account=False)
+
+    def fetch(self, handle):
+        # worker-side: any colder-tier restore the inner channel records
+        # (spill_read etc.) attributes to this job via the scope
+        with jobscope.scope(self.job):
+            return self.inner.fetch(handle)
+
+    def upload(self, tree, sharding=None, tag: str = "upload",
+               account: bool = True):
+        with jobscope.scope(self.job):
+            self._charge(tree, tag, account)
+            return self.inner.upload(tree, sharding, tag=tag, account=False)
+
+    # -- lifecycle / control --------------------------------------------
+    def on_window_boundary(self, ctx: dict):
+        hook = getattr(self.inner, "on_window_boundary", None)
+        if hook is None:
+            return None
+        with jobscope.scope(self.job):
+            return hook(ctx)
+
+    def drain(self) -> None:
+        # NOTE: drain() settles transfers (the runtime calls it on every
+        # flush/checkpoint) — the ledger entry stays open until the
+        # SERVICE closes the job (`ledger.close`), so a mid-run
+        # checkpoint never releases a tenant's budget reservation
+        with jobscope.scope(self.job):
+            self.inner.drain()
+
+    def stats(self) -> dict:
+        return {"name": self.name, "tier": self.inner.tier, "job": self.job,
+                "quota_used_bytes": self.ledger.used(self.job),
+                "inner": self.inner.stats()}

@@ -1,0 +1,184 @@
+"""`TransportSpec`: declarative, serializable construction of offload
+channels (ISSUE 9 — replaces ad-hoc `make_transport(name, **kwargs)`
+string-plus-kwargs plumbing as the public construction path).
+
+A spec is a frozen value object — registry-validated at construction
+(unknown names and parameters the factory cannot accept fail EARLY, not
+at channel build time deep inside a service job) and round-trippable
+through `state_dict()` / JSON, so a `repro.engine.JobSpec` carrying one
+is fully serializable: the multi-tenant service's `--jobs jobs.json`
+file describes each tenant's transport declaratively.
+
+    spec = TransportSpec("spill", {"budget_bytes": 64 << 20})
+    chan = spec.build(zcfg)                  # == make_transport(...)
+    TransportSpec.from_state_dict(spec.state_dict()) == spec   # True
+
+CLI form (launch/train.py --transport, launch/serve.py jobs.json):
+
+    "host"                               -> TransportSpec("host")
+    "spill:budget_bytes=1048576"         -> params via ast.literal_eval
+    "striped:ways=4"
+
+`make_transport` stays as the low-level registry call (specs build
+through it); new code should construct channels through a spec.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import inspect
+import json
+from typing import Any, Mapping, Optional
+
+# JSON-representable parameter values (validated recursively so a spec
+# can always round-trip through jobs.json)
+_SCALARS = (type(None), bool, int, float, str)
+
+
+def _check_jsonable(key: str, value: Any) -> None:
+    if isinstance(value, _SCALARS):
+        return
+    if isinstance(value, (list, tuple)):
+        for v in value:
+            _check_jsonable(key, v)
+        return
+    if isinstance(value, dict):
+        for k, v in value.items():
+            if not isinstance(k, str):
+                raise TypeError(
+                    f"TransportSpec param {key!r}: dict keys must be "
+                    f"strings to round-trip through JSON, got {k!r}")
+            _check_jsonable(key, v)
+        return
+    raise TypeError(
+        f"TransportSpec param {key!r} = {value!r} is not JSON-serializable"
+        f" (allowed: None/bool/int/float/str and lists/dicts of those); "
+        f"pass live objects (channel instances, factories) directly to "
+        f"the legacy transport= argument instead of through a spec")
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportSpec:
+    """Name + typed params of a registered offload channel.
+
+    `params` is stored as a sorted tuple of (key, value) pairs so specs
+    compare/hash by value; construct with a plain dict (or pairs) and
+    read back through `.kwargs`."""
+
+    name: str = "host"
+    params: Any = ()
+
+    def __post_init__(self):
+        if isinstance(self.params, Mapping):
+            pairs = self.params.items()
+        else:
+            pairs = ((str(k), v) for k, v in self.params)
+        # tuples normalize to lists so a spec compares equal to its own
+        # JSON round-trip (JSON has no tuple)
+        def norm(v):
+            if isinstance(v, (list, tuple)):
+                return [norm(x) for x in v]
+            if isinstance(v, dict):
+                return {k: norm(x) for k, x in v.items()}
+            return v
+        object.__setattr__(
+            self, "params", tuple(sorted((k, norm(v)) for k, v in pairs)))
+        self.validate()
+
+    # ------------------------------------------------------------------
+    @property
+    def kwargs(self) -> dict:
+        """The params as a plain keyword dict for the factory."""
+        return dict(self.params)
+
+    def validate(self) -> "TransportSpec":
+        """Registry + signature + serializability validation (raises on
+        the first violation; returns self so construction chains)."""
+        from repro.transport import _REGISTRY, available_transports
+        if self.name not in _REGISTRY:
+            raise KeyError(f"unknown transport {self.name!r}; "
+                           f"available: {available_transports()}")
+        for k, v in self.params:
+            if not k.isidentifier():
+                raise ValueError(f"TransportSpec param name {k!r} is not "
+                                 f"a valid keyword")
+            _check_jsonable(k, v)
+        factory = _REGISTRY[self.name]
+        try:
+            sig = inspect.signature(factory)
+        except (TypeError, ValueError):
+            return self          # C-level / exotic factory: skip binding
+        accepts_var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                             for p in sig.parameters.values())
+        if not accepts_var_kw:
+            for k, _ in self.params:
+                if k not in sig.parameters:
+                    raise TypeError(
+                        f"transport {self.name!r} accepts no parameter "
+                        f"{k!r} (signature: {sig})")
+        return self
+
+    def build(self, zcfg=None, **extra):
+        """Construct the channel through the registry. `zcfg` selects
+        the wire codec; `extra` carries runtime-owned keywords
+        (`stage_payloads`) that are NOT part of the declarative spec —
+        spec params win on a collision."""
+        from repro.transport import make_transport
+        return make_transport(self.name, zcfg, **{**extra, **self.kwargs})
+
+    # -- serialization ---------------------------------------------------
+    def state_dict(self) -> dict:
+        return json.loads(self.to_json())
+
+    @classmethod
+    def from_state_dict(cls, sd: Mapping) -> "TransportSpec":
+        return cls(sd["name"], dict(sd.get("params", {})))
+
+    def to_json(self) -> str:
+        return json.dumps({"name": self.name, "params": self.kwargs})
+
+    @classmethod
+    def from_json(cls, text: str) -> "TransportSpec":
+        return cls.from_state_dict(json.loads(text))
+
+    # -- CLI -------------------------------------------------------------
+    @classmethod
+    def parse(cls, text: str) -> Optional["TransportSpec"]:
+        """Parse the CLI form `name[:key=value,...]` (values through
+        `ast.literal_eval`, bare words kept as strings). Empty text ->
+        None (caller's default transport)."""
+        text = (text or "").strip()
+        if not text:
+            return None
+        name, _, rest = text.partition(":")
+        params = {}
+        for item in filter(None, (s.strip() for s in rest.split(","))):
+            k, sep, v = item.partition("=")
+            if not sep:
+                raise ValueError(f"--transport param {item!r}: expected "
+                                 f"key=value")
+            try:
+                params[k.strip()] = ast.literal_eval(v.strip())
+            except (ValueError, SyntaxError):
+                params[k.strip()] = v.strip()
+        return cls(name.strip(), params)
+
+
+def resolve(transport, zcfg=None, **default_kw):
+    """The one place every consumer (runtime, single-program backends,
+    the service) turns a `transport=` argument into a channel:
+
+      None            -> the stock "host" tier
+      str             -> registry name
+      TransportSpec   -> spec.build (declarative path)
+      anything else   -> an already-constructed channel, returned as-is
+
+    `default_kw` (e.g. `stage_payloads`) parameterizes registry/spec
+    builds only — a live channel instance owns its configuration."""
+    if transport is None:
+        transport = TransportSpec("host")
+    elif isinstance(transport, str):
+        transport = TransportSpec.parse(transport)
+    if isinstance(transport, TransportSpec):
+        return transport.build(zcfg, **default_kw)
+    return transport

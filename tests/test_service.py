@@ -1,0 +1,274 @@
+"""Multi-tenant service (ISSUE 9): JobSpec/TransportSpec as the single
+construction path, concurrent-vs-serial bit parity, per-job quota
+enforcement and byte attribution, the per-tenant zero-sync contract,
+and idempotent engine/callback lifecycle."""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.data import make_train_stream
+from repro.engine import (Engine, JobSpec, MetricsDrainCallback,
+                          StragglerWatchdog)
+from repro.runtime import RuntimeConfig
+from repro.service import AdmissionError, ServiceConfig, ZenService
+from repro.telemetry import syncwatch, trafficwatch
+from repro.transport import QuotaExceededError, TransportSpec
+
+# deterministic schedule: straggler window extension is timing-dependent
+# and must be off for concurrent-vs-serial bitwise parity
+ZO = dict(topk_ratio=0.1, update_interval=2, refresh_interval=4,
+          warmup_steps=1, lr=1e-3, use_kernels="never")
+RC = dict(straggler_window_extension=False)
+
+
+def _spec(name, seed=0, **kw):
+    base = dict(name=name, arch="llama2-7b", reduced=True, zcfg=dict(ZO),
+                rcfg=dict(RC), batch_size=4, seq_len=32, seed=seed)
+    base.update(kw)
+    return JobSpec(**base)
+
+
+def _serial_losses(spec, steps):
+    """Reference run: a fresh stand-alone engine, same spec and data."""
+    cfg = spec.resolve_arch()
+    loader = make_train_stream(cfg.vocab, spec.seq_len, spec.batch_size,
+                               seed=spec.seed)
+    losses = []
+    with Engine.from_spec(spec) as eng:
+        eng.init(jax.random.PRNGKey(spec.seed))
+        for _ in range(steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in loader.next_batch().items()}
+            m = eng.step(batch)
+            if "loss" in m:
+                losses.append(m["loss"])
+        losses = [float(l) for l in jax.block_until_ready(losses)]
+    return losses
+
+
+# ---------------------------------------------------------------------------
+# the shared concurrent run: two tenants training at once, then the same
+# two specs serially on fresh stand-alone engines
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def service_run():
+    trafficwatch.reset()
+    syncwatch.reset()
+    specs = [_spec("svc-a", seed=0), _spec("svc-b", seed=1)]
+    steps = 6
+    with ZenService(ServiceConfig(max_jobs=2)) as svc:
+        handles = [svc.submit(s) for s in specs]
+        futs = [h.train(steps) for h in handles]
+        results = {h.name: f.get(timeout=900) for h, f in zip(handles, futs)}
+        stats = svc.stats()
+        traffic = trafficwatch.counts()
+    serial = {s.name: _serial_losses(s, steps) for s in specs}
+    return {"results": results, "serial": serial, "traffic": traffic,
+            "stats": stats, "steps": steps}
+
+
+def test_concurrent_losses_bit_identical_to_serial(service_run):
+    for name, res in service_run["results"].items():
+        assert res["losses"] == service_run["serial"][name], name
+        assert res["steps"] == service_run["steps"]
+
+
+def test_zero_steady_syncs_per_job(service_run):
+    for name, res in service_run["results"].items():
+        assert res["steady_steps"] > 0, name
+        assert res["steady_syncs"] == 0, name
+
+
+def test_every_byte_job_attributed(service_run):
+    t = service_run["traffic"]
+    by_job = t["by_job"]
+    assert t["job_unattributed_bytes"] == 0
+    assert set(by_job) == {"svc-a", "svc-b"}
+    job_channels = {c: b for c, b in t["by_channel"].items()
+                    if c.startswith("job:")}
+    for name, nbytes in by_job.items():
+        assert nbytes > 0, name
+        # per-job bytes mirror the per-job channel totals exactly
+        assert nbytes == job_channels[f"job:{name}"], name
+
+
+def test_programs_and_model_shared(service_run):
+    s = service_run["stats"]
+    assert s["programs_cached"] >= 1        # one entry serves both jobs
+    assert s["models_shared"] == 1
+    assert s["scheduler"]["stopped"] is False or s["scheduler"]["stopped"]
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+def test_admission_capacity_and_duplicate_name():
+    with ZenService(ServiceConfig(max_jobs=1)) as svc:
+        h = svc.submit(_spec("adm-a"))
+        with pytest.raises(AdmissionError, match="already active"):
+            svc.submit(_spec("adm-a"))
+        with pytest.raises(AdmissionError, match="service full"):
+            svc.submit(_spec("adm-b"))
+        h.close()
+        # the freed slot admits a new tenant
+        h2 = svc.submit(_spec("adm-b")).wait_ready(timeout=300)
+        h2.close()
+    with pytest.raises(AdmissionError, match="shut down"):
+        svc.submit(_spec("adm-c"))
+
+
+def test_admission_aggregate_quota_cap():
+    cap = 1 << 20
+    with ZenService(ServiceConfig(max_jobs=4,
+                                  total_quota_bytes=cap)) as svc:
+        with pytest.raises(AdmissionError, match="requires quota_bytes"):
+            svc.submit(_spec("cap-a"))
+        h = svc.submit(_spec("cap-b", quota_bytes=cap // 2))
+        with pytest.raises(AdmissionError, match="quota exhausted"):
+            svc.submit(_spec("cap-c", quota_bytes=cap // 2 + 1))
+        h.close()
+        # closing a job releases its reservation
+        svc.submit(_spec("cap-d", quota_bytes=cap)).close()
+
+
+# ---------------------------------------------------------------------------
+# per-job quota enforcement mid-run: the offender fails typed, the
+# sibling keeps training, the slot frees
+# ---------------------------------------------------------------------------
+def test_quota_exhaustion_isolates_one_job():
+    with ZenService(ServiceConfig(max_jobs=2)) as svc:
+        good = svc.submit(_spec("qx-good", seed=0))
+        bad = svc.submit(_spec("qx-bad", seed=1, quota_bytes=1024))
+        good_fut = good.train(4)
+        with pytest.raises(QuotaExceededError):
+            bad.train(4).get(timeout=900)
+        assert bad.state == "failed"
+        res = good_fut.get(timeout=900)
+        assert res["steps"] == 4 and res["steady_syncs"] == 0
+        bad.close()
+        svc.submit(_spec("qx-new")).close()   # failed job freed its slot
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/restore one tenant while another trains
+# ---------------------------------------------------------------------------
+def test_checkpoint_restore_while_sibling_trains():
+    with ZenService(ServiceConfig(max_jobs=2)) as svc:
+        a = svc.submit(_spec("ck-a", seed=0))
+        b = svc.submit(_spec("ck-b", seed=1))
+        r1 = a.train(4).get(timeout=900)
+        sd = a.checkpoint().get(timeout=900)
+        b_fut = b.train(6)                    # sibling trains through it
+        r2 = a.train(2).get(timeout=900)
+        assert r2["steps"] == r1["steps"] + 2
+        a.restore(sd).get(timeout=900)
+        r3 = a.train(2).get(timeout=900)
+        # restore rewound the step counter to the checkpoint
+        assert r3["steps"] == r1["steps"] + 2
+        rb = b_fut.get(timeout=900)
+        assert rb["steps"] == 6 and rb["steady_syncs"] == 0
+
+
+# ---------------------------------------------------------------------------
+# JobSpec: serialization + the from_config shim
+# ---------------------------------------------------------------------------
+def test_jobspec_roundtrip_json():
+    spec = JobSpec(name="t", arch="llama2-7b", reduced=True,
+                   zcfg={"topk_ratio": 0.05, "update_interval": 4},
+                   transport=TransportSpec("spill",
+                                           {"budget_bytes": 64 << 20}),
+                   wire_dtype="int8", quota_bytes=1 << 20, seed=7,
+                   batch_size=2, seq_len=16)
+    sd = spec.state_dict()
+    json.dumps(sd)                             # actually JSON-representable
+    assert JobSpec.from_state_dict(sd) == spec
+    assert JobSpec.from_json(spec.to_json()) == spec
+    assert spec.resolve_zcfg().wire_dtype == "int8"   # override applied
+
+
+def test_jobspec_live_objects_fail_serialization_loudly():
+    live = reduced_config(get_config("llama2-7b"))
+    with pytest.raises(TypeError, match="arch"):
+        JobSpec(name="t", arch=live).state_dict()
+    with pytest.raises(TypeError, match="lr"):
+        JobSpec(name="t", zcfg={"lr": lambda step: 1e-3}).state_dict()
+    # but both are fine for direct (non-serialized) construction
+    assert JobSpec(name="t", arch=live).resolve_arch() is live
+
+
+def test_from_config_shim_warns_and_matches_from_spec():
+    cfg = reduced_config(get_config("llama2-7b"))
+    zcfg = ZenFlowConfig(**ZO)
+    rcfg = RuntimeConfig(**RC)
+    with pytest.warns(DeprecationWarning):
+        eng_old = Engine.from_config(cfg, zcfg, backend="async", rcfg=rcfg)
+    spec = JobSpec(arch=cfg, zcfg=zcfg, rcfg=rcfg)
+    eng_new = Engine.from_spec(spec)
+    loader_a = make_train_stream(cfg.vocab, 32, 4, seed=0)
+    loader_b = make_train_stream(cfg.vocab, 32, 4, seed=0)
+    losses = {}
+    for key, eng, loader in [("old", eng_old, loader_a),
+                             ("new", eng_new, loader_b)]:
+        with eng:
+            eng.init(jax.random.PRNGKey(0))
+            ls = [eng.step({k: jnp.asarray(v)
+                            for k, v in loader.next_batch().items()})["loss"]
+                  for _ in range(3)]
+            losses[key] = [float(l) for l in jax.block_until_ready(ls)]
+    assert losses["old"] == losses["new"]      # bit-identical construction
+
+
+# ---------------------------------------------------------------------------
+# TransportSpec
+# ---------------------------------------------------------------------------
+def test_transport_spec_parse_and_validate():
+    ts = TransportSpec.parse("spill:budget_bytes=1024")
+    assert ts.name == "spill" and ts.kwargs["budget_bytes"] == 1024
+    assert TransportSpec.parse("") is None
+    assert TransportSpec.parse("host") == TransportSpec("host")
+    with pytest.raises(KeyError, match="unknown transport"):
+        TransportSpec("nope")
+    with pytest.raises(TypeError, match="no parameter"):
+        TransportSpec("host", {"bogus_kw": 1})
+    with pytest.raises(ValueError, match="key=value"):
+        TransportSpec.parse("spill:budget_bytes")
+    sd = ts.state_dict()
+    json.dumps(sd)
+    assert TransportSpec.from_state_dict(sd) == ts
+    assert TransportSpec.from_json(ts.to_json()) == ts
+
+
+def test_transport_spec_rejects_unserializable_params():
+    with pytest.raises(TypeError, match="not JSON-serializable"):
+        TransportSpec("host", {"zcfg": object()})
+
+
+# ---------------------------------------------------------------------------
+# idempotent lifecycle
+# ---------------------------------------------------------------------------
+def test_engine_double_close_and_close_before_init():
+    eng = Engine.from_spec(_spec("life"))
+    eng.close()                    # never init()ed: still a clean no-op
+    eng.close()                    # and again
+    with Engine.from_spec(_spec("life2")) as eng2:
+        eng2.close()               # explicit close inside the with-block
+    # __exit__ closed it a second time without error
+    assert eng2._closed
+
+
+def test_callbacks_detach_twice_and_drain_close_twice():
+    watchdog = StragglerWatchdog()
+    drain = MetricsDrainCallback()
+    eng = Engine.from_spec(_spec("cbx"), callbacks=(watchdog, drain))
+    watchdog.detach(eng)
+    watchdog.detach(eng)           # second detach is a no-op
+    assert watchdog not in eng.callbacks
+    drain.on_close(eng)
+    drain.on_close(eng)            # double drain-close is a no-op
+    eng.close()
+    eng.close()
