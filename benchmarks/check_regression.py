@@ -7,6 +7,7 @@ benchmark and re-measured on every CI run:
   BENCH_dispatch.json  zero-sync runtime   (benchmarks/bench_dispatch.py)
   BENCH_traffic.json   compressed wire     (benchmarks/bench_traffic.py)
   BENCH_service.json   multi-tenant service (benchmarks/bench_service.py)
+  BENCH_publish.json   weight publication  (benchmarks/bench_publish.py)
 
 This gate fails the build when:
 
@@ -38,7 +39,15 @@ This gate fails the build when:
     steady-state sync, or leaves any transferred byte unattributed to
     a job (hard invariants) — or its concurrent-vs-serial aggregate
     speedup regresses below the baseline floor (wall-clock-derived, so
-    gated at TIMING_NOISE_TOLERANCE).
+    gated at TIMING_NOISE_TOLERANCE);
+  * weight publication (ISSUE 10) adds ANY steady-state sync to the
+    publishing trainer (on- and off-run counts must both be 0),
+    publishes zero bytes, lets a published byte escape the "publish"
+    tag / the job's counters (the on-vs-off by_job delta must equal
+    the tagged bytes exactly), or leaves anything unattributed (hard
+    invariants) — or its interleaved-A/B step-overhead ratio grows
+    above its baseline CEILING (wall-clock-derived, so gated at
+    TIMING_NOISE_TOLERANCE).
 
 Baselines live in `benchmarks/baselines/` (quick-mode runs, same shapes
 CI measures); refresh them deliberately with --update-baselines when a
@@ -46,7 +55,7 @@ PR moves a headline on purpose, so drift is always an explicit diff.
 
     PYTHONPATH=src python benchmarks/check_regression.py \
         --dispatch BENCH_dispatch.json --traffic BENCH_traffic.json \
-        --service BENCH_service.json \
+        --service BENCH_service.json --publish BENCH_publish.json \
         [--baseline-dir benchmarks/baselines] [--tolerance 0.10]
 """
 from __future__ import annotations
@@ -66,6 +75,7 @@ RATIO_GATES = {
                  "transfer_coalescing_factor"],
     "traffic": ["compression_ratio_int8_vs_fp32"],
     "service": ["concurrent_speedup_vs_serial"],
+    "publish": [],   # publish gates are hard invariants + a ceiling
 }
 
 # headline metrics gated as CEILINGS (cur <= base * (1 + tolerance)) —
@@ -80,6 +90,11 @@ RATIO_GATES = {
 CEIL_GATES = {
     "traffic": ["adaptive_bytes_ratio_vs_host",
                 "adaptive_transfers_per_step"],
+    # publication's do-no-harm contract (ISSUE 10): the paused-vs-hooked
+    # interleaved-A/B step ratio may not grow past its baseline.
+    # Wall-clock-derived, so it sits in TIMING_GATES for the wider
+    # tolerance.
+    "publish": ["publish_step_overhead_ratio"],
 }
 
 # the coalesced steady step ships the packed host_bound buffer plus at
@@ -94,7 +109,8 @@ MAX_STEADY_TRANSFERS = 2.0
 # ratios (traffic) are deterministic and keep the tight tolerance; the
 # hard zero-sync invariant above is the dispatch contract that matters.
 TIMING_GATES = {"step_time_speedup_vs_blocking",
-                "concurrent_speedup_vs_serial"}
+                "concurrent_speedup_vs_serial",
+                "publish_step_overhead_ratio"}
 TIMING_NOISE_TOLERANCE = 0.25
 
 # the multi-tenant service's fairness contract: max/min per-job
@@ -196,6 +212,29 @@ def check_report(kind: str, current: dict, baseline: dict,
         if cur_h.get("all_bytes_match_channels") is not True:
             errs.append("service: a tenant's by_job byte total diverged "
                         "from its job:<name> channel total")
+    if kind == "publish":
+        # stall-free weight publication (ISSUE 10): publishing may not
+        # add a single blocking sync, and every published byte must be
+        # attributed. `!= 0` / `is not True` so missing/NaN values fail.
+        s_on = cur_h.get("publish_on_steady_syncs")
+        s_off = cur_h.get("publish_off_steady_syncs")
+        if s_on != 0 or s_off != 0:
+            errs.append(f"publish: steady-state syncs on/off = "
+                        f"{s_on}/{s_off} (both must be 0 — publication "
+                        f"may not touch the trainer's hot path)")
+        pb = cur_h.get("publish_bytes")
+        if pb is None or not (pb > 0):
+            errs.append(f"publish: {pb} bytes under the 'publish' tag "
+                        f"(must be > 0 — the boundary hook never staged "
+                        f"a snapshot)")
+        if cur_h.get("publish_bytes_delta_matches") is not True:
+            errs.append("publish: published bytes diverged from the "
+                        "on-vs-off by_job delta (attribution must be "
+                        "exact to the byte)")
+        ub = cur_h.get("publish_unattributed_bytes")
+        if ub is None or ub != 0:
+            errs.append(f"publish: {ub} bytes escaped attribution during "
+                        f"the publish run (must be 0)")
 
     # ratio gates vs the committed baseline
     for key in RATIO_GATES.get(kind, []):
@@ -232,11 +271,13 @@ def check_report(kind: str, current: dict, baseline: dict,
             errs.append(f"{kind}: headline metric {key!r} missing from "
                         f"baseline (refresh benchmarks/baselines/)")
             continue
-        ceil = base * (1.0 + tolerance)
+        tol = max(tolerance, TIMING_NOISE_TOLERANCE) \
+            if key in TIMING_GATES else tolerance
+        ceil = base * (1.0 + tol)
         if not (cur <= ceil):           # NaN-safe: NaN must fail
             errs.append(f"{kind}: {key} grew to {cur:.4f} "
                         f"(baseline {base:.4f}, ceiling {ceil:.4f} at "
-                        f"{tolerance:.0%} tolerance)")
+                        f"{tol:.0%} tolerance)")
     return errs
 
 
@@ -245,6 +286,7 @@ def main() -> None:
     ap.add_argument("--dispatch", default="BENCH_dispatch.json")
     ap.add_argument("--traffic", default="BENCH_traffic.json")
     ap.add_argument("--service", default="BENCH_service.json")
+    ap.add_argument("--publish", default="BENCH_publish.json")
     ap.add_argument("--baseline-dir", default=BASELINE_DIR)
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="allowed relative regression of ratio headlines")
@@ -254,7 +296,7 @@ def main() -> None:
     args = ap.parse_args()
 
     reports = {"dispatch": args.dispatch, "traffic": args.traffic,
-               "service": args.service}
+               "service": args.service, "publish": args.publish}
     if args.update_baselines:
         os.makedirs(args.baseline_dir, exist_ok=True)
         for kind, path in reports.items():
@@ -276,8 +318,11 @@ def main() -> None:
                             f"benchmark run?)")
             continue
         if not os.path.exists(base_path):
-            failures.append(f"{kind}: committed baseline {base_path} "
-                            f"missing")
+            failures.append(
+                f"{kind}: committed baseline {base_path} missing — run "
+                f"the {kind} benchmark with --quick, then install it "
+                f"with `python benchmarks/check_regression.py "
+                f"--update-baselines` (writes {base_path}; commit it)")
             continue
         current, baseline = _load(path), _load(base_path)
         errs = check_report(kind, current, baseline, args.tolerance)

@@ -6,6 +6,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import bench_dispatch as bd
+    from benchmarks import bench_publish as bp
     from benchmarks import bench_service as bs
     from benchmarks import bench_traffic as bt
     from benchmarks import paper_figs as pf
@@ -13,6 +14,7 @@ def main() -> None:
         bd.bench_rows,              # zero-sync hot path (BENCH_dispatch)
         bt.bench_rows,              # compressed wire traffic (BENCH_traffic)
         bs.bench_rows,              # multi-tenant service (BENCH_service)
+        bp.bench_rows,              # weight publication (BENCH_publish)
         pf.bench_grad_cdf,          # Fig 4
         pf.bench_locality,          # Fig 5 / 6 / 9
         pf.bench_selection_overhead,  # Fig 16

@@ -13,7 +13,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config, reduced_config
 from repro.core.zen_optimizer import ZenFlowConfig
 from repro.data import make_train_stream
-from repro.engine import Engine
+from repro.engine import Engine, JobSpec
 from repro.launch.mesh import make_mesh
 from repro.runtime.elastic import elastic_restore
 
@@ -22,11 +22,13 @@ def main():
     cfg = reduced_config(get_config("llama2-7b"))
     zcfg = ZenFlowConfig(topk_ratio=0.1, update_interval=4,
                          refresh_interval=8, lr=1e-3)
+    spec = JobSpec(name="restart-demo", arch="llama2-7b", reduced=True,
+                   zcfg=zcfg, backend="async")
     loader = make_train_stream(cfg.vocab, 32, 8)
 
     with tempfile.TemporaryDirectory() as d:
         ckpt = CheckpointManager(d, async_save=False)
-        eng = Engine.from_config(cfg, zcfg, backend="async")
+        eng = Engine.from_spec(spec)
         eng.init(jax.random.PRNGKey(0))
         for i in range(8):
             batch = {k: jnp.asarray(v) for k, v in loader.next_batch().items()}
@@ -39,7 +41,7 @@ def main():
         eng.close()
 
         # ---- restart ----
-        eng2 = Engine.from_config(cfg, zcfg, backend="async")
+        eng2 = Engine.from_spec(spec)
         eng2.init(jax.random.PRNGKey(0))         # allocate shapes
         loader2 = make_train_stream(cfg.vocab, 32, 8)
         step = eng2.restore_latest(ckpt, loader2)

@@ -107,7 +107,8 @@ _REGISTRY: dict[str, Callable[..., Any]] = {}
 
 def register_backend(name: str, factory: Callable[..., Any]) -> None:
     """Register `factory(model, zcfg, rules, rcfg=None, transport=None)
-    -> backend` (extra keywords from `Engine.from_config` pass through)."""
+    -> backend` (extra keywords from `Engine.from_spec` / `JobSpec.
+    backend_kw` pass through)."""
     _REGISTRY[name] = factory
 
 
@@ -244,7 +245,7 @@ class SpmdBackend(AsyncBackend):
     Adds to the async backend:
 
       * a (data, model) mesh over every visible device when the supplied
-        rules carry none (`Engine.from_config(..., backend="spmd")` on a
+        rules carry none (`JobSpec(backend="spmd")` on a
         multi-device host just works; `XLA_FLAGS=
         --xla_force_host_platform_device_count=N` exercises it without
         accelerators);

@@ -43,7 +43,14 @@ class Request:
 class DecodeServer:
     """Static-batch decode server: slots hold active requests; prefill
     fills a slot, decode advances all slots each tick; finished slots are
-    refilled from the queue (continuous batching)."""
+    refilled from the queue (continuous batching).
+
+    Weight installs (ISSUE 10): `install_params` swaps in a fresh
+    parameter snapshot — e.g. one published by a live trainer through
+    `repro.publish` — strictly BETWEEN decode ticks. `tick()` reads
+    `self.params` exactly once per dispatch, so a tick computes every
+    slot's logits from one coherent version; an install can never tear a
+    tick mid-flight."""
 
     def __init__(self, model, batch_slots: int, max_seq: int, seed: int = 0):
         self.model = model
@@ -51,6 +58,8 @@ class DecodeServer:
         self.slots = batch_slots
         self.max_seq = max_seq
         self.params = model.init(jax.random.PRNGKey(seed))
+        self.params_version = None     # install_params bookkeeping
+        self.installs = 0
         self.cache = jax.tree.map(
             lambda s: jnp.zeros(s.shape, s.dtype),
             model.cache_specs(batch_slots, max_seq))
@@ -61,6 +70,24 @@ class DecodeServer:
         self._prefill = jax.jit(
             lambda p, t: model.prefill(p, t, max_seq),
             static_argnums=())
+
+    def install_params(self, params, version=None):
+        """Install a new parameter snapshot (between ticks — the caller
+        drives add/tick/install from one thread, so a tick in progress
+        is impossible by construction).
+
+        The snapshot may be zero-copy host memory (a `WeightBus` lease's
+        numpy views): jitted consumers on XLA:CPU alias such memory, so
+        before swapping, settle any in-flight decode dispatches that may
+        still be reading the PREVIOUS install's memory — a consumer-side
+        wait (this is the generator's thread), never the trainer's.
+        After this returns, the caller may release its pin on the
+        previous snapshot (`publish.Subscriber.install` does exactly
+        that)."""
+        jax.block_until_ready(self.tokens)
+        self.params = jax.tree.map(jnp.asarray, params)
+        self.params_version = version
+        self.installs += 1
 
     def add(self, slot: int, req: Request):
         """Prefill a request into a slot (single-row prefill)."""
@@ -92,11 +119,17 @@ class DecodeServer:
                 req.done = True
                 del self.active[slot]
 
-    def run(self, requests: list[Request]) -> dict:
+    def run(self, requests: list[Request],
+            subscriber=None) -> dict:
+        """Serve `requests` to completion. With a `publish.Subscriber`,
+        poll it between ticks and install any fresh trainer snapshot
+        (non-blocking — an idle bus never stalls decoding)."""
         queue = list(requests)
         t0 = time.time()
         ticks = 0
         while queue or self.active:
+            if subscriber is not None:
+                subscriber.install(self)
             for slot in range(self.slots):
                 if slot not in self.active and queue:
                     self.add(slot, queue.pop(0))
@@ -108,7 +141,8 @@ class DecodeServer:
         toks = sum(len(r.generated) for r in requests)
         return {"requests": len(requests), "tokens": toks,
                 "elapsed_s": dt, "tok_per_s": toks / max(dt, 1e-9),
-                "ticks": ticks}
+                "ticks": ticks, "installs": self.installs,
+                "params_version": self.params_version}
 
 
 def _splice(c, c1, slot):

@@ -1,0 +1,25 @@
+"""Weight publication (ISSUE 10): versioned, mid-window-consistent
+parameter snapshots from a live ZenFlow trainer to N colocated
+consumers, without ever stalling the trainer.
+
+Two halves:
+
+  * `bus` — `WeightBus` (pooled, lease-pinned snapshot slots),
+    `Lease`, `Subscriber` (`poll`/`latest`/`wait_for`/`install`);
+  * `publisher` — `Publisher` (the runtime boundary hook + worker
+    thread), `PublishConfig`, `attach_publisher`.
+
+Service integration lives in `repro.service.ZenService.publish(job)`;
+the consumer integration in `repro.launch.serve.DecodeServer
+.install_params`; the end-to-end driver in `examples/async_rl.py`.
+"""
+from repro.publish.bus import Lease, Subscriber, WeightBus
+from repro.publish.publisher import (PUBLISH_TAG, PublishConfig,
+                                     Publisher, PublishUnsupportedError,
+                                     attach_publisher)
+
+__all__ = [
+    "Lease", "Subscriber", "WeightBus",
+    "PUBLISH_TAG", "PublishConfig", "Publisher",
+    "PublishUnsupportedError", "attach_publisher",
+]

@@ -1,0 +1,298 @@
+"""`WeightBus`: versioned, lease-pinned host snapshots of trainer params
+(ISSUE 10 — the publication half of the async-RL weight path).
+
+A trainer publishes a full parameter snapshot at (some) window
+boundaries; N colocated consumers (decode servers, evaluators) each pull
+the freshest one on their own clock. The bus is the hand-off point, and
+its contract extends ZenFlow's zero-sync rule to publication:
+
+  * **Publish never blocks and never waits for consumers.** `publish()`
+    copies the snapshot into pooled host buffers
+    (`transport.pool.BufferPool` — steady state is all pool hits, zero
+    fresh allocations once consumers keep up) and atomically replaces
+    the latest slot. There is no queue to fill up: a publish that lands
+    while consumers are slow simply supersedes the previous version.
+  * **Consumers pin a version with a lease.** `acquire()` (and the
+    `Subscriber` conveniences built on it) bumps a per-slot lease count;
+    the superseded slot's buffers recycle to the pool only once every
+    lease dropped — the same rule as the runtime's two-window
+    pending-upload hold (`ZenFlowRuntime._upload_bufs`): on XLA:CPU a
+    consumer's `device_put`/jit may ALIAS the numpy snapshot rather than
+    copy it, so a buffer may only be rewritten after its readers
+    provably let go.
+  * **Stale versions are dropped, never awaited.** A dead consumer holds
+    at most the leases it already took; it can pin old buffers (a pool
+    miss on the next publish — visible in `stats()`), but it can never
+    make `publish()` block or fail.
+  * **Snapshots are never torn.** `publish()` is handed a complete
+    host-resident tree copied at one exact window boundary (see
+    `publish.publisher.Publisher`); the bus installs it atomically under
+    its lock, so a consumer sees either all of version v or none of it.
+
+The double-buffered steady state: with one prompt consumer, version v's
+buffers are released when v+1 installs, so v+2 reuses them — two
+buffer generations in flight, exactly like the pending slot.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.transport.pool import BufferPool
+
+# pool `kind` key for publication buffers: keeps them out of any
+# free-list a channel-owned pool uses for staging scratch
+POOL_KIND = "publish"
+
+
+class _Slot:
+    """One published version: pooled buffers + read-only views."""
+
+    __slots__ = ("version", "bufs", "params", "leases", "retired")
+
+    def __init__(self, version: int, bufs: list, params: Any):
+        self.version = version
+        self.bufs = bufs          # writable pooled originals (for release)
+        self.params = params      # same tree, read-only views
+        self.leases = 0
+        self.retired = False      # superseded; recycle at lease count 0
+
+
+class Lease:
+    """A consumer's pin on one published version.
+
+    `params` is the snapshot pytree as **read-only numpy views** of the
+    bus's pooled buffers — zero-copy, valid until `release()` (also a
+    context manager). Consumers that install the views into jitted
+    programs must hold the lease while those programs may still read
+    them (see `Subscriber.install`)."""
+
+    __slots__ = ("_bus", "_slot", "released")
+
+    def __init__(self, bus: "WeightBus", slot: _Slot):
+        self._bus = bus
+        self._slot = slot
+        self.released = False
+
+    @property
+    def version(self) -> int:
+        return self._slot.version
+
+    @property
+    def params(self) -> Any:
+        return self._slot.params
+
+    def release(self) -> None:
+        """Drop the pin (idempotent). After the last lease on a
+        superseded version drops, its buffers recycle to the pool."""
+        if not self.released:
+            self.released = True
+            self._bus._release(self._slot)
+
+    def __enter__(self) -> "Lease":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.release()
+        return False
+
+
+class WeightBus:
+    """Versioned snapshot hand-off between one publisher and N
+    subscribers (module docstring for the contract)."""
+
+    def __init__(self, name: str = "weightbus",
+                 pool: Optional[BufferPool] = None):
+        self.name = name
+        self.pool = pool if pool is not None else BufferPool(name=name)
+        self._cv = threading.Condition()
+        self._latest: Optional[_Slot] = None
+        self._published = 0
+        self._superseded = 0      # versions retired by a newer publish
+        self._recycled = 0        # retired slots whose buffers returned
+        self._subscribers = 0
+        self._closed = False
+
+    # -- publisher side --------------------------------------------------
+    def publish(self, version: int, tree: Any) -> None:
+        """Install `tree` (host-resident, numpy-convertible leaves) as
+        the latest snapshot. Copies into pooled buffers outside the
+        lock, installs atomically, retires the superseded slot. Never
+        blocks on consumers."""
+        leaves, treedef = jax.tree.flatten(tree)
+        bufs, views = [], []
+        for leaf in leaves:
+            src = np.asarray(leaf)
+            buf = self.pool.acquire(src.shape, src.dtype, kind=POOL_KIND)
+            np.copyto(buf, src)
+            view = buf.view()
+            view.flags.writeable = False
+            bufs.append(buf)
+            views.append(view)
+        slot = _Slot(int(version), bufs, jax.tree.unflatten(treedef, views))
+        with self._cv:
+            if self._closed:
+                raise RuntimeError(f"{self.name}: publish after close()")
+            prev, self._latest = self._latest, slot
+            self._published += 1
+            if prev is not None:
+                prev.retired = True
+                self._superseded += 1
+                self._recycle_locked(prev)
+            self._cv.notify_all()
+
+    # -- consumer side ---------------------------------------------------
+    @property
+    def latest_version(self) -> int:
+        """Version of the latest snapshot (-1 before the first)."""
+        with self._cv:
+            return -1 if self._latest is None else self._latest.version
+
+    def acquire(self, min_version: Optional[int] = None) -> Optional[Lease]:
+        """Pin the latest snapshot (non-blocking). None when nothing is
+        published yet or the latest is older than `min_version`."""
+        with self._cv:
+            slot = self._latest
+            if slot is None or \
+                    (min_version is not None and slot.version < min_version):
+                return None
+            slot.leases += 1
+            return Lease(self, slot)
+
+    def wait_version(self, version: int,
+                     timeout: Optional[float] = None) -> bool:
+        """Consumer-side block until `latest_version >= version` (or the
+        bus closes). Returns whether the version arrived. Never called
+        by the publisher."""
+        with self._cv:
+            return self._cv.wait_for(
+                lambda: self._closed or (
+                    self._latest is not None
+                    and self._latest.version >= version),
+                timeout) and not self._closed
+
+    def subscribe(self) -> "Subscriber":
+        with self._cv:
+            self._subscribers += 1
+        return Subscriber(self)
+
+    # -- internals -------------------------------------------------------
+    def _release(self, slot: _Slot) -> None:
+        with self._cv:
+            slot.leases -= 1
+            self._recycle_locked(slot)
+
+    def _recycle_locked(self, slot: _Slot) -> None:
+        if slot.retired and slot.leases == 0 and slot.bufs:
+            for buf in slot.bufs:
+                self.pool.release(buf)
+            slot.bufs = []
+            self._recycled += 1
+
+    # -- lifecycle / introspection ---------------------------------------
+    def close(self) -> int:
+        """Retire the latest slot and drain the pool. Leases still held
+        by consumers keep their memory valid (the numpy references do),
+        but their buffers are flagged as pool leaks. Returns the leak
+        count; idempotent."""
+        with self._cv:
+            if self._closed:
+                return 0
+            self._closed = True
+            if self._latest is not None:
+                self._latest.retired = True
+                self._recycle_locked(self._latest)
+                self._latest = None
+            self._cv.notify_all()
+        return self.pool.drain()
+
+    def stats(self) -> dict:
+        with self._cv:
+            latest = self._latest
+            return {
+                "name": self.name,
+                "published": self._published,
+                "superseded": self._superseded,
+                "recycled": self._recycled,
+                "latest_version": -1 if latest is None else latest.version,
+                "active_leases": 0 if latest is None else latest.leases,
+                "subscribers": self._subscribers,
+                "pool": self.pool.stats(),
+            }
+
+
+class Subscriber:
+    """One consumer's cursor on a `WeightBus`: `poll()` (non-blocking),
+    `latest()` / `wait_for(version)` (consumer-side blocking), and
+    `install()` — fetch-and-apply with the lease lifetime managed so
+    zero-copy installed views stay valid until the next install."""
+
+    def __init__(self, bus: WeightBus):
+        self.bus = bus
+        self._seen = -1           # newest version this cursor returned
+        self._held: Optional[Lease] = None   # pin backing the installed views
+
+    def poll(self) -> Optional[Lease]:
+        """The latest snapshot iff it is newer than the last one this
+        subscriber returned; None otherwise. Never blocks."""
+        lease = self.bus.acquire(min_version=self._seen + 1)
+        if lease is not None:
+            self._seen = lease.version
+        return lease
+
+    def latest(self, timeout: Optional[float] = None) -> Lease:
+        """The latest snapshot, blocking (consumer-side) until one
+        exists. Raises TimeoutError."""
+        if not self.bus.wait_version(0, timeout):
+            raise TimeoutError(
+                f"{self.bus.name}: no snapshot published within {timeout}s")
+        lease = self.bus.acquire()
+        assert lease is not None
+        self._seen = max(self._seen, lease.version)
+        return lease
+
+    def wait_for(self, version: int,
+                 timeout: Optional[float] = None) -> Lease:
+        """Block (consumer-side) until a snapshot with
+        `version >= version` is published, then pin it."""
+        if not self.bus.wait_version(version, timeout):
+            raise TimeoutError(
+                f"{self.bus.name}: version {version} not published "
+                f"within {timeout}s (latest {self.bus.latest_version})")
+        lease = self.bus.acquire(min_version=version)
+        assert lease is not None
+        self._seen = max(self._seen, lease.version)
+        return lease
+
+    def install(self, target) -> Optional[int]:
+        """Poll and, on a fresh version, install it into `target` —
+        either an object with ``install_params(params, version=...)``
+        (e.g. `launch.serve.DecodeServer`) or a ``fn(params, version)``
+        callable. The lease is held until the NEXT successful install:
+        the installer may alias the pooled snapshot memory (XLA:CPU
+        does), so the previous pin may only drop once the target has
+        switched off it (DecodeServer settles in-flight ticks inside
+        `install_params` before swapping). Returns the installed
+        version, or None when nothing new was available."""
+        lease = self.poll()
+        if lease is None:
+            return None
+        installer: Callable = getattr(target, "install_params", target)
+        try:
+            installer(lease.params, version=lease.version)
+        except BaseException:
+            lease.release()
+            raise
+        prev, self._held = self._held, lease
+        if prev is not None:
+            prev.release()
+        return lease.version
+
+    def close(self) -> None:
+        """Drop any lease held on behalf of the last install."""
+        if self._held is not None:
+            self._held.release()
+            self._held = None

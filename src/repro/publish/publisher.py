@@ -1,0 +1,252 @@
+"""`Publisher`: stall-free window-boundary snapshots from a live
+ZenFlow runtime onto a `WeightBus` (ISSUE 10).
+
+The trainer-side half of weight publication. A `Publisher` registers as
+a runtime boundary hook (`ZenFlowRuntime.add_boundary_hook`) and, at
+each selected window boundary:
+
+  1. **stages** the current params through the job's own
+     `OffloadChannel` under the ``"publish"`` trafficwatch tag — an
+     asynchronous `device_put` onto host memory, so the snapshot bytes
+     are attributed (channel/tier/job) and quota-charged exactly like
+     any other tenant traffic (`transport.QuotaChannel` sees the same
+     `stage()` call; exceeding the job's budget raises the same typed
+     `QuotaExceededError` a training transfer would);
+  2. **hands the staged handle to a worker thread** which fetches it,
+     materializes it to numpy (the d2h wait lands HERE, on the
+     publisher's thread — never the trainer's), and publishes it to the
+     bus.
+
+Zero-sync contract: the hook performs no blocking host read and no
+wait. If the worker still has a snapshot in flight, the OLDER one is
+dropped (latest wins, counted in `stats()["dropped"]`) — a slow or dead
+consumer chain degrades publication freshness, never trainer
+throughput.
+
+Torn-read safety: the hook runs at the exact point `step()` declares a
+window boundary, so `ctx["params"]` IS the boundary state. The staged
+copy must be independent of the live params before the next step
+donates them; channels that stage onto a real host memory kind copy by
+construction, and for identity-staging channels (``stage_payloads=False``
+or platforms without a host kind) the publisher inserts an async jitted
+device copy itself — either way the worker later reads an immutable
+snapshot, bitwise-equal to the boundary state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.publish.bus import WeightBus
+from repro.telemetry import jobs as jobscope
+
+# the trafficwatch tag every published byte is recorded under
+# (registered in telemetry.trafficwatch.KNOWN_TAGS)
+PUBLISH_TAG = "publish"
+
+
+class PublishUnsupportedError(RuntimeError):
+    """Raised when attaching a publisher to a backend with no window
+    boundary to hook (only the async/spmd `ZenFlowRuntime` has one)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PublishConfig:
+    # publish every N-th window boundary (1 = every window)
+    every_windows: int = 1
+    # warmup windows are 1-step and land synchronously; publishing them
+    # is usually noise, but tests may want the full trace
+    include_warmup: bool = False
+
+
+class Publisher:
+    """Boundary-hook publisher: stage on the trainer thread, fetch /
+    materialize / publish on a private worker thread (module
+    docstring)."""
+
+    def __init__(self, bus: WeightBus, channel,
+                 cfg: Optional[PublishConfig] = None):
+        self.bus = bus
+        self.channel = channel
+        self.cfg = cfg or PublishConfig()
+        if self.cfg.every_windows < 1:
+            raise ValueError("PublishConfig.every_windows must be >= 1")
+        self._lock = threading.Lock()
+        self._windows = 0
+        self._skipped = 0         # warmup / every_windows cadence skips
+        self._dropped = 0         # superseded while the worker was busy
+        self._errors = 0
+        self._last_error: Optional[BaseException] = None
+        self._last_boundary = -1  # newest boundary step the hook saw
+        self._s_eff = 1
+        self._runtime = None      # set by attach()
+        self._paused = False      # pause()/resume() A/B state
+        # depth-1 inbox: one snapshot staged ahead of the one the worker
+        # is materializing — a full inbox means the consumer side is
+        # behind, and the STALE queued version is replaced (never the
+        # trainer's time)
+        self._inbox: queue.Queue = queue.Queue(maxsize=1)
+        # device-side async copy for identity-staging channels (traced
+        # once per tree structure; only used when stage() didn't copy)
+        self._device_copy = jax.jit(
+            lambda t: jax.tree.map(jnp.copy, t))
+        self._job = jobscope.current()
+        self._worker = threading.Thread(
+            target=self._run, daemon=True, name=f"publish-{bus.name}")
+        self._worker.start()
+        self._closed = False
+
+    # -- trainer thread --------------------------------------------------
+    def on_window_boundary(self, ctx: dict) -> None:
+        """Runtime boundary hook: non-blocking snapshot + enqueue."""
+        self._s_eff = max(int(ctx.get("s_eff", self._s_eff)), 1)
+        if ctx.get("warmup") and not self.cfg.include_warmup:
+            with self._lock:
+                self._skipped += 1
+            return
+        self._windows += 1
+        if (self._windows - 1) % self.cfg.every_windows:
+            with self._lock:
+                self._skipped += 1
+            return
+        version = int(ctx["step"])
+        params = ctx["params"]
+        staged = self.channel.stage(params, tag=PUBLISH_TAG)
+        # identity-staging channel (no host residency hop): the staged
+        # tree still aliases the live params, which the next step
+        # DONATES — snapshot with an async device copy before handing off
+        orig = jax.tree.leaves(params)
+        if any(a is b for a, b in zip(jax.tree.leaves(staged), orig)):
+            staged = self._device_copy(staged)
+        with self._lock:
+            self._last_boundary = version
+        while True:
+            try:
+                self._inbox.put_nowait((version, staged))
+                return
+            except queue.Full:
+                # latest wins: evict the stale queued snapshot (its
+                # bytes were already honestly accounted at stage time)
+                try:
+                    self._inbox.get_nowait()
+                    with self._lock:
+                        self._dropped += 1
+                except queue.Empty:
+                    pass
+
+    # -- worker thread ---------------------------------------------------
+    def _run(self) -> None:
+        # publication is tenant work: fetch-side transfers (e.g. a spill
+        # restore) must attribute to the owning job no matter which
+        # thread runs them — same capture-and-reenter as _HostWorker
+        with jobscope.scope(self._job):
+            while True:
+                item = self._inbox.get()
+                if item is None:
+                    return
+                version, staged = item
+                try:
+                    payload = self.channel.fetch(staged)
+                    # the d2h wait: np.asarray blocks until each staged
+                    # leaf materialized — on THIS thread, never the
+                    # trainer's
+                    host = jax.tree.map(np.asarray, payload)
+                    self.bus.publish(version, host)
+                except BaseException as e:
+                    # a failed publication must never reach the trainer;
+                    # it is surfaced through stats() and the bus simply
+                    # keeps its previous latest
+                    with self._lock:
+                        self._errors += 1
+                        self._last_error = e
+
+    # -- wiring ----------------------------------------------------------
+    def attach(self, runtime) -> "Publisher":
+        """Register on a `ZenFlowRuntime`'s boundary hooks."""
+        runtime.add_boundary_hook(self.on_window_boundary)
+        self._runtime = runtime
+        return self
+
+    def detach(self) -> None:
+        if self._runtime is not None:
+            self._runtime.remove_boundary_hook(self.on_window_boundary)
+            self._runtime = None
+
+    def pause(self) -> None:
+        """Unhook from the runtime WITHOUT forgetting it, so `resume()`
+        can re-hook — an A/B lever for measuring publication overhead
+        (benchmarks/bench_publish.py). Call between steps only; the
+        hook list is read by the trainer thread inside `step()`."""
+        if self._runtime is not None and not self._paused:
+            self._runtime.remove_boundary_hook(self.on_window_boundary)
+            self._paused = True
+
+    def resume(self) -> None:
+        if self._runtime is not None and self._paused:
+            self._runtime.add_boundary_hook(self.on_window_boundary)
+            self._paused = False
+
+    def close(self) -> None:
+        """Detach, stop the worker (publishing anything already queued),
+        and close the bus. Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self.detach()
+        self._inbox.put(None)
+        self._worker.join(timeout=10)
+        self.bus.close()
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> dict:
+        """Publication counters + the staleness metric: how many windows
+        the bus's latest snapshot lags the newest boundary the trainer
+        reached (0 = perfectly fresh)."""
+        with self._lock:
+            last_boundary = self._last_boundary
+            out = {
+                "windows_seen": self._windows,
+                "skipped": self._skipped,
+                "dropped": self._dropped,
+                "errors": self._errors,
+                "last_error": repr(self._last_error)
+                if self._last_error is not None else None,
+                "last_boundary_step": last_boundary,
+            }
+        latest = self.bus.latest_version
+        lag_steps = max(last_boundary - max(latest, -1), 0) \
+            if last_boundary >= 0 else 0
+        out["published_version"] = latest
+        out["lag_windows"] = lag_steps / float(self._s_eff)
+        out["bus"] = self.bus.stats()
+        return out
+
+
+def attach_publisher(target, bus: Optional[WeightBus] = None,
+                     cfg: Optional[PublishConfig] = None,
+                     name: Optional[str] = None) -> Publisher:
+    """Attach a `Publisher` to a live trainer — a `ZenFlowRuntime`, or
+    an `Engine` whose backend drives one (async/spmd). Creates the bus
+    when none is given. Raises `PublishUnsupportedError` for backends
+    without a window boundary (sync/fused/baseline)."""
+    runtime = target
+    backend = getattr(target, "backend", None)
+    if backend is not None:
+        runtime = getattr(backend, "rt", None)
+        if runtime is None:
+            raise PublishUnsupportedError(
+                f"backend {type(backend).__name__} drives no ZenFlow "
+                f"runtime: weight publication hooks the async window "
+                f"boundary (use backend='async' or 'spmd')")
+    if not hasattr(runtime, "add_boundary_hook"):
+        raise PublishUnsupportedError(
+            f"{type(runtime).__name__} exposes no add_boundary_hook")
+    if bus is None:
+        bus = WeightBus(name=name or "weightbus")
+    return Publisher(bus, runtime.channel, cfg).attach(runtime)

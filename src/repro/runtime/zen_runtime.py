@@ -384,6 +384,10 @@ class ZenFlowRuntime:
         #   accumulate, which blocks on its staged output).
         self._upload_pool = getattr(self.channel, "pool", None) \
             or BufferPool(name="runtime")
+        # window-boundary observer hooks (ISSUE 10 weight publication):
+        # called at every boundary with the exact boundary param state —
+        # see add_boundary_hook for the contract
+        self._boundary_hooks: list[Callable[[dict], None]] = []
         self._build_programs()
         self.worker: Optional[_HostWorker] = None
         self.params = None
@@ -535,6 +539,28 @@ class ZenFlowRuntime:
                 dict(self.dstate),
                 lambda: zen_spmd.zen_device_state_init(
                     self.model.param_specs(), self.zcfg, self.segs))
+
+    # ------------------------------------------------------------------
+    def add_boundary_hook(self, fn: Callable[[dict], None]) -> None:
+        """Register a window-boundary observer (ISSUE 10): called from
+        `step()` at every boundary — warmup included, flagged — with
+        ``{"step", "params", "s_eff", "window_time_s", "warmup"}``.
+        `params` is the live post-boundary param pytree (the exact
+        window-boundary state); hooks must treat it as read-only, must
+        not hold a reference past the call (the next step DONATES those
+        buffers — snapshot through a channel stage or a device copy, as
+        `repro.publish.Publisher` does), and must not block: hook time
+        is trainer time. Distinct from the CHANNEL's
+        `on_window_boundary` control hook above, which may retune the
+        transport; observers only watch."""
+        self._boundary_hooks.append(fn)
+
+    def remove_boundary_hook(self, fn: Callable[[dict], None]) -> None:
+        """Unregister a boundary observer (no-op when absent)."""
+        try:
+            self._boundary_hooks.remove(fn)
+        except ValueError:
+            pass
 
     # ------------------------------------------------------------------
     def init(self, key):
@@ -762,6 +788,21 @@ class ZenFlowRuntime:
                 nw = decision.get("wire_dtype")
                 if nw and nw != self.zcfg.wire_dtype and allow_wire:
                     self._rebind_wire(nw)
+            # observer hooks (add_boundary_hook): `params` here IS the
+            # exact boundary state — any warmup landing above already
+            # folded in, and nothing mutates params again this step — so
+            # a hook that snapshots it (the weight publisher) hands
+            # consumers a bitwise window-boundary image, never a torn
+            # mid-window mix. Hooks must not block (the zero-sync
+            # contract extends to them; syncwatch-audited in tests).
+            for bh in self._boundary_hooks:
+                bh({
+                    "step": t,
+                    "params": self.params,
+                    "s_eff": self._s_eff,
+                    "window_time_s": now - self._window_t0,
+                    "warmup": warm,
+                })
             self._window_t0 = now
 
         out = dict(metrics)

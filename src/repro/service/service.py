@@ -124,6 +124,7 @@ class JobHandle:
         self._callbacks = tuple(callbacks)
         self._engine: Optional[Engine] = None
         self._loader = None
+        self._publisher = None        # lazily built by publish()
         self._cmd: queue.Queue = queue.Queue()
         self._ready = threading.Event()
         self._close_fut: Optional[JobFuture] = None
@@ -163,6 +164,17 @@ class JobHandle:
         finished (never fails — resolves to the job state)."""
         return self._enqueue("barrier", None)
 
+    def publish(self, cfg=None) -> JobFuture:
+        """Queue weight-publication setup (ISSUE 10): attach a
+        `repro.publish.Publisher` to this job's runtime (idempotent —
+        one bus per job) and resolve to a fresh
+        `repro.publish.Subscriber` on it. Published bytes stage through
+        the job's own quota-wrapped channel under the "publish" tag, so
+        they are attributed to this job and charged against its
+        transport quota exactly like training traffic. `cfg` is a
+        `publish.PublishConfig` (only honored by the first call)."""
+        return self._enqueue("publish", cfg)
+
     def close(self, wait: bool = True) -> JobFuture:
         """Queue teardown (idempotent; the job slot frees on completion)."""
         with self._close_lock:
@@ -177,6 +189,12 @@ class JobHandle:
     @property
     def closed(self) -> bool:
         return self.state == "closed"
+
+    @property
+    def publisher(self):
+        """The job's `repro.publish.Publisher` (None until `publish()`
+        ran) — read-only introspection, e.g. `publisher.stats()`."""
+        return self._publisher
 
     def __enter__(self) -> "JobHandle":
         return self
@@ -267,6 +285,8 @@ class JobHandle:
         if cmd == "restore":
             self._engine.load_state_dict(arg)
             return None
+        if cmd == "publish":
+            return self._cmd_publish(arg)
         raise ValueError(f"unknown job command {cmd!r}")
 
     def _cmd_train(self, steps: int) -> dict:
@@ -294,8 +314,22 @@ class JobHandle:
         return {"losses": losses, "steps": eng.step_count,
                 "steady_steps": steady_steps, "steady_syncs": steady_syncs}
 
+    def _cmd_publish(self, cfg):
+        # runs on the driver thread inside this job's scope, so the
+        # publisher's worker thread inherits it (captured at
+        # construction) and every fetch-side byte attributes to the job
+        from repro.publish import attach_publisher
+        if self._publisher is None:
+            self._publisher = attach_publisher(
+                self._engine, cfg=cfg, name=f"weightbus-{self.name}")
+        return self._publisher.bus.subscribe()
+
     def _teardown(self):
         try:
+            if self._publisher is not None:
+                # stop publication before the engine: the worker may
+                # hold staged handles on the engine's channel
+                self._publisher.close()
             if self._engine is not None:
                 self._engine.close()      # idempotent
         finally:
@@ -384,6 +418,22 @@ class ZenService:
             return model
 
     # -- service-wide control -------------------------------------------
+    def publish(self, job_name: str, cfg=None):
+        """Open weight publication on a running job and return a
+        `repro.publish.Subscriber` bound to its bus (ISSUE 10). Blocks
+        only until the job's driver processes the setup command — the
+        job's TRAINING loop is never blocked (publication is a
+        non-blocking boundary hook). Raises KeyError for unknown jobs
+        and `publish.PublishUnsupportedError` for backends without a
+        window boundary."""
+        with self._cv:
+            handle = self._handles.get(job_name)
+        if handle is None:
+            raise KeyError(
+                f"no active job {job_name!r} "
+                f"(active: {sorted(self.jobs())})")
+        return handle.publish(cfg).get()
+
     def jobs(self) -> dict:
         with self._cv:
             return dict(self._handles)

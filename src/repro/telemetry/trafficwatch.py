@@ -57,16 +57,67 @@ Contract:
   * Counters are process-global and lock-guarded (driver + host worker
     threads both record); `reset()` zeroes them (benchmarks call it after
     warmup/compile).
+  * **Strict mode** (ISSUE 10): `set_strict(True)` (or the
+    `strict()` context manager) turns silent attribution gaps into
+    errors — a `record()` whose tag is not in the registered set
+    (`KNOWN_TAGS` + `register_tag()`), or that names no channel or no
+    tier (bytes that would land in `unattributed_bytes`), raises
+    ValueError *before* touching any counter. Repo code paths always
+    attribute fully, so strict mode is free for them; tests and
+    benchmarks enable it so a future transfer path that forgets its
+    attribution fails loudly instead of leaking into
+    `unattributed_bytes`. `reset()` does NOT clear strict mode.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 from collections import Counter
-from typing import Any, Optional
+from typing import Any, Iterator, Optional
 
 import jax
 
 from repro.telemetry import jobs as _jobs
+
+# every tag repo code records transfers under; see README's
+# byte-attribution table. New transfer paths register theirs here (or
+# via register_tag) so strict mode stays exhaustive.
+KNOWN_TAGS = {
+    "host_bound",       # per-step complement-gradient stream (runtime)
+    "pending_upload",   # host->device pending-row uploads (runtime)
+    "spill_write",      # SpillChannel file-tier writes
+    "spill_read",       # SpillChannel file-tier reads
+    "stage_to_host",    # direct offload.stage_to_host default
+    "upload",           # direct OffloadChannel.upload default
+    "publish",          # weight-publication snapshots (repro.publish)
+}
+
+_strict = False
+
+
+def set_strict(enabled: bool) -> None:
+    """Enable/disable strict attribution (module docstring). Process-
+    global, like the counters; survives `reset()`."""
+    global _strict
+    _strict = bool(enabled)
+
+
+@contextlib.contextmanager
+def strict() -> Iterator[None]:
+    """Scoped `set_strict(True)` restoring the previous setting."""
+    global _strict
+    prev = _strict
+    _strict = True
+    try:
+        yield
+    finally:
+        _strict = prev
+
+
+def register_tag(tag: str) -> None:
+    """Admit a new transfer tag to the strict-mode registry (document it
+    in README's byte-attribution table when it ships)."""
+    KNOWN_TAGS.add(tag)
 
 _lock = threading.Lock()
 _bytes: Counter = Counter()
@@ -110,6 +161,18 @@ def record(tag: str, nbytes: int, transfers: int = 1,
     tier they landed in, and (when a `telemetry.jobs.scope` is active
     in the calling thread) the tenant job that caused them."""
     global _job_unattributed, _seen_job_scope
+    if _strict:
+        if tag not in KNOWN_TAGS:
+            raise ValueError(
+                f"trafficwatch strict mode: unknown transfer tag {tag!r} "
+                f"(register it with trafficwatch.register_tag() and add "
+                f"it to README's byte-attribution table)")
+        if channel is None or tier is None:
+            raise ValueError(
+                f"trafficwatch strict mode: transfer {tag!r} names no "
+                f"{'channel' if channel is None else 'tier'} — these "
+                f"bytes would land in unattributed_bytes (route them "
+                f"through an OffloadChannel or pass channel=/tier=)")
     job = _jobs.current()
     with _lock:
         _bytes[tag] += int(nbytes)
@@ -148,6 +211,10 @@ def alloc(nbytes: int, channel: Optional[str] = None) -> None:
     """Record one fresh host staging-buffer allocation (producer:
     `transport.pool.BufferPool` on a miss). Pinned allocation is the
     serializing cost on real hardware — the steady-state gate is 0."""
+    if _strict and channel is None:
+        raise ValueError(
+            "trafficwatch strict mode: allocation names no channel — "
+            "pass channel= (BufferPool does) so it stays attributable")
     with _lock:
         _allocs[channel or "unattributed"] += 1
         _alloc_bytes[channel or "unattributed"] += int(nbytes)

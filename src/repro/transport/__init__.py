@@ -104,7 +104,8 @@ a different compression wire) mirrors backends:
         name = "gds"
         ...
     register_transport("gds", GdsChannel)
-    eng = Engine.from_config(cfg, zcfg, backend="async", transport="gds")
+    eng = Engine.from_spec(JobSpec(arch="llama2-7b", backend="async",
+                                   transport="gds"))
 
 Factories are called `factory(zcfg, **kw) -> channel`; `zcfg` (a
 `ZenFlowConfig` or None) selects the default wire codec.

@@ -1,0 +1,476 @@
+"""Weight publication (ISSUE 10): the WeightBus lease/recycle contract,
+the publisher's extension of the zero-sync rule (0 trainer syncs with an
+active subscriber, a stalled consumer can never delay a step), bitwise
+window-boundary consistency against a recorded trace, the ZenService
+publish API with per-job attribution + quota charging, and trafficwatch
+strict mode."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.zen_optimizer import ZenFlowConfig
+from repro.data import make_train_stream
+from repro.distributed.sharding import DEFAULT_RULES
+from repro.models import build_model
+from repro.publish import (PublishConfig, Publisher,
+                           PublishUnsupportedError, Subscriber, WeightBus,
+                           attach_publisher)
+from repro.runtime import RuntimeConfig, ZenFlowRuntime
+from repro.telemetry import syncwatch, trafficwatch
+
+
+# ---------------------------------------------------------------------------
+# WeightBus: leases, recycling, pooled steady state
+
+
+def _tree(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((4, 3)).astype(np.float32),
+            "b": rng.standard_normal((3,)).astype(np.float32)}
+
+
+def test_bus_publish_acquire_lease_recycle():
+    bus = WeightBus(name="t")
+    assert bus.latest_version == -1
+    assert bus.acquire() is None
+
+    t1 = _tree(1)
+    bus.publish(5, t1)
+    lease = bus.acquire()
+    assert lease.version == 5
+    np.testing.assert_array_equal(lease.params["w"], t1["w"])
+    # snapshots are read-only views of pooled memory
+    with pytest.raises(ValueError):
+        lease.params["w"][0, 0] = 0.0
+
+    # superseding publish retires v5 but the held lease pins its buffers
+    bus.publish(6, _tree(2))
+    np.testing.assert_array_equal(lease.params["w"], t1["w"])
+    st = bus.stats()
+    assert st["published"] == 2 and st["superseded"] == 1
+    assert st["recycled"] == 0            # lease still out
+    lease.release()
+    assert bus.stats()["recycled"] == 1   # last lease dropped -> recycled
+    lease.release()                       # idempotent
+
+    # double-buffered steady state: two buffer generations, then all hits
+    bus.publish(7, _tree(3))
+    pool = bus.pool.stats()
+    assert pool["hits"] > 0
+    assert pool["misses"] == 4            # 2 generations x 2 leaves
+    bus.close()
+
+
+def test_bus_acquire_min_version_and_wait():
+    bus = WeightBus(name="t")
+    bus.publish(3, _tree(0))
+    assert bus.acquire(min_version=4) is None
+    with bus.acquire(min_version=3) as lease:
+        assert lease.version == 3
+    assert bus.wait_version(3, timeout=0.1)
+    assert not bus.wait_version(4, timeout=0.05)   # never awaited forever
+    bus.close()
+
+
+def test_subscriber_poll_latest_wait_for():
+    bus = WeightBus(name="t")
+    sub = bus.subscribe()
+    assert sub.poll() is None
+    with pytest.raises(TimeoutError):
+        sub.latest(timeout=0.05)
+
+    bus.publish(1, _tree(1))
+    lease = sub.poll()
+    assert lease.version == 1
+    lease.release()
+    assert sub.poll() is None             # nothing newer than last seen
+
+    bus.publish(2, _tree(2))
+    with sub.wait_for(2, timeout=1.0) as lease:
+        assert lease.version == 2
+    with pytest.raises(TimeoutError):
+        sub.wait_for(99, timeout=0.05)
+    with sub.latest(timeout=0.1) as lease:    # latest re-pins the newest
+        assert lease.version == 2
+    bus.close()
+
+
+def test_subscriber_install_holds_lease_until_next_install():
+    """`install` aliases pooled snapshot memory into the target, so the
+    pin must survive until the NEXT install swaps the target off it."""
+    bus = WeightBus(name="t")
+    sub = bus.subscribe()
+    seen = []
+    target = lambda params, version: seen.append(  # noqa: E731
+        (version, float(params["w"][0, 0])))
+
+    bus.publish(1, _tree(1))
+    assert sub.install(target) == 1
+    assert sub.install(target) is None    # no fresh version -> no call
+    bus.publish(2, _tree(2))
+    assert bus.stats()["recycled"] == 0   # v1 pinned by the held lease
+    assert sub.install(target) == 2
+    assert bus.stats()["recycled"] == 1   # v1's pin dropped on install(v2)
+    assert [v for v, _ in seen] == [1, 2]
+    sub.close()
+    bus.close()
+
+
+def test_bus_close_flags_held_leases_as_pool_leaks():
+    bus = WeightBus(name="t")
+    bus.publish(1, _tree(1))
+    lease = bus.acquire()
+    leaks = bus.close()
+    assert leaks == 2                     # 2 leaves still pinned
+    # the consumer's memory stays valid (numpy refs), just not recycled
+    assert lease.params["w"].shape == (4, 3)
+    with pytest.raises(RuntimeError):
+        bus.publish(2, _tree(2))
+
+
+# ---------------------------------------------------------------------------
+# Runtime-level contract: zero-sync publication, stall-immunity, bitwise
+
+
+def _mk_runtime(zcfg, transport=None):
+    cfg = reduced_config(get_config("llama2-7b"))
+    model = build_model(cfg)
+    rt = ZenFlowRuntime(model, zcfg, DEFAULT_RULES, RuntimeConfig(),
+                        transport=transport)
+    rt.init(jax.random.PRNGKey(0))
+    loader = make_train_stream(cfg.vocab, 32, 8)
+    return rt, lambda: {k: jnp.asarray(v)
+                        for k, v in loader.next_batch().items()}
+
+
+def _zcfg(S=4, warmup=1):
+    return ZenFlowConfig(topk_ratio=0.1, update_interval=S,
+                         refresh_interval=4 * S, warmup_steps=warmup,
+                         lr=1e-3, use_kernels="never")
+
+
+def test_publishing_adds_zero_steady_syncs_with_active_consumer():
+    """Non-boundary steps record 0 forced host syncs while a publisher
+    is attached and a consumer thread concurrently polls + copies."""
+    rt, batch = _mk_runtime(_zcfg())
+    pub = attach_publisher(rt)
+    sub = pub.bus.subscribe()
+    stop = threading.Event()
+
+    def consume():
+        while not stop.is_set():
+            lease = sub.poll()
+            if lease is not None:
+                _ = [np.array(x) for x in jax.tree.leaves(lease.params)]
+                lease.release()
+            time.sleep(0.001)
+
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    try:
+        for _ in range(3):
+            rt.step(batch())              # compile + warmup
+        syncwatch.reset()
+        steady = 0
+        for _ in range(12):
+            before = syncwatch.total()
+            m = rt.step(batch())
+            if not m["boundary"]:
+                steady += 1
+                assert syncwatch.total() - before == 0, syncwatch.counts()
+        assert steady > 0
+        assert pub.bus.latest_version > 0     # publication actually ran
+    finally:
+        stop.set()
+        t.join(timeout=5)
+        pub.close()
+        rt.close()
+
+
+def test_stalled_consumer_never_delays_trainer():
+    """The bus is blocked for the WHOLE run (a dead consumer chain): if
+    the trainer ever waited on publication, this would deadlock. Stale
+    queued snapshots are dropped, never awaited."""
+    rt, batch = _mk_runtime(_zcfg(S=2, warmup=1))
+    pub = attach_publisher(rt, cfg=PublishConfig(include_warmup=True))
+    release = threading.Event()
+    real_publish = pub.bus.publish
+
+    def stalled_publish(version, tree):
+        release.wait()                    # worker thread parks here
+        real_publish(version, tree)
+
+    pub.bus.publish = stalled_publish
+    try:
+        syncwatch.reset()
+        steady_syncs = 0
+        for _ in range(12):               # many boundaries, all published
+            before = syncwatch.total()
+            m = rt.step(batch())
+            if not m["boundary"]:
+                steady_syncs += syncwatch.total() - before
+        assert steady_syncs == 0
+        assert pub.stats()["dropped"] >= 1    # latest-wins eviction ran
+    finally:
+        release.set()
+        pub.close()
+        rt.close()
+
+
+def _run_traced(rt, batch, pub, steps=14):
+    """Drive `steps` steps recording the exact boundary param state per
+    version (async device copies — no forced syncs) alongside a consumer
+    thread that snapshots every version it manages to observe."""
+    trace = {}
+    rt.add_boundary_hook(
+        lambda ctx: trace.__setitem__(
+            ctx["step"], jax.tree.map(jnp.array, ctx["params"])))
+    observed = {}
+    sub = pub.bus.subscribe()
+    stop = threading.Event()
+
+    def consume():
+        while not stop.is_set():
+            lease = sub.poll()
+            if lease is not None:
+                observed[lease.version] = [
+                    np.array(x) for x in jax.tree.leaves(lease.params)]
+                lease.release()
+            time.sleep(0.0005)
+
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    for _ in range(steps):
+        rt.step(batch())
+    rt.flush()
+    # let the worker drain the final snapshot, then the consumer see it
+    deadline = time.time() + 10
+    while time.time() < deadline \
+            and pub.bus.latest_version not in observed:
+        time.sleep(0.005)
+    stop.set()
+    t.join(timeout=5)
+    return trace, observed
+
+
+def _assert_bitwise(trace, observed):
+    assert observed, "consumer never observed a snapshot"
+    for version, leaves in observed.items():
+        assert version in trace, f"published {version} not a boundary"
+        ref = [np.asarray(x) for x in jax.tree.leaves(trace[version])]
+        for a, b in zip(ref, leaves):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_installed_snapshots_bitwise_equal_boundary_trace():
+    """Every snapshot a consumer observes is bitwise-equal to the
+    trainer's params at that exact window boundary — never torn."""
+    rt, batch = _mk_runtime(_zcfg(S=3, warmup=1))
+    pub = attach_publisher(rt, cfg=PublishConfig(include_warmup=True))
+    try:
+        trace, observed = _run_traced(rt, batch, pub)
+        _assert_bitwise(trace, observed)
+        assert len(observed) >= 2
+    finally:
+        pub.close()
+        rt.close()
+
+
+def test_bitwise_with_identity_staging_channel():
+    """A channel whose stage() is the identity (stage_payloads=False)
+    would hand the publisher the LIVE param buffers — which the next
+    step donates. The publisher must snapshot via its own device copy;
+    this is the donation-hazard regression test."""
+    from repro.transport.host import HostChannel
+    rt, batch = _mk_runtime(_zcfg(S=3, warmup=1),
+                            transport=HostChannel(stage_payloads=False))
+    pub = attach_publisher(rt, cfg=PublishConfig(include_warmup=True))
+    try:
+        trace, observed = _run_traced(rt, batch, pub)
+        _assert_bitwise(trace, observed)
+    finally:
+        pub.close()
+        rt.close()
+
+
+def test_attach_publisher_rejects_boundary_less_backends():
+    from repro.engine import Engine, JobSpec
+    spec = JobSpec(name="sync-job", arch="llama2-7b", reduced=True,
+                   backend="sync",
+                   zcfg=dict(topk_ratio=0.1, update_interval=2,
+                             refresh_interval=8, lr=1e-3,
+                             use_kernels="never"))
+    with Engine.from_spec(spec) as eng:
+        eng.init(jax.random.PRNGKey(0))
+        with pytest.raises(PublishUnsupportedError):
+            attach_publisher(eng)
+
+
+def test_publish_config_validation_and_cadence():
+    with pytest.raises(ValueError):
+        Publisher(WeightBus(), channel=None,
+                  cfg=PublishConfig(every_windows=0))
+    rt, batch = _mk_runtime(_zcfg(S=2, warmup=1))
+    pub = attach_publisher(rt, cfg=PublishConfig(every_windows=2,
+                                                 include_warmup=False))
+    try:
+        for _ in range(13):
+            rt.step(batch())
+        rt.flush()
+        st = pub.stats()
+        # warmup boundaries skipped; every second window published
+        assert st["skipped"] >= 1
+        assert st["windows_seen"] >= 2
+        assert pub.bus.stats()["published"] <= (st["windows_seen"] + 1) // 2
+    finally:
+        pub.close()
+        rt.close()
+
+
+# ---------------------------------------------------------------------------
+# Service integration: per-job attribution, quota charging, teardown
+
+
+def _spec(name="pub-job", quota=None, backend="async"):
+    from repro.engine import JobSpec
+    return JobSpec(name=name, arch="llama2-7b", reduced=True,
+                   backend=backend, quota_bytes=quota,
+                   zcfg=dict(topk_ratio=0.1, update_interval=2,
+                             refresh_interval=8, warmup_steps=1,
+                             lr=1e-3, use_kernels="never"),
+                   rcfg=dict(straggler_window_extension=False),
+                   batch_size=4, seq_len=32, seed=0)
+
+
+def test_service_publish_attributed_and_quota_charged():
+    from repro.service import ServiceConfig, ZenService
+    trafficwatch.reset()
+    with ZenService(ServiceConfig(max_jobs=1)) as svc:
+        handle = svc.submit(_spec())
+        handle.wait_ready()
+        sub = svc.publish("pub-job")
+        res = handle.train(10).get()
+        assert res["steady_syncs"] == 0       # zero-sync with publish ON
+        with sub.wait_for(0, timeout=30) as lease:
+            assert lease.version >= 0
+        pub = handle.publisher
+        assert pub is not None
+        c = trafficwatch.counts()
+        ledger_used = svc.ledger.stats()["used"]["pub-job"]
+    publish_bytes = c["by_tag"].get("publish", 0)
+    assert publish_bytes > 0
+    # 100% of publish bytes attribute to the owning job's channel...
+    assert c["by_job"]["pub-job"] == c["by_channel"]["job:pub-job"]
+    assert c["job_unattributed_bytes"] == 0
+    assert c["unattributed_bytes"] == 0
+    # ...and are charged against the job's transport quota like any
+    # tenant traffic (ledger total covers train + publish bytes)
+    assert ledger_used == c["by_job"]["pub-job"]
+    # shutdown tore the publisher down (idempotent close)
+    pub.close()
+
+
+def test_service_publish_unknown_job_and_idempotent_bus():
+    from repro.service import ServiceConfig, ZenService
+    with ZenService(ServiceConfig(max_jobs=1)) as svc:
+        with pytest.raises(KeyError):
+            svc.publish("nope")
+        handle = svc.submit(_spec(name="one"))
+        handle.wait_ready()
+        s1 = svc.publish("one")
+        s2 = svc.publish("one")
+        assert s1.bus is s2.bus               # one bus per job
+        assert isinstance(s1, Subscriber)
+
+
+# ---------------------------------------------------------------------------
+# trafficwatch strict mode: unknown tags can never silently land in
+# unattributed_bytes
+
+
+def test_strict_mode_rejects_unknown_tag_and_missing_attribution():
+    before = trafficwatch.counts()["total_bytes"]
+    with trafficwatch.strict():
+        with pytest.raises(ValueError, match="unknown transfer tag"):
+            trafficwatch.record("mystery", 128, channel="c", tier="host")
+        with pytest.raises(ValueError, match="no channel"):
+            trafficwatch.record("host_bound", 128, tier="host")
+        with pytest.raises(ValueError, match="no tier"):
+            trafficwatch.record("host_bound", 128, channel="c")
+        with pytest.raises(ValueError, match="no channel"):
+            trafficwatch.alloc(128)
+        # fully-attributed known tags pass
+        trafficwatch.record("host_bound", 64, channel="c", tier="host")
+    # rejected records mutated NO counter
+    assert trafficwatch.counts()["total_bytes"] == before + 64
+    # outside strict mode the legacy permissive behavior is unchanged
+    trafficwatch.record("mystery", 16)
+    assert trafficwatch.counts()["by_tag"]["mystery"] == 16
+
+
+def test_strict_mode_register_tag_and_reset_independence():
+    trafficwatch.set_strict(True)
+    try:
+        with pytest.raises(ValueError):
+            trafficwatch.record("new_path", 1, channel="c", tier="host")
+        trafficwatch.register_tag("new_path")
+        trafficwatch.record("new_path", 1, channel="c", tier="host")
+        trafficwatch.reset()              # reset clears counters, NOT mode
+        with pytest.raises(ValueError):
+            trafficwatch.record("mystery2", 1, channel="c", tier="host")
+    finally:
+        trafficwatch.set_strict(False)
+        trafficwatch.KNOWN_TAGS.discard("new_path")
+
+
+def test_strict_mode_repro_paths_fully_attributed():
+    """The whole runtime hot path (stage / uploads / pool allocs) runs
+    clean under strict mode — no repro.* transfer is unattributed."""
+    with trafficwatch.strict():
+        rt, batch = _mk_runtime(_zcfg(S=2, warmup=1))
+        pub = attach_publisher(rt)
+        try:
+            for _ in range(6):
+                rt.step(batch())
+            rt.flush()
+        finally:
+            pub.close()
+            rt.close()
+
+
+def test_publisher_pause_resume_hook_lifecycle():
+    """`pause()` unhooks without forgetting the runtime, `resume()`
+    re-hooks exactly once — the A/B lever bench_publish.py alternates
+    between timed segments. Both are idempotent; close() unhooks."""
+    class FakeRuntime:
+        def __init__(self):
+            self.hooks = []
+
+        def add_boundary_hook(self, fn):
+            self.hooks.append(fn)
+
+        def remove_boundary_hook(self, fn):
+            try:
+                self.hooks.remove(fn)
+            except ValueError:
+                pass
+
+    rt = FakeRuntime()
+    pub = Publisher(WeightBus(name="t-pause"), channel=None).attach(rt)
+    try:
+        assert rt.hooks == [pub.on_window_boundary]
+        pub.pause()
+        assert rt.hooks == []
+        pub.pause()                        # idempotent
+        pub.resume()
+        assert rt.hooks == [pub.on_window_boundary]
+        pub.resume()                       # never double-hooks
+        assert len(rt.hooks) == 1
+    finally:
+        pub.close()
+    assert rt.hooks == []

@@ -45,6 +45,16 @@ def _skewed(recovered=0.6, asyncs=0.0, unattributed=0, bitwise=True,
     return rep
 
 
+def _publish(overhead=1.05, s_on=0, s_off=0, pbytes=5_000_000,
+             delta=True, unattributed=0):
+    return {"headline": {"publish_step_overhead_ratio": overhead,
+                         "publish_on_steady_syncs": s_on,
+                         "publish_off_steady_syncs": s_off,
+                         "publish_bytes": pbytes,
+                         "publish_bytes_delta_matches": delta,
+                         "publish_unattributed_bytes": unattributed}}
+
+
 def test_gate_passes_on_equal_numbers():
     assert check_report("dispatch", _dispatch(), _dispatch(), 0.10) == []
     assert check_report("traffic", _traffic(), _traffic(), 0.10) == []
@@ -219,11 +229,55 @@ def test_gate_adaptive_ceiling_missing_key_handling():
     assert any("missing from" in e and "baseline" in e for e in errs)
 
 
+def test_gate_publish_hard_invariants():
+    """ISSUE 10: publication may not add a single steady-state sync (on
+    either side of the A/B), must move > 0 bytes, and every byte must be
+    attributed exactly — baseline-independent, NaN-safe."""
+    assert check_report("publish", _publish(), _publish(), 0.10) == []
+    errs = check_report("publish", _publish(s_on=1), _publish(s_on=1), 0.10)
+    assert any("both must be 0" in e for e in errs)
+    errs = check_report("publish", _publish(s_off=2), _publish(), 0.10)
+    assert any("both must be 0" in e for e in errs)
+    # a missing sync counter fails instead of reading as zero
+    rep = _publish()
+    del rep["headline"]["publish_on_steady_syncs"]
+    assert check_report("publish", rep, _publish(), 0.10)
+    errs = check_report("publish", _publish(pbytes=0), _publish(), 0.10)
+    assert any("never staged" in e for e in errs)
+    errs = check_report("publish", _publish(pbytes=float("nan")),
+                        _publish(), 0.10)
+    assert any("never staged" in e for e in errs)
+    errs = check_report("publish", _publish(delta=False), _publish(), 0.10)
+    assert any("exact to the byte" in e for e in errs)
+    errs = check_report("publish", _publish(unattributed=64),
+                        _publish(), 0.10)
+    assert any("escaped attribution" in e for e in errs)
+
+
+def test_gate_publish_overhead_ceiling_at_timing_tolerance():
+    """The overhead ratio is wall-clock-derived: ceiling-gated at the
+    25% timing-noise tolerance, not the 10% byte tolerance."""
+    # +15% over baseline: within the timing noise floor, passes
+    assert check_report("publish", _publish(overhead=1.05 * 1.15),
+                        _publish(), 0.10) == []
+    # +30%: a real hot-path cost, fails
+    errs = check_report("publish", _publish(overhead=1.05 * 1.30),
+                        _publish(), 0.10)
+    assert any("publish_step_overhead_ratio" in e and "grew" in e
+               for e in errs)
+    # improvements (cheaper publication) always pass; NaN must fail
+    assert check_report("publish", _publish(overhead=0.99),
+                        _publish(), 0.10) == []
+    errs = check_report("publish", _publish(overhead=float("nan")),
+                        _publish(), 0.10)
+    assert any("publish_step_overhead_ratio" in e for e in errs)
+
+
 def test_committed_baselines_exist_and_pass_their_own_gate():
     """The baselines shipped in benchmarks/baselines/ must themselves
     satisfy the hard invariants — otherwise the CI gate is dead on
     arrival."""
-    for kind in ("dispatch", "traffic"):
+    for kind in ("dispatch", "traffic", "service", "publish"):
         path = os.path.join(BASELINE_DIR, f"BENCH_{kind}.json")
         assert os.path.exists(path), f"missing committed baseline {path}"
         with open(path) as f:
